@@ -1,0 +1,188 @@
+"""Roofline analysis from the multi-pod dry-run artifacts.
+
+For every (arch x shape) cell on the single-pod production mesh we derive
+the three roofline terms from the compiled module (TPU v5e-class constants
+from the task spec):
+
+  compute_s    = HLO_FLOPs_per_device / 197e12
+  memory_s     = HLO_bytes_per_device / 819e9
+  collective_s = ring-traffic bytes (parsed from the partitioned HLO with
+                 per-op replica-group multipliers, see launch/dryrun.py)
+                 / 50e9 (one ICI link — conservative single-link basis)
+
+plus MODEL_FLOPS (6*N*D train / 2*N*D prefill / 2*N*B decode, N = active
+params for MoE), the useful-compute ratio MODEL_FLOPS/HLO_FLOPs (catches
+remat/redundancy waste), the dominant term, the estimated MFU at the
+roofline bound, and a one-line lever for the dominant term.
+
+Writes results/roofline.md (the EXPERIMENTS.md table) and prints CSV.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def model_flops_global(rec: dict) -> float:
+    """Useful model FLOPs for the whole step (task-spec convention)."""
+    kind = rec["shape_cfg"]["kind"]
+    n = rec["model"]["n_active_params"]
+    batch = rec["shape_cfg"]["global_batch"]
+    seq = rec["shape_cfg"]["seq_len"]
+    if kind == "train":
+        return 6.0 * n * batch * seq
+    if kind == "prefill":
+        return 2.0 * n * batch * seq
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+LEVERS = {
+    "compute": (
+        "cut recompute (remat ratio) and raise MXU occupancy: wider scanned "
+        "blocks, fused attention kernel, bf16 accumulation where safe"
+    ),
+    "memory": (
+        "cut HBM bytes: bf16/fp8 weights+activations, fuse elementwise "
+        "chains, avoid transposed layouts between sharded ops"
+    ),
+    "collective": (
+        "reshard to shrink all-gather volume (2-D FSDPxTP balance), overlap "
+        "gathers with per-unit compute, int8-compress gradient reductions"
+    ),
+}
+
+
+def analyze(rec: dict) -> dict:
+    compute_s = rec["flops_per_device"] / PEAK_FLOPS
+    memory_s = rec["bytes_accessed_per_device"] / HBM_BW
+    coll = rec["collectives"]
+    traffic = sum(coll.get("traffic", coll["bytes"]).values())
+    collective_s = traffic / LINK_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    mf = model_flops_global(rec) / rec["n_devices"]
+    useful_ratio = mf / rec["flops_per_device"] if rec["flops_per_device"] else 0.0
+    mfu_bound = (mf / PEAK_FLOPS) / bound_s if bound_s else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": bound_s,
+        "model_flops_per_dev": mf,
+        "useful_ratio": useful_ratio,
+        "mfu_bound": mfu_bound,
+        "lever": LEVERS[dominant],
+    }
+
+
+def load_cells(mesh: str = "single"):
+    if not RESULTS_DIR.exists():
+        raise FileNotFoundError(f"{RESULTS_DIR} missing - run the dry-run first")
+    cells = []
+    for p in sorted(RESULTS_DIR.glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        cells.append(rec)
+    if not cells:
+        raise FileNotFoundError(f"no *__{mesh}.json under {RESULTS_DIR}")
+    return cells
+
+
+def build_table(mesh: str = "single"):
+    rows, skips = [], []
+    for rec in load_cells(mesh):
+        if rec.get("status") == "skipped":
+            skips.append(rec)
+            continue
+        rows.append(analyze(rec))
+    return rows, skips
+
+
+def write_markdown(rows, skips, path: Path, mesh: str):
+    lines = [
+        f"### Roofline — {mesh}-pod mesh (per device; v5e constants: "
+        "197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link)",
+        "",
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+        "dominant | useful/HLO | MFU@bound | lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {1e3 * r['compute_s']:.2f} | "
+            f"{1e3 * r['memory_s']:.2f} | {1e3 * r['collective_s']:.2f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{100 * r['mfu_bound']:.1f}% | {r['lever'].split(':')[0]} |"
+        )
+    for s in skips:
+        lines.append(
+            f"| {s['arch']} | {s['shape']} | — | — | — | N/A | — | — | "
+            f"skipped: {s['reason'][:60]}… |"
+        )
+    path.write_text("\n".join(lines) + "\n")
+    return path
+
+
+def csv_rows(mesh: str = "single"):
+    rows, skips = build_table(mesh)
+    out = []
+    for r in rows:
+        out.append(
+            (
+                f"roofline/{r['arch']}__{r['shape']}",
+                r["bound_s"] * 1e6,
+                f"compute={1e3 * r['compute_s']:.2f}ms;"
+                f"memory={1e3 * r['memory_s']:.2f}ms;"
+                f"collective={1e3 * r['collective_s']:.2f}ms;"
+                f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+                f"mfu_bound={100 * r['mfu_bound']:.1f}%",
+            )
+        )
+    for s in skips:
+        out.append((f"roofline/{s['arch']}__{s['shape']}", 0.0, "skipped"))
+    md = write_markdown(
+        rows, skips, RESULTS_DIR.parent / f"roofline_{mesh}.md", mesh
+    )
+    out.append((f"roofline/markdown", 0.0, str(md)))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    rows, skips = build_table(args.mesh)
+    print(
+        f"{'arch':26s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+        f"{'collect':>9s}  dominant   useful  MFU@bound"
+    )
+    for r in rows:
+        print(
+            f"{r['arch']:26s} {r['shape']:12s} {1e3 * r['compute_s']:8.2f}m "
+            f"{1e3 * r['memory_s']:8.2f}m {1e3 * r['collective_s']:8.2f}m  "
+            f"{r['dominant']:10s} {r['useful_ratio']:5.2f}  "
+            f"{100 * r['mfu_bound']:5.1f}%"
+        )
+    for s in skips:
+        print(f"{s['arch']:26s} {s['shape']:12s} {'skipped':>9s}")
+    md = write_markdown(rows, skips, RESULTS_DIR.parent / f"roofline_{args.mesh}.md", args.mesh)
+    print(f"wrote {md}")
+
+
+if __name__ == "__main__":
+    main()

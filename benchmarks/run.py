@@ -1,0 +1,103 @@
+"""Benchmark aggregator: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows for:
+
+  * Observation 1 — retry-step characterization (paper §3 / abstract 4.5);
+  * Observation 2 — final-step ECC-capability margin;
+  * Observation 3 — safe tR reduction table (the AR² table);
+  * §5 headline  — e2e response time, six workloads (vs baseline and SOTA);
+  * closed-form  — PR² per-step reduction (28.5%) and latency curves;
+  * roofline     — three-term roofline per (arch x shape) from the dry-run
+                   artifacts, when results/dryrun is populated.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--skip-e2e] [--n 8000]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def _closed_form_rows():
+    from repro.core import timing as T
+
+    rows = []
+    t0 = time.perf_counter()
+    red = T.per_step_reduction_pr2()
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        ("timing/pr2_per_step", dt, f"reduction={100 * red:.1f}%;paper=28.5%")
+    )
+    for a in (1, 2, 4, 8):
+        seq = float(T.sequential_read_latency(a))
+        pipe = float(T.pipelined_read_latency(a))
+        both = float(T.read_latency(a, "pr2ar2", tr_scale=0.75))
+        rows.append(
+            (
+                f"timing/latency_a{a}",
+                0.0,
+                f"seq={seq:.1f}us;pr2={pipe:.1f}us;pr2ar2={both:.1f}us",
+            )
+        )
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-e2e", action="store_true",
+                    help="skip the (slow) discrete-event simulation table")
+    ap.add_argument("--n", type=int, default=8000,
+                    help="requests per e2e simulation run")
+    args = ap.parse_args()
+
+    sections = []
+
+    from benchmarks import ecc_margin, retry_characterization, tr_reduction
+
+    print("# section: closed-form timing", flush=True)
+    sections.append(_closed_form_rows())
+    for row in sections[-1]:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+
+    print("# section: observation-1 retry characterization", flush=True)
+    sections.append(retry_characterization.csv_rows())
+    for row in sections[-1]:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+
+    print("# section: observation-2 ecc margin", flush=True)
+    sections.append(ecc_margin.csv_rows())
+    for row in sections[-1]:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+
+    print("# section: observation-3 tr reduction", flush=True)
+    sections.append(tr_reduction.csv_rows())
+    for row in sections[-1]:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+
+    if not args.skip_e2e:
+        from benchmarks import e2e_response_time
+
+        print("# section: e2e response time (DES)", flush=True)
+        sections.append(e2e_response_time.csv_rows(args.n))
+        for row in sections[-1]:
+            print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+
+    # Roofline table (requires dry-run artifacts; cheap to derive).
+    try:
+        from benchmarks import roofline
+
+        print("# section: roofline (from dry-run artifacts)", flush=True)
+        rows = roofline.csv_rows()
+        sections.append(rows)
+        for row in rows:
+            print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+    except FileNotFoundError as e:
+        print(f"# roofline skipped: {e}", flush=True)
+
+    n = sum(len(s) for s in sections)
+    print(f"# done: {n} rows", flush=True)
+
+
+if __name__ == "__main__":
+    main()

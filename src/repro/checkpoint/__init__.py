@@ -1,0 +1,13 @@
+from repro.checkpoint.ckpt import (
+    RestoreStats,
+    corrupt_shard,
+    delete_shard,
+    restore,
+    save,
+)
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = [
+    "save", "restore", "RestoreStats", "corrupt_shard", "delete_shard",
+    "CheckpointManager",
+]

@@ -1,0 +1,24 @@
+"""Paper core: PR²/AR² read-retry optimization (Park+, ASPLOS'21).
+
+Public surface:
+  constants    — calibrated physics/timing/ECC/roofline constants
+  voltage      — TLC V_TH model, RBER, optimal read levels
+  ecc          — capability, margin, codeword failure sampling
+  timing       — closed-form latency for each mechanism
+  retry        — retry mechanisms + RetryPolicy (framework-wide knob)
+  characterize — 160-chip characterization (paper §3 observations + AR² table)
+"""
+
+from repro.core.constants import DEFAULT_NAND, NandParams
+from repro.core.retry import MECHANISMS, RetryPolicy
+from repro.core.timing import DEFAULT_TIMING, TimingParams, read_latency
+
+__all__ = [
+    "DEFAULT_NAND",
+    "NandParams",
+    "MECHANISMS",
+    "RetryPolicy",
+    "DEFAULT_TIMING",
+    "TimingParams",
+    "read_latency",
+]

@@ -1,0 +1,221 @@
+"""160-chip characterization harness — the paper's §3 observations.
+
+Reproduces the paper's three characterization results over a population of
+simulated chips with process variation (the paper used 160 real 3D TLC
+chips; our population is 160 calibrated analytical chips):
+
+  Observation 1: reads frequently need multiple retry steps even at modest
+    conditions (mean ~= 4.5 retry steps @ 3-month retention, 0 P/E).
+  Observation 2: when read-retry succeeds, the final step has a large
+    ECC-capability margin, even at the worst prescribed condition
+    (1-year retention, 1.5K P/E cycles).
+  Observation 3: the margin buys a safe tR reduction of 25% worst-case —
+    the AR² table maps operating condition -> best (smallest safe) tR scale
+    without ever increasing the attempt count.
+
+The safe-scale table produced here *is* AR²'s lookup table; the simulator
+and the serving/data-path integrations consume it through
+:func:`lookup_tr_scale`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import constants as C
+from repro.core import ecc as ecc_mod
+from repro.core import retry as R
+from repro.core import voltage as V
+from repro.core.constants import NandParams, DEFAULT_NAND
+
+#: Operating-condition grid used throughout (days, P/E cycles).
+RETENTION_GRID_DAYS = (0.0, 7.0, 30.0, 90.0, 180.0, 365.0)
+PEC_GRID = (0.0, 500.0, 1000.0, 1500.0)
+
+#: Candidate tR scales for the AR² search (1.0 = full sensing time).
+TR_SCALE_GRID = (1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7, 0.65, 0.6)
+
+#: AR² acceptance: the expected attempt count with reduced tR may exceed
+#: the full-tR expectation by at most this many attempts (the paper's
+#: "without increasing the number of retry steps", enforced statistically
+#: per operating condition — an aggressive scale makes tail pages
+#: undecodable at every table entry, which blows this budget and rejects
+#: the scale).
+EXTRA_ATTEMPT_BUDGET = 0.30
+
+#: Never sense faster than this regardless of margin (circuit floor).
+TR_SCALE_FLOOR = 0.7
+
+
+@dataclasses.dataclass(frozen=True)
+class ConditionStats:
+    retention_days: float
+    pec: float
+    mean_retry_steps: float        # attempts - 1, averaged over population
+    p99_retry_steps: float
+    frac_reads_with_retry: float   # P[attempts > 1]
+    mean_margin_final: float       # ECC-capability margin at success entry
+    p01_margin_final: float        # 1st-percentile margin (worst pages)
+    safe_tr_scale: float           # AR² table entry
+
+
+def _population_rber(
+    key: jax.Array,
+    retention_days: float,
+    pec: float,
+    page_type: str,
+    n_chips: int,
+    n_blocks: int,
+    n_pages: int,
+    tr_scale,
+    params: NandParams,
+) -> jax.Array:
+    """(chips, blocks, pages, steps) RBER tensor for one page type."""
+    k_var, k_jit = jax.random.split(key)
+    rate = V.sample_process_variation(k_var, n_chips, n_blocks, params)
+    mu, sigma = V.degraded_distributions(
+        jnp.float32(retention_days), jnp.float32(pec), rate, params
+    )
+    jitter = C.PAGE_JITTER_SIGMA * jax.random.normal(
+        k_jit, (n_chips, n_blocks, n_pages, 7)
+    )
+    return R.rber_per_retry_step(
+        mu[..., None, :], sigma[..., None, :], page_type,
+        tr_scale, level_jitter=jitter, params=params,
+    )
+
+
+@functools.lru_cache(maxsize=256)
+def characterize_condition(
+    retention_days: float,
+    pec: float,
+    n_chips: int = C.N_CHIPS,
+    n_blocks: int = 8,
+    n_pages: int = 16,
+    seed: int = 0,
+    params: NandParams = DEFAULT_NAND,
+) -> ConditionStats:
+    """Full characterization of one operating condition (cached)."""
+    cap = ecc_mod.DEFAULT_ECC.rber_cap
+    steps_all, margins_all = [], []
+    safe_scales = []
+    for i, pt in enumerate(C.PAGE_TYPES):
+        key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+        rber = _population_rber(
+            key, retention_days, pec, pt, n_chips, n_blocks, n_pages, 1.0, params
+        )
+        k = R.first_success_step(rber)                       # (C, B, P)
+        rber_final = jnp.take_along_axis(rber, k[..., None], axis=-1)[..., 0]
+        margin = ecc_mod.capability_margin(rber_final)
+        steps_all.append(np.asarray(k))
+        margins_all.append(np.asarray(margin))
+
+        # AR² search: re-run the *whole* retry search at each candidate
+        # scale (every attempt senses faster, per the paper).  A scale is
+        # admissible if the expected attempt count stays within
+        # ATTEMPT_RATIO_BUDGET of full-tR; among admissible scales pick the
+        # one minimizing expected pipelined read latency (the paper's
+        # "best tR value for a certain operating condition").
+        from repro.core import timing as T
+
+        mean_attempts_1 = float(jnp.mean(k + 1))
+        best_s, best_lat = 1.0, None
+        for s in TR_SCALE_GRID:
+            if s < TR_SCALE_FLOOR:
+                break
+            rber_s = _population_rber(
+                key, retention_days, pec, pt, n_chips, n_blocks, n_pages,
+                float(s), params,
+            )
+            k_s = R.first_success_step(rber_s, max_steps=params.max_retry_steps)
+            mean_attempts_s = float(jnp.mean(k_s + 1))
+            if mean_attempts_s > mean_attempts_1 + EXTRA_ATTEMPT_BUDGET:
+                continue
+            lat = float(
+                np.mean(
+                    T.pipelined_read_latency(
+                        np.asarray(k_s + 1), page_type=pt, tr_scale=float(s)
+                    )
+                )
+            )
+            if best_lat is None or lat < best_lat:
+                best_s, best_lat = float(s), lat
+        safe_scales.append(best_s)
+
+    steps = np.concatenate([s.ravel() for s in steps_all])
+    margins = np.concatenate([m.ravel() for m in margins_all])
+    return ConditionStats(
+        retention_days=retention_days,
+        pec=pec,
+        mean_retry_steps=float(steps.mean()),
+        p99_retry_steps=float(np.percentile(steps, 99)),
+        frac_reads_with_retry=float((steps > 0).mean()),
+        mean_margin_final=float(margins.mean()),
+        p01_margin_final=float(np.percentile(margins, 1)),
+        safe_tr_scale=float(max(safe_scales)),  # safe for ALL page types
+    )
+
+
+@functools.lru_cache(maxsize=8)
+def safe_tr_table(
+    retentions: Tuple[float, ...] = RETENTION_GRID_DAYS,
+    pecs: Tuple[float, ...] = PEC_GRID,
+    seed: int = 0,
+) -> Dict[Tuple[float, float], float]:
+    """AR²'s condition -> best-safe-tR-scale lookup table."""
+    return {
+        (r, p): characterize_condition(r, p, seed=seed).safe_tr_scale
+        for r in retentions
+        for p in pecs
+    }
+
+
+def lookup_tr_scale(retention_days: float, pec: float) -> float:
+    """AR² table lookup with conservative (next-worse-bin) snapping.
+
+    Characterizes only the snapped bin (cached) — building the full grid
+    eagerly costs minutes on CPU and is only needed by the table benchmark.
+    """
+    # Snap *up* to the next characterized bin when between bins (data only
+    # gets older), and likewise for wear — conservative by construction.
+    r_candidates = [r for r in RETENTION_GRID_DAYS if r >= retention_days]
+    r_bin = r_candidates[0] if r_candidates else RETENTION_GRID_DAYS[-1]
+    p_candidates = [p for p in PEC_GRID if p >= pec]
+    p_bin = p_candidates[0] if p_candidates else PEC_GRID[-1]
+    return characterize_condition(r_bin, p_bin).safe_tr_scale
+
+
+@functools.lru_cache(maxsize=512)
+def attempt_histogram(
+    retention_days: float,
+    pec: float,
+    page_type: str = "csb",
+    sota: bool = False,
+    tr_scale: float = 1.0,
+    seed: int = 0,
+    max_attempts: int = C.MAX_RETRY_STEPS + 1,
+) -> np.ndarray:
+    """Empirical attempt-count distribution for one page type (cached).
+
+    The SSD simulator samples per-read attempt counts from this histogram
+    (normalized).  ``tr_scale`` < 1 models AR²: the whole retry search runs
+    at reduced sensing time, so the occasional extra attempt it induces is
+    captured faithfully.  Shape: (max_attempts + 1,); index = attempts.
+    """
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(seed + 101), C.PAGE_TYPES.index(page_type)
+    )
+    attempts, _ = R.attempts_for_population(
+        key, retention_days, pec, page_type, sota=sota, tr_scale=tr_scale
+    )
+    a = np.asarray(attempts).ravel()
+    counts = np.bincount(
+        np.clip(a, 0, max_attempts), minlength=max_attempts + 1
+    ).astype(np.float64)
+    return counts / counts.sum()

@@ -1,0 +1,91 @@
+"""ECC model: per-codeword correction capability and the capability margin.
+
+The paper's key second observation: when a read-retry *succeeds*, the final
+retry step reads the page with near-optimal V_REF, so the observed error
+count sits far below the ECC capability — a *large ECC-capability margin*
+that AR² spends on reduced sensing time.
+
+We model the reference ECC from the paper ([24]): t = 72 correctable bits
+per 1 KiB codeword, 16 codewords per 16 KiB page.  Two evaluation modes:
+
+  * expectation mode (deterministic): a page is correctable iff its RBER is
+    at or below t/n.  Used by characterization sweeps (per-page jitter is
+    folded into the RBER itself), keeps everything differentiable/jittable.
+  * sampling mode: per-codeword error counts drawn Binomial(n, rber) via a
+    Gaussian approximation; the page fails if *any* codeword exceeds t.
+    Used by the SSD simulator for realistic tail behaviour.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import constants as C
+
+
+@dataclasses.dataclass(frozen=True)
+class ECCConfig:
+    t: int = C.ECC_T
+    n_bits: int = C.ECC_N_BITS
+    codewords_per_page: int = C.CODEWORDS_PER_PAGE
+
+    @property
+    def rber_cap(self) -> float:
+        """Deterministic capability expressed as an RBER threshold."""
+        return self.t / float(self.n_bits)
+
+
+DEFAULT_ECC = ECCConfig()
+
+
+def correctable(rber: jax.Array, ecc: ECCConfig = DEFAULT_ECC) -> jax.Array:
+    """Expectation-mode correctability: RBER within capability."""
+    return rber <= ecc.rber_cap
+
+
+def capability_margin(rber: jax.Array, ecc: ECCConfig = DEFAULT_ECC) -> jax.Array:
+    """Fraction of the ECC capability left unused at the given RBER.
+
+    margin = (t - E[errors per codeword]) / t.  Positive for any read that
+    succeeds; the paper's observation is that it is *large* (>> 0) in the
+    final retry step even at worst-case operating conditions.
+    """
+    expected_errors = rber * ecc.n_bits
+    return (ecc.t - expected_errors) / ecc.t
+
+
+def sample_codeword_errors(
+    key: jax.Array, rber: jax.Array, ecc: ECCConfig = DEFAULT_ECC
+) -> jax.Array:
+    """Per-codeword error counts ~ Binomial(n, rber), Gaussian approximation.
+
+    Returns an integer array of shape rber.shape + (codewords_per_page,).
+    """
+    mean = rber[..., None] * ecc.n_bits
+    var = jnp.maximum(mean * (1.0 - rber[..., None]), 1e-9)
+    noise = jax.random.normal(key, rber.shape + (ecc.codewords_per_page,))
+    return jnp.maximum(jnp.round(mean + jnp.sqrt(var) * noise), 0.0).astype(jnp.int32)
+
+
+def page_read_fails(
+    key: jax.Array, rber: jax.Array, ecc: ECCConfig = DEFAULT_ECC
+) -> jax.Array:
+    """Sampling-mode page failure: any codeword exceeds t errors."""
+    errors = sample_codeword_errors(key, rber, ecc)
+    return jnp.any(errors > ecc.t, axis=-1)
+
+
+def page_fail_probability(rber: jax.Array, ecc: ECCConfig = DEFAULT_ECC) -> jax.Array:
+    """Analytic page-failure probability (Gaussian codeword approximation).
+
+    P[page fails] = 1 - P[codeword ok]^16 with
+    P[codeword ok] = Phi((t - n*rber) / sqrt(n*rber*(1-rber))).
+    """
+    mean = rber * ecc.n_bits
+    std = jnp.sqrt(jnp.maximum(mean * (1.0 - rber), 1e-12))
+    z = (ecc.t - mean) / std
+    p_cw_ok = 0.5 * jax.scipy.special.erfc(-z / jnp.sqrt(2.0))
+    return 1.0 - p_cw_ok**ecc.codewords_per_page

@@ -1,0 +1,9 @@
+from repro.data.corpus import CorpusConfig, SyntheticCorpus
+from repro.data.flash_tier import FlashReadStats, FlashTierReader
+from repro.data.pipeline import PrefetchPipeline
+
+__all__ = [
+    "CorpusConfig", "SyntheticCorpus",
+    "FlashTierReader", "FlashReadStats",
+    "PrefetchPipeline",
+]

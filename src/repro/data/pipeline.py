@@ -1,0 +1,62 @@
+"""Double-buffered host->device input pipeline (the PR² discipline applied
+to the training input feed).
+
+A background thread produces batch i+1 (synthetic generation + simulated
+flash-tier read) while the training step consumes batch i — the same
+producer/consumer overlap as CACHE READ: generation/read never sits on the
+step critical path unless the producer genuinely falls behind, and the
+observable stall time is recorded.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+
+
+class PrefetchPipeline:
+    """Iterate device-ready batches with a bounded lookahead."""
+
+    def __init__(
+        self,
+        read_fn: Callable[[int], dict],   # index -> host batch dict
+        n_batches: int,
+        depth: int = 2,
+        device_put: bool = True,
+        start_index: int = 0,
+    ):
+        self.read_fn = read_fn
+        self.n_batches = n_batches
+        self.depth = depth
+        self.device_put = device_put
+        self.start_index = start_index
+        self.stall_s = 0.0                # time the consumer waited
+        self.produce_s = 0.0              # producer busy time (overlapped)
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._thread: Optional[threading.Thread] = None
+
+    def _producer(self):
+        for i in range(self.start_index, self.start_index + self.n_batches):
+            t0 = time.perf_counter()
+            batch = self.read_fn(i)
+            if self.device_put:
+                batch = jax.tree.map(jax.device_put, batch)
+            self.produce_s += time.perf_counter() - t0
+            self._q.put((i, batch))
+        self._q.put((None, None))
+
+    def __iter__(self) -> Iterator:
+        self._thread = threading.Thread(target=self._producer, daemon=True)
+        self._thread.start()
+        while True:
+            t0 = time.perf_counter()
+            i, batch = self._q.get()
+            self.stall_s += time.perf_counter() - t0
+            if i is None:
+                break
+            yield i, batch
+        self._thread.join()

@@ -1,0 +1,79 @@
+"""int8 gradient all-reduce compression with error feedback.
+
+The collective roofline term of the train cells is dominated by gradient
+reductions; quantizing the reduced tensors to int8 cuts that traffic 4x at
+the cost of quantization noise, which the error-feedback accumulator
+(Seide et al.; 1-bit SGD lineage) re-injects next step so the *expected*
+gradient stays unbiased and SGD convergence is preserved.
+
+Usage inside a train step::
+
+    grads, ef_state = compress_grads(grads, ef_state)     # pre-reduce
+    # psum / sharded mean happens on the int8-scaled representation via
+    # the float wire format below (XLA collectives do not take int8 +
+    # per-tensor scales natively, so we quantize, reduce the dequantized
+    # bf16 tensor, and charge 1/4 traffic in the roofline accounting —
+    # on real TPU the int8 all-reduce is a documented runtime feature).
+
+The module also provides the pure (de)quantizers the tests property-check
+(error feedback drives the *cumulative* compression error to zero).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compress_grads(
+    grads: Any, ef: Optional[Any] = None
+) -> Tuple[Any, Any]:
+    """Quantize a gradient pytree with error feedback.
+
+    Returns (decompressed grads ready for the all-reduce wire, new ef).
+    The returned grads carry only int8-representable information; the
+    residual lives in ``ef`` and is added back before the *next* step's
+    quantization.
+    """
+    if ef is None:
+        ef = init_error_feedback(grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(ef)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def compressed_wire_bytes(grads: Any) -> int:
+    """Roofline accounting: bytes on the wire with int8 compression."""
+    return sum(x.size for x in jax.tree.leaves(grads))  # 1 B/element
+
+
+def uncompressed_wire_bytes(grads: Any) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(grads))

@@ -1,0 +1,96 @@
+"""Elastic re-mesh: resume a checkpoint on a degraded (or grown) fleet.
+
+The sharding layer (repro.distributed.sharding) is *logical*: parameter
+and activation placements are derived from axis rules + a mesh, never
+hard-coded.  Elasticity is therefore a plan, not a migration: given the
+new device count, pick the best (data, model) factorization, rebuild the
+NamedShardings from the same rules, and device_put the host-restored
+checkpoint (checkpoint/ restores to host numpy precisely so the target
+mesh can differ from the source mesh).
+
+Constraints honoured by ``plan_mesh``:
+  * ``model`` axis preserved if possible (TP degree changes re-partition
+    every weight, which is fine but costs a full reshard; keeping it
+    avoids that) — unless the new world size forces otherwise;
+  * ``data`` axis takes the remaining factor; global batch must divide
+    the new data size for deterministic replay, otherwise the plan
+    reports the required gradient-accumulation factor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    tp_preserved: bool
+    grad_accum_factor: int
+    note: str
+
+    def describe(self) -> str:
+        return (
+            f"{'x'.join(map(str, self.old_shape))} -> "
+            f"{'x'.join(map(str, self.new_shape))} ({'.'.join(self.axis_names)}); "
+            f"tp_preserved={self.tp_preserved} "
+            f"grad_accum x{self.grad_accum_factor}; {self.note}"
+        )
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    for d in range(min(cap, n), 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def plan_mesh(
+    n_devices: int,
+    old_mesh_shape: Tuple[int, ...] = (16, 16),
+    axis_names: Tuple[str, ...] = ("data", "model"),
+    global_batch: int = 256,
+) -> ElasticPlan:
+    """Choose (data, model) for the new world size."""
+    old_model = old_mesh_shape[-1]
+    if n_devices % old_model == 0:
+        model = old_model
+        tp_preserved = True
+        note = "model axis kept; only data-parallel width changed"
+    else:
+        model = _largest_divisor_leq(n_devices, old_model)
+        tp_preserved = False
+        note = "model axis re-factored (full weight reshard on restore)"
+    data = n_devices // model
+    accum = 1
+    if global_batch % data != 0:
+        # per-replica batch must be integral: accumulate
+        per = max(global_batch // data, 1)
+        accum = -(-global_batch // (per * data))
+        note += f"; batch {global_batch} !% data {data}"
+    return ElasticPlan(
+        old_shape=tuple(old_mesh_shape),
+        new_shape=(data, model),
+        axis_names=tuple(axis_names[-2:]),
+        tp_preserved=tp_preserved,
+        grad_accum_factor=accum,
+        note=note,
+    )
+
+
+def build_mesh_from_plan(plan: ElasticPlan) -> Mesh:
+    return jax.make_mesh(plan.new_shape, plan.axis_names)
+
+
+def reshard_state(state, mesh: Mesh, shardings) -> object:
+    """device_put a host-restored state onto the new mesh's shardings."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), state, shardings
+    )

@@ -1,0 +1,203 @@
+"""Logical-axis sharding: rules, activation constraints, param specs.
+
+Model code annotates *activations* with logical axes via :func:`constrain`
+(a no-op outside a mesh context).  Parameter and optimizer-state shardings
+are derived from the param-tree paths by :func:`param_specs` — 2-D
+FSDP x TP: tensor-parallel over ``model`` along heads/ff/vocab/expert
+dims, fully-sharded over ``data`` along a complementary dim, so optimizer
+state is ZeRO-sharded across the whole mesh by construction.
+
+The ``pod`` axis (multi-pod mesh) extends data parallelism: batch shards
+over ("pod", "data") and FSDP dims over ("pod", "data") likewise.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules():
+    return getattr(_state, "rules", None)
+
+
+#: logical axis name -> mesh axes (single-pod). The multi-pod mesh extends
+#: "data"-mapped axes with the "pod" axis.
+DEFAULT_RULES = {
+    "batch": ("data",),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": None,
+    "ff": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "fsdp": ("data",),       # weight dim sharded over the data axis
+    "kv_seq": ("model",),    # KV-cache seq dim when heads cannot shard
+    #: inter-unit activation carry: sequence sharded over the model axis
+    #: (Megatron sequence-parallel style) so remat saves are 1/model-size.
+    "act_seq": ("model",),
+}
+
+
+def rules_for_mesh(mesh: Mesh) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if "pod" in mesh.axis_names:
+        rules["batch"] = ("pod", "data")
+        rules["fsdp"] = ("pod", "data")
+    return rules
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> Optional[dict]:
+    return _rules()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate constraint emission for model code inside a mesh context."""
+    prev = getattr(_state, "rules", None), getattr(_state, "mesh", None)
+    _state.rules = rules or (rules_for_mesh(mesh) if mesh is not None else None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def logical_to_spec(axes: Tuple[Optional[str], ...], rules=None) -> P:
+    rules = rules or _rules() or DEFAULT_RULES
+    parts = []
+    for a in axes:
+        m = rules.get(a) if a else None
+        parts.append(m if m else None)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op outside use_mesh."""
+    rules = _rules()
+    mesh = getattr(_state, "mesh", None)
+    if rules is None or mesh is None:
+        return x
+    # Drop constraints whose dims don't divide evenly (e.g. 8 kv heads on a
+    # 16-way model axis) — XLA would reject them; propagation handles it.
+    # Also drop a mesh axis already used by an earlier dim (duplicates are
+    # illegal in a PartitionSpec).
+    spec_parts = []
+    used = set()
+    for dim, a in enumerate(axes):
+        m = rules.get(a) if a else None
+        if m:
+            m_t = m if isinstance(m, tuple) else (m,)
+            size = 1
+            for ax in m_t:
+                size *= mesh.shape[ax]
+            if x.shape[dim] % size == 0 and not (used & set(m_t)):
+                spec_parts.append(m)
+                used.update(m_t)
+            else:
+                spec_parts.append(None)
+        else:
+            spec_parts.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec_parts))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding by tree path.
+# ---------------------------------------------------------------------------
+
+#: (path regex, logical axes per dim, where dim order matches the param's).
+#: Leading stacked-unit dims (from scan-over-layers) are handled separately.
+_PARAM_RULES = (
+    # attention projections
+    (r"\bwq$", ("fsdp", "heads", None)),          # (d, H, hd)
+    (r"\bwk$", ("fsdp", "kv_heads", None)),
+    (r"\bwv$", ("fsdp", "kv_heads", None)),
+    (r"\bwo$", ("heads", None, "fsdp")),          # (H, hd, d)
+    # dense mlp
+    (r"\bwi$", ("fsdp", "ff")),                   # (d, ff)
+    (r"\bwg$", ("fsdp", "ff")),
+    (r"\bwd$", ("ff", "fsdp")),                   # (ff, d)
+    # moe
+    (r"\brouter$", ("fsdp", None)),               # (d, E) router replicated-ish
+    (r"\bmoe_wi$", ("experts", "fsdp", None)),    # (E, d, ff)
+    (r"\bmoe_wg$", ("experts", "fsdp", None)),
+    (r"\bmoe_wd$", ("experts", None, "fsdp")),    # (E, ff, d)
+    # embeddings / head
+    (r"\bembed$", ("vocab", "fsdp")),             # (V, d)
+    (r"\bunembed$", ("fsdp", "vocab")),           # (d, V)
+    (r"\bpos_embed$", (None, "fsdp")),
+    # ssm
+    (r"\bin_proj$", ("fsdp", "ff")),              # (d, inner+...)
+    (r"\bout_proj$", ("ff", "fsdp")),
+    (r"\bconv_w$", (None, "ff")),                 # (d_conv, channels)
+    # rglru
+    (r"\bw_gate$", ("fsdp", "ff")),
+    (r"\bw_rec$", ("fsdp", "ff")),
+    (r"\bw_out$", ("ff", "fsdp")),
+    (r"\ba_gate$", ("ff",)),
+    (r"\bx_gate$", ("ff",)),
+)
+
+
+def _spec_for_path(path: str, ndim: int, n_stacked: int, rules) -> P:
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, path):
+            if len(axes) + n_stacked != ndim:
+                break  # fall through to replicated
+            parts = [None] * n_stacked + [
+                (rules.get(a) if a else None) or None for a in axes
+            ]
+            return P(*parts)
+    return P(*([None] * ndim))
+
+
+def param_specs(params, mesh: Mesh):
+    """PartitionSpec pytree for a parameter tree (stacked units aware)."""
+    rules = rules_for_mesh(mesh)
+
+    def spec(path, leaf):
+        keys = [getattr(p, "key", getattr(p, "idx", None)) for p in path]
+        path_s = "/".join(str(k) for k in keys)
+        # Stacked unit dim: params under .../units/... carry a leading U dim.
+        n_stacked = 1 if "units" in path_s.split("/") else 0
+        s = _spec_for_path(path_s, leaf.ndim, n_stacked, rules)
+        # Validate divisibility + axis uniqueness; drop offending axes.
+        parts = []
+        used = set()
+        for dim, m in enumerate(tuple(s) + (None,) * (leaf.ndim - len(tuple(s)))):
+            if m:
+                m_t = m if isinstance(m, tuple) else (m,)
+                size = 1
+                for ax in m_t:
+                    size *= mesh.shape[ax]
+                if leaf.shape[dim] % size == 0 and not (used & set(m_t)):
+                    parts.append(m)
+                    used.update(m_t)
+                else:
+                    parts.append(None)
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def named_shardings(params, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh)
+    )

@@ -1,0 +1,236 @@
+"""Step builders: jitted train/prefill/decode with explicit shardings.
+
+These produce the exact jit-wrapped functions the launcher, the dry-run,
+and the examples use, with in/out shardings derived from the logical
+rules in repro.distributed.sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as SH
+from repro.models.api import Model, build_model, input_specs
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def _ns(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, specs: Dict) -> Dict:
+    """Sharding for a batch dict (tokens/labels/frontends/decode inputs)."""
+    rules = SH.rules_for_mesh(mesh)
+    b = rules["batch"]
+    b_size = 1
+    for ax in b:
+        b_size *= mesh.shape[ax]
+
+    def spec_for(name, leaf):
+        if name == "pos":
+            return P()
+        # batch=1 cells (long_500k) cannot shard the batch dim: replicate.
+        bb = b if leaf.shape[0] % b_size == 0 else None
+        if name in ("tokens", "labels", "token"):
+            return P(bb, None)
+        if name in ("patches", "audio_embed"):
+            return P(bb, None, None)
+        if name == "pos":
+            return P()
+        raise KeyError(name)
+
+    out = {}
+    for name, leaf in specs.items():
+        if name == "cache":
+            out["cache"] = cache_shardings(cfg, mesh, leaf)
+        else:
+            out[name] = _ns(mesh, spec_for(name, leaf))
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_spec) -> Any:
+    """Decode-cache shardings: batch over (pod, data); the largest
+    model-divisible non-batch dim over "model" (heads when divisible,
+    else the KV sequence dim — the storage-layout rule from DESIGN.md)."""
+    rules = SH.rules_for_mesh(mesh)
+    b_axes = rules["batch"]
+    batch_size = 1
+    for ax in b_axes:
+        batch_size *= mesh.shape[ax]
+    model_size = mesh.shape["model"]
+
+    def leaf_spec(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        stacked = "units" in keys
+        n_lead = 1 if stacked else 0
+        ndim = leaf.ndim
+        parts = [None] * ndim
+        if ndim > n_lead and leaf.shape[n_lead] % batch_size == 0:
+            parts[n_lead] = b_axes  # batch dim right after the unit dim
+        # pick the largest dim after batch divisible by the model axis
+        cand = [
+            (leaf.shape[i], i)
+            for i in range(n_lead + 1, ndim)
+            if leaf.shape[i] % model_size == 0 and leaf.shape[i] >= model_size
+        ]
+        if cand:
+            _, i = max(cand)
+            parts[i] = ("model",)
+        return _ns(mesh, P(*parts))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_spec)
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+
+
+def make_train_state_specs(cfg: ModelConfig, mesh: Mesh):
+    model = build_model(cfg)
+    params_spec = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = SH.named_shardings(params_spec, mesh)
+    opt_cfg = AdamWConfig(moment_dtype=cfg.moment_dtype)
+    opt_spec = jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_spec)
+    # moments share the param sharding; step is replicated
+    m_shard = {
+        "m": jax.tree.map(lambda s: s, p_shard),
+        "v": jax.tree.map(lambda s: s, p_shard),
+        "step": _ns(mesh, P()),
+    }
+    state_spec = {"params": params_spec, "opt": opt_spec}
+    state_shard = {"params": p_shard, "opt": m_shard}
+    return state_spec, state_shard
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    opt: Optional[AdamWConfig] = None,
+    batch_shard=None,
+):
+    """-> (step_fn, state_shardings); step_fn(state, batch) -> (state, metrics),
+    jitted with donated state."""
+    model = build_model(cfg)
+    opt = opt or AdamWConfig(moment_dtype=cfg.moment_dtype)
+
+    def step(state, batch):
+        with SH.use_mesh(mesh):
+            loss, grads = jax.value_and_grad(model.train_loss)(state["params"], batch)
+            new_params, new_opt, metrics = adamw_update(
+                grads, state["opt"], state["params"], opt
+            )
+        metrics["loss"] = loss
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    _, state_shard = make_train_state_specs(cfg, mesh)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_shard, batch_shard),
+        out_shardings=(state_shard, None),
+        donate_argnums=(0,),
+    )
+    return jitted, state_shard
+
+
+def train_input_shardings(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig):
+    specs = input_specs(cfg, shape)
+    return specs, batch_shardings(cfg, mesh, specs)
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh):
+    model = build_model(cfg)
+    params_spec = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = SH.named_shardings(params_spec, mesh)
+
+    def fn(params, batch):
+        with SH.use_mesh(mesh):
+            return model.prefill(params, batch)
+
+    return fn, p_shard
+
+
+def make_decode_step(cfg: ModelConfig, mesh: Mesh):
+    model = build_model(cfg)
+    params_spec = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    p_shard = SH.named_shardings(params_spec, mesh)
+
+    def fn(params, batch):
+        with SH.use_mesh(mesh):
+            return model.decode_step(params, batch)
+
+    return fn, p_shard
+
+
+# ---------------------------------------------------------------------------
+# One-stop cell builder for the dry-run.
+# ---------------------------------------------------------------------------
+
+
+def _logits_sharding(mesh: Mesh, global_batch: int):
+    """(B, T, V) logits: batch axes only when B divides; vocab over model."""
+    rules = SH.rules_for_mesh(mesh)
+    b = rules["batch"]
+    b_size = 1
+    for ax in b:
+        b_size *= mesh.shape[ax]
+    return _ns(mesh, P(b if global_batch % b_size == 0 else None, None, None))
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    """-> (jitted_fn, example_args_specs) for one (arch x shape x mesh)."""
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(cfg, mesh, specs)
+
+    if shape.kind == "train":
+        step, state_shard = make_train_step(cfg, mesh, batch_shard=b_shard)
+        state_spec, _ = make_train_state_specs(cfg, mesh)
+        return step, (state_spec, specs), (state_shard, b_shard)
+
+    if shape.kind == "prefill":
+        fn, p_shard = make_prefill_step(cfg, mesh)
+        params_spec = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        # serve params in bf16 (production serving convention)
+        params_spec = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype
+            ),
+            params_spec,
+        )
+        logits_shard = _logits_sharding(mesh, shape.global_batch)
+        cache_sp = jax.eval_shape(fn, params_spec, specs)[1]
+        out_shard = (logits_shard, cache_shardings(cfg, mesh, cache_sp))
+        jitted = jax.jit(fn, in_shardings=(p_shard, b_shard), out_shardings=out_shard)
+        return jitted, (params_spec, specs), (p_shard, b_shard)
+
+    # decode
+    fn, p_shard = make_decode_step(cfg, mesh)
+    params_spec = jax.eval_shape(model.init, jax.ShapeDtypeStruct((2,), jnp.uint32))
+    params_spec = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(
+            l.shape, jnp.bfloat16 if l.dtype == jnp.float32 else l.dtype
+        ),
+        params_spec,
+    )
+    logits_shard = _logits_sharding(mesh, shape.global_batch)
+    out_shard = (logits_shard, b_shard["cache"])
+    jitted = jax.jit(
+        fn,
+        in_shardings=(p_shard, b_shard),
+        out_shardings=out_shard,
+        donate_argnums=(1,),
+    )
+    return jitted, (params_spec, specs), (p_shard, b_shard)

@@ -1,0 +1,26 @@
+"""MQSim-analogue SSD simulator used for the paper's end-to-end evaluation."""
+
+from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
+from repro.flashsim.ssd import SSDSim, SimStats, compare_mechanisms, simulate
+from repro.flashsim.workloads import (
+    PROFILES,
+    RequestTrace,
+    Workload,
+    generate_trace,
+    make_workloads,
+)
+
+__all__ = [
+    "DEFAULT_SSD",
+    "OperatingCondition",
+    "SSDConfig",
+    "SSDSim",
+    "SimStats",
+    "compare_mechanisms",
+    "simulate",
+    "PROFILES",
+    "RequestTrace",
+    "Workload",
+    "generate_trace",
+    "make_workloads",
+]

@@ -1,0 +1,47 @@
+"""SSD organization and simulation configuration (MQSim-analogue)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.timing import DEFAULT_TIMING, TimingParams
+
+
+@dataclasses.dataclass(frozen=True)
+class SSDConfig:
+    """High-end NVMe SSD organization, matching the paper's MQSim setup.
+
+    8 channels x 8 dies (64-way die parallelism), NV-DDR3-class channel
+    bandwidth (folded into tDMA), one LDPC engine per channel.
+    """
+
+    n_channels: int = 8
+    dies_per_channel: int = 8
+    ecc_engines_per_channel: int = 1
+    page_kib: int = 16
+    #: Host-interface constant overhead per request (us): NVMe submission/
+    #: completion, FTL lookup.
+    host_overhead_us: float = 8.0
+    timing: TimingParams = DEFAULT_TIMING
+
+    @property
+    def n_dies(self) -> int:
+        return self.n_channels * self.dies_per_channel
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingCondition:
+    """Retention age + wear state the SSD is simulated under."""
+
+    retention_days: float = 90.0
+    pec: float = 0.0
+
+    def label(self) -> str:
+        if self.retention_days >= 30:
+            age = f"{self.retention_days / 30:.0f}mo"
+        else:
+            age = f"{self.retention_days:.0f}d"
+        return f"{age}/{self.pec:.0f}PEC"
+
+
+DEFAULT_SSD = SSDConfig()

@@ -1,0 +1,165 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid: (BH, nq, nk) with the kv dimension innermost and *arbitrary*
+(sequential) semantics: the online-softmax running state (m, l, acc)
+lives in VMEM scratch that persists across the kv steps of one (bh, qi)
+cell; the output block is written once, on the last kv step.
+
+BlockSpecs keep one (bq, hd) query tile, one (bk, hd) K and V tile, and
+the (bq, hd) output tile in VMEM — the MXU sees (bq x hd) @ (hd x bk) and
+(bq x bk) @ (bk x hd) matmuls, 128-aligned for hd in {64,128,256} via bq,
+bk multiples of 128.
+
+Causal tiles entirely above the diagonal are skipped with pl.when — zero
+MXU work on real hardware (the tile still occupies a grid step).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _fa_kernel(
+    q_ref, k_ref, v_ref,        # VMEM tiles
+    o_ref,                       # output tile, revisited across kv steps
+    m_scr, l_scr, acc_scr,       # VMEM scratch (persist across kv steps)
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    bq: int,
+    bk: int,
+    nk: int,
+    kv_valid: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * bq
+    k_start = ki * bk
+
+    # Skip tiles with no unmaskable element (above the causal diagonal or
+    # entirely in key padding) — zero MXU work on hardware.
+    run = k_start < kv_valid
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + bq - 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)              # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)              # (bk, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # (bq, bk)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = kpos < kv_valid
+        if causal:
+            mask = jnp.logical_and(mask, kpos <= qpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_blk = jnp.max(s, axis=1, keepdims=True)     # (bq, 1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        # NB: exp(NEG - NEG) == 1 on fully-masked rows — zero those out.
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)  # (bq, bk)
+        c = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_new = l_prev * c + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                              # (bq, hd)
+        acc_scr[...] = acc_scr[...] * c + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,                 # (BH, T, hd)
+    k: jax.Array,                 # (BK, S, hd)
+    v: jax.Array,                 # (BK, S, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_valid: Optional[int] = None,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, T, hd = q.shape
+    BK, S, _ = k.shape
+    G = BH // BK
+    kv_valid = S if kv_valid is None else kv_valid
+    bq = min(bq, T)
+    bk = min(bk, S)
+
+    # Pad T and S to tile multiples (mask handles key padding; query pad
+    # rows are sliced away).
+    Tp = -(-T // bq) * bq
+    Sp = -(-S // bk) * bk
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0)))
+        kv_valid = min(kv_valid, S)
+    nq, nk = Tp // bq, Sp // bk
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=hd**-0.5,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        bq=bq, bk=bk, nk=nk,
+        kv_valid=kv_valid,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh // G, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Tp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :T]

@@ -1,0 +1,43 @@
+"""Jitted wrapper: model-layout adapter + backend dispatch for the kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "kv_valid", "interpret")
+)
+def flash_attention(
+    q: jax.Array,                 # (B, T, K, G, hd) — model layout
+    k: jax.Array,                 # (B, S, K, hd)
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_valid: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Returns (B, T, K, G, hd). TPU: Pallas kernel; CPU: interpret mode."""
+    B, T, K, G, hd = q.shape
+    S = k.shape[1]
+    qf = q.transpose(0, 2, 3, 1, 4).reshape(B * K * G, T, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    of = flash_attention_fwd(
+        qf, kf, vf,
+        causal=causal, window=window, softcap=softcap, kv_valid=kv_valid,
+        interpret=_use_interpret() if interpret is None else interpret,
+    )
+    return of.reshape(B, K, G, T, hd).transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the flash-attention kernel (dense softmax)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(
+    q: jax.Array,          # (BH, T, hd)
+    k: jax.Array,          # (BK, S, hd)  with BH = BK * G
+    v: jax.Array,          # (BK, S, hd)
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    kv_valid: Optional[int] = None,   # keys >= kv_valid are padding
+) -> jax.Array:
+    """Dense reference. Heads flattened into the batch dim; GQA expressed
+    by repeating kv rows G = BH // BK times."""
+    BH, T, hd = q.shape
+    BK, S, _ = k.shape
+    G = BH // BK
+    k = jnp.repeat(k, G, axis=0)
+    v = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bth,bsh->bts", q, k, preferred_element_type=jnp.float32)
+    s = s * (hd**-0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None:
+        mask = mask & ((qpos - kpos) < window)
+    if kv_valid is not None:
+        mask = mask & (kpos < kv_valid)
+    s = jnp.where(mask[None], s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bts,bsh->bth", p.astype(v.dtype), v)

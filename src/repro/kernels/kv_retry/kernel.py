@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: dequantize KV pages + compute the retry margin.
+
+Grid over page blocks; each step holds a (bp, E) int8 tile, its scales,
+and the backing tile in VMEM, dequantizes on the VPU, computes the
+margin statistic (one rms reduction per page), and selects dequant vs
+backing per page — the fused fast-read + margin-check + retry-select of
+DESIGN.md §4.  The backing tile plays the role of the CACHE READ second
+register: on hardware its DMA overlaps the dequant of the previous tile
+(double buffering is implicit in the Pallas pipeline).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kv_retry_kernel(q_ref, s_ref, b_ref, out_ref, m_ref, *, tau: float):
+    q = q_ref[...].astype(jnp.float32)         # (bp, E)
+    s = s_ref[...]                              # (bp, 1)
+    deq = q * s
+    rms = jnp.sqrt(jnp.mean(deq * deq, axis=1, keepdims=True) + 1e-12)
+    margin = 1.0 - (0.5 * s) / (tau * rms)      # (bp, 1)
+    take_fast = margin >= 0.0
+    out = jnp.where(take_fast, deq, b_ref[...].astype(jnp.float32))
+    out_ref[...] = out.astype(out_ref.dtype)
+    m_ref[...] = margin
+
+
+def kv_retry_pallas(data_q, scale, backing, *, tau: float = 0.02,
+                    bp: int = 128, interpret: bool = False):
+    P, E = data_q.shape
+    bp = min(bp, max(8, P))
+    Pp = -(-P // bp) * bp
+    if Pp != P:
+        pad = Pp - P
+        data_q = jnp.pad(data_q, ((0, pad), (0, 0)))
+        scale = jnp.pad(scale, ((0, pad), (0, 0)), constant_values=1.0)
+        backing = jnp.pad(backing, ((0, pad), (0, 0)))
+
+    kernel = functools.partial(_kv_retry_kernel, tau=tau)
+    out, margin = pl.pallas_call(
+        kernel,
+        grid=(Pp // bp,),
+        in_specs=[
+            pl.BlockSpec((bp, E), lambda pi: (pi, 0)),
+            pl.BlockSpec((bp, 1), lambda pi: (pi, 0)),
+            pl.BlockSpec((bp, E), lambda pi: (pi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bp, E), lambda pi: (pi, 0)),
+            pl.BlockSpec((bp, 1), lambda pi: (pi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Pp, E), backing.dtype),
+            jax.ShapeDtypeStruct((Pp, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(data_q, scale, backing)
+    return out[:P], margin[:P]

@@ -1,0 +1,28 @@
+"""Jitted wrapper + page quantization helpers for the KV retry read."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kv_retry.kernel import kv_retry_pallas
+from repro.kernels.kv_retry.ref import kv_retry_ref
+
+
+def quantize_pages(x):
+    """x: (P, E) -> (int8 data, (P,1) scales). Symmetric per-page int8."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "interpret"))
+def kv_read_with_retry(data_q, scale, backing, tau: float = 0.02,
+                       interpret=None):
+    """Margin-aware fast read with retry (Pallas on TPU, interpret on CPU)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return kv_retry_pallas(data_q, scale, backing, tau=tau, interpret=interpret)

@@ -1,0 +1,27 @@
+"""Oracle for the margin-aware quantized-KV retry read (pure jnp).
+
+The AR² analogy on TPU (DESIGN.md §4): the low-precision (int8) KV page is
+the fast, reduced-"tR" read; the margin statistic is the ECC-capability
+margin; pages whose quantization-error bound exceeds the tolerance are
+re-read from the high-precision backing copy (the retry step).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kv_retry_ref(data_q, scale, backing, tau: float = 0.02):
+    """data_q: (P, E) int8; scale: (P, 1) f32; backing: (P, E) f32/bf16.
+
+    Returns (out (P, E) backing-dtype, margin (P, 1) f32):
+      margin = 1 - (scale/2) / (tau * rms(dequant_page))
+      out    = dequant where margin >= 0 else backing  (the retry).
+    """
+    deq = data_q.astype(jnp.float32) * scale
+    rms = jnp.sqrt(jnp.mean(jnp.square(deq), axis=-1, keepdims=True) + 1e-12)
+    err_bound = 0.5 * scale
+    margin = 1.0 - err_bound / (tau * rms)
+    out = jnp.where(margin >= 0.0, deq, backing.astype(jnp.float32))
+    return out.astype(backing.dtype), margin

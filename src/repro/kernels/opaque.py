@@ -1,0 +1,293 @@
+"""Opaque kernel stand-ins for the CPU dry-run (hillclimb measurement).
+
+On a real TPU, a `pl.pallas_call` lowers to one opaque custom-call whose
+HBM traffic is exactly its operands + results — the fused intermediate
+tiles live in VMEM and never appear in the HLO.  This container has no
+TPU, so optimized variants substitute a `jax.pure_callback` stand-in:
+also a single custom-call with the same operands/results, hence the same
+(honest) roofline bytes.  FLOPs for these calls are supplied analytically
+by launch/hlo_cost.py, which identifies each call through a *marker*
+output (a tiny f32 vector whose length encodes kernel + static config) —
+pure_callback erases the callee name, the marker survives.
+
+Stand-ins are active only when REPRO_OPAQUE_KERNELS=1 (set by
+``dryrun.py --opt``); on TPU the real Pallas kernels take this code path
+instead; everywhere else callers fall back to the pure-jnp reference
+implementations, which the kernels are allclose-validated against.
+
+Marker registry (length of the marker vector):
+  101            flash attention fwd, causal
+  102            flash attention bwd, causal
+  103            flash attention fwd, bidirectional/cross
+  104            flash attention bwd, bidirectional/cross
+  401            fused decode attention, bf16 KV
+  402            fused decode attention, int8 KV (the AR² fast-read)
+  10000 + w      windowed flash fwd, window w
+  20000 + w      windowed flash bwd, window w
+  30000 + L      ssd chunked scan fwd, chunk L
+  40000 + L      ssd chunked scan bwd, chunk L
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+M_FLASH_FWD_CAUSAL = 101
+M_FLASH_BWD_CAUSAL = 102
+M_FLASH_FWD_FULL = 103
+M_FLASH_BWD_FULL = 104
+M_DECODE_BF16 = 401
+M_DECODE_INT8 = 402
+M_WINDOW_FWD_BASE = 10000
+M_WINDOW_BWD_BASE = 20000
+M_SSD_FWD_BASE = 30000
+M_SSD_BWD_BASE = 40000
+
+
+def opaque_mode() -> bool:
+    return os.environ.get("REPRO_OPAQUE_KERNELS", "0") == "1"
+
+
+def _axis_size(mesh, m) -> int:
+    size = 1
+    for ax in (m if isinstance(m, tuple) else (m,)):
+        size *= mesh.shape[ax]
+    return size
+
+
+def _spec_for(shape, axes, mesh, rules):
+    """Logical axes -> PartitionSpec with the same divisibility/duplicate
+    guards as sharding.constrain (so the stand-in shards exactly like the
+    surrounding activations — no gathers at the call boundary)."""
+    from jax.sharding import PartitionSpec as P
+
+    parts, used = [], set()
+    for dim, a in enumerate(axes):
+        m = rules.get(a) if a else None
+        if m:
+            m_t = m if isinstance(m, tuple) else (m,)
+            if shape[dim] % _axis_size(mesh, m) == 0 and not (used & set(m_t)):
+                parts.append(m)
+                used.update(m_t)
+                continue
+        parts.append(None)
+    return P(*parts)
+
+
+def _local_shape(shape, spec, mesh):
+    out = []
+    for dim, m in enumerate(tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))):
+        out.append(shape[dim] // (_axis_size(mesh, m) if m else 1))
+    return tuple(out)
+
+
+def _call(
+    marker: int,
+    result_specs: Sequence[jax.ShapeDtypeStruct],
+    *args,
+    args_axes=None,
+    result_axes=None,
+):
+    """One custom-call with a marker output; results are zeros (the dry-run
+    never executes; numerics come from the real kernel / reference path).
+
+    When a mesh context is active (the production dry-run), the call is
+    wrapped in shard_map with specs derived from ``args_axes`` so operands
+    stay sharded — a pallas_call on TPU partitions the same way; without
+    this, XLA would all-gather every operand to feed the callback.
+    """
+    from repro.distributed import sharding as SH
+
+    mesh = SH.current_mesh()
+    marker_spec = jax.ShapeDtypeStruct((marker,), jnp.float32)
+
+    if mesh is None or args_axes is None:
+        specs = tuple(result_specs) + (marker_spec,)
+
+        def host_impl(*xs):
+            return tuple(np.zeros(s.shape, s.dtype) for s in specs)
+
+        outs = jax.pure_callback(
+            host_impl, specs, *args, vmap_method="sequential"
+        )
+        return outs[:-1]
+
+    rules = SH.current_rules() or SH.rules_for_mesh(mesh)
+    in_specs = tuple(
+        _spec_for(a.shape, ax, mesh, rules) for a, ax in zip(args, args_axes)
+    )
+    out_specs_np = tuple(
+        _spec_for(r.shape, ax, mesh, rules)
+        for r, ax in zip(result_specs, result_axes)
+    )
+    from jax.sharding import PartitionSpec as P
+
+    local_specs = tuple(
+        jax.ShapeDtypeStruct(_local_shape(r.shape, sp, mesh), r.dtype)
+        for r, sp in zip(result_specs, out_specs_np)
+    ) + (marker_spec,)
+
+    def body(*xs):
+        def host_impl(*ys):
+            return tuple(np.zeros(s.shape, s.dtype) for s in local_specs)
+
+        return jax.pure_callback(
+            host_impl, local_specs, *xs, vmap_method="sequential"
+        )
+
+    outs = jax.shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs_np + (P(),),
+        check_vma=False,
+    )(*args)
+    return outs[:-1]
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (full-sequence): custom_vjp so train cells stay opaque.
+# ---------------------------------------------------------------------------
+
+
+def _fwd_marker(causal: bool, window) -> int:
+    if window is not None:
+        return M_WINDOW_FWD_BASE + int(window)
+    return M_FLASH_FWD_CAUSAL if causal else M_FLASH_FWD_FULL
+
+
+def _bwd_marker(causal: bool, window) -> int:
+    if window is not None:
+        return M_WINDOW_BWD_BASE + int(window)
+    return M_FLASH_BWD_CAUSAL if causal else M_FLASH_BWD_FULL
+
+
+#: Query layout: context-parallel — the query sequence shards over the
+#: "model" axis ("act_seq" rule).  Heads rarely divide the 16-way model
+#: axis (8 kv-heads / 24..56 q-heads across the assigned archs), so
+#: head-TP would replicate attention compute 16x; sequence-sharding keeps
+#: every rank busy on T/16 queries instead.  K/V replicate over "model"
+#: inside the kernel region (the entry all-gather is real, counted
+#: traffic); a windowed kernel only needs a halo exchange instead — the
+#: stand-in conservatively charges the full gather.
+_Q_AXES = ("batch", "act_seq", "kv_heads", None, None)
+_KV_AXES = ("batch", None, "kv_heads", None)
+
+
+def make_flash_opaque(causal: bool, window):
+    """(q (B,T,K,G,hd), k/v (B,S,K,hd)) -> o (B,T,K,G,hd), opaque."""
+
+    @jax.custom_vjp
+    def flash(q, k, v):
+        (o,) = _call(
+            _fwd_marker(causal, window),
+            [jax.ShapeDtypeStruct(q.shape, q.dtype)],
+            q, k, v,
+            args_axes=(_Q_AXES, _KV_AXES, _KV_AXES),
+            result_axes=(_Q_AXES,),
+        )
+        return o
+
+    def fwd(q, k, v):
+        return flash(q, k, v), (q, k, v)
+
+    def bwd(res, g):
+        q, k, v = res
+        dq, dk, dv = _call(
+            _bwd_marker(causal, window),
+            [
+                jax.ShapeDtypeStruct(q.shape, q.dtype),
+                jax.ShapeDtypeStruct(k.shape, k.dtype),
+                jax.ShapeDtypeStruct(v.shape, v.dtype),
+            ],
+            q, k, v, g,
+            args_axes=(_Q_AXES, _KV_AXES, _KV_AXES, _Q_AXES),
+            result_axes=(_Q_AXES, _KV_AXES, _KV_AXES),
+        )
+        return dq, dk, dv
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+# ---------------------------------------------------------------------------
+# Fused decode attention (KV read + attend, optionally int8 fast-tier).
+# ---------------------------------------------------------------------------
+
+
+def decode_attention_opaque(q, ck, cv, valid_len, *, int8: bool,
+                            scales=None):
+    """q (B,1,K,G,hd); ck/cv (B,K,S,hd) [int8 when int8=True, with
+    per-page scales (B,K,S,1)] -> o (B,1,K,G,hd).
+
+    The int8 variant is the AR² fast read: the wire/HBM format is 1 B/elt
+    plus scales; margin-failing pages re-read from backing *inside* the
+    kernel (the PR²-overlapped retry), so the call's operand bytes are the
+    honest fast-path traffic."""
+    B, _, K, G, hd = q.shape
+    marker = M_DECODE_INT8 if int8 else M_DECODE_BF16
+    cache_axes = ("batch", "kv_heads", "kv_seq", None)
+    args = [q, ck, cv]
+    axes = [_Q_AXES, cache_axes, cache_axes]
+    if int8:
+        args += list(scales)
+        axes += [cache_axes, cache_axes]
+    args.append(jnp.asarray(valid_len, jnp.int32))
+    axes.append(())
+    (o,) = _call(
+        marker, [jax.ShapeDtypeStruct(q.shape, q.dtype)], *args,
+        args_axes=tuple(axes), result_axes=(_Q_AXES,),
+    )
+    # NB: with the KV sequence sharded over "model", the real kernel adds
+    # one tiny partial-softmax combine (an all-reduce of (B,K,G,hd)+stats,
+    # ~KBs); omitted from the stand-in's accounting as negligible.
+    return o
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan.
+# ---------------------------------------------------------------------------
+
+
+def make_ssd_opaque(chunk: int):
+    x_axes = ("batch", None, "heads", None)
+    bc_axes = ("batch", None, None)
+    dt_axes = ("batch", None, "heads")
+    h_axes = ("batch", "heads", None, None)
+
+    @jax.custom_vjp
+    def ssd(x, Bm, Cm, dt, A):
+        B, T, nh, hd = x.shape
+        ds = Bm.shape[-1]
+        o_spec = jax.ShapeDtypeStruct(x.shape, x.dtype)
+        h_spec = jax.ShapeDtypeStruct((B, nh, hd, ds), jnp.float32)
+        o, H = _call(
+            M_SSD_FWD_BASE + chunk, [o_spec, h_spec], x, Bm, Cm, dt, A,
+            args_axes=(x_axes, bc_axes, bc_axes, dt_axes, (None,)),
+            result_axes=(x_axes, h_axes),
+        )
+        return o, H
+
+    def fwd(x, Bm, Cm, dt, A):
+        return ssd(x, Bm, Cm, dt, A), (x, Bm, Cm, dt, A)
+
+    def bwd(res, g):
+        x, Bm, Cm, dt, A = res
+        go, _ = g
+        all_axes = (x_axes, bc_axes, bc_axes, dt_axes, (None,))
+        outs = _call(
+            M_SSD_BWD_BASE + chunk,
+            [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in res],
+            x, Bm, Cm, dt, A, go,
+            args_axes=all_axes + (x_axes,),
+            result_axes=all_axes,
+        )
+        return tuple(outs)
+
+    ssd.defvjp(fwd, bwd)
+    return ssd

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for the 160-chip RBER characterization hot loop.
+
+The characterization sweeps RBER over (pages x retry-table entries); at
+population scale that is ~10^5 pages x 41 entries x 7 boundaries x 3 page
+types of Q-function evaluations per (retention, P/E, tR-scale) condition
+— the dominant compute of the paper's §3 study and of AR²'s table build.
+
+Grid: (N / bn, S / bs).  Each step loads a (bn, 8) slice of the level
+means/sigmas and a (bs, 7) slice of the retry table into VMEM, evaluates
+all 7 boundary error integrals on the VPU (erfc), and writes the three
+page-type outputs as (bn, bs) tiles.  bn x bs tiles are (8,128)-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.rber.ref import PAGE_MASKS
+
+
+def _rber_kernel(mu_ref, sigma_ref, lvl_ref, lsb_ref, csb_ref, msb_ref, *,
+                 bn: int, bs: int):
+    mu = mu_ref[...]          # (bn, 8)
+    sig = sigma_ref[...]      # (bn, 8)
+    lvl = lvl_ref[...]        # (bs, 7)
+    inv_sqrt2 = 0.7071067811865475
+
+    outs = [jnp.zeros((bn, bs), jnp.float32) for _ in range(3)]
+    masks = [tuple(row) for row in PAGE_MASKS.tolist()]
+    for b in range(7):
+        m_lo = mu[:, b][:, None]          # (bn, 1)
+        m_hi = mu[:, b + 1][:, None]
+        s_lo = sig[:, b][:, None]
+        s_hi = sig[:, b + 1][:, None]
+        L = lvl[:, b][None, :]            # (1, bs)
+        up = 0.5 * jax.lax.erfc((L - m_lo) / s_lo * inv_sqrt2)
+        dn = 0.5 * jax.lax.erfc((m_hi - L) / s_hi * inv_sqrt2)
+        e = (up + dn) * 0.125             # (bn, bs)
+        for p in range(3):
+            if masks[p][b]:
+                outs[p] = outs[p] + e
+    lsb_ref[...], csb_ref[...], msb_ref[...] = outs
+
+
+def rber_pallas(mu, sigma, levels, *, bn: int = 256, bs: int = 128,
+                interpret: bool = False):
+    """mu, sigma: (N, 8); levels: (S, 7) -> (3, N, S) float32."""
+    N = mu.shape[0]
+    S = levels.shape[0]
+    bn = min(bn, max(8, N))
+    bs = min(bs, max(1, S))
+    Np = -(-N // bn) * bn
+    Sp = -(-S // bs) * bs
+    if Np != N:
+        pad = Np - N
+        mu = jnp.pad(mu, ((0, pad), (0, 0)), constant_values=1.0)
+        sigma = jnp.pad(sigma, ((0, pad), (0, 0)), constant_values=1.0)
+    if Sp != S:
+        levels = jnp.pad(levels, ((0, Sp - S), (0, 0)), constant_values=0.0)
+
+    kernel = functools.partial(_rber_kernel, bn=bn, bs=bs)
+    out_shape = [jax.ShapeDtypeStruct((Np, Sp), jnp.float32)] * 3
+    lsb, csb, msb = pl.pallas_call(
+        kernel,
+        grid=(Np // bn, Sp // bs),
+        in_specs=[
+            pl.BlockSpec((bn, 8), lambda ni, si: (ni, 0)),
+            pl.BlockSpec((bn, 8), lambda ni, si: (ni, 0)),
+            pl.BlockSpec((bs, 7), lambda ni, si: (si, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, bs), lambda ni, si: (ni, si)),
+            pl.BlockSpec((bn, bs), lambda ni, si: (ni, si)),
+            pl.BlockSpec((bn, bs), lambda ni, si: (ni, si)),
+        ],
+        out_shape=out_shape,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(mu, sigma, levels)
+    return jnp.stack([lsb[:N, :S], csb[:N, :S], msb[:N, :S]])

@@ -1,0 +1,18 @@
+"""Jitted wrapper for the RBER characterization kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rber.kernel import rber_pallas
+from repro.kernels.rber.ref import rber_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rber_table(mu, sigma, levels, interpret=None):
+    """(N,8),(N,8),(S,7) -> (3,N,S); Pallas on TPU, interpret elsewhere."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return rber_pallas(mu, sigma, levels, interpret=interpret)

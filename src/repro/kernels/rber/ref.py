@@ -1,0 +1,36 @@
+"""Oracle for the RBER characterization kernel (pure jnp)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# TLC 2-3-2 page-type masks over the 7 boundaries (lsb, csb, msb).
+PAGE_MASKS = jnp.asarray(
+    [
+        [1, 0, 0, 0, 1, 0, 0],
+        [0, 1, 0, 1, 0, 1, 0],
+        [0, 0, 1, 0, 0, 0, 1],
+    ],
+    jnp.float32,
+)
+
+
+def qfunc(x):
+    return 0.5 * jax.lax.erfc(x / jnp.sqrt(2.0).astype(x.dtype))
+
+
+def rber_ref(mu, sigma, levels):
+    """RBER per page x retry entry x page type.
+
+    mu, sigma: (N, 8); levels: (S, 7) -> (3, N, S).
+    """
+    m_lo = mu[:, None, :-1]          # (N, 1, 7)
+    m_hi = mu[:, None, 1:]
+    s_lo = sigma[:, None, :-1]
+    s_hi = sigma[:, None, 1:]
+    L = levels[None, :, :]           # (1, S, 7)
+    up = qfunc((L - m_lo) / s_lo)
+    dn = qfunc((m_hi - L) / s_hi)
+    per_boundary = (up + dn) / 8.0   # (N, S, 7)
+    return jnp.einsum("nsb,pb->pns", per_boundary, PAGE_MASKS)

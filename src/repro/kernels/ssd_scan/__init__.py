@@ -1,0 +1,4 @@
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+__all__ = ["ssd_scan", "ssd_scan_ref"]

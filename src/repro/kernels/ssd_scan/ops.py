@@ -1,0 +1,44 @@
+"""Jitted wrapper: model-layout adapter + backend dispatch for ssd_scan."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,      # (B, T, nh, hd) — model layout
+    Bm: jax.Array,     # (B, T, ds)     shared across heads (ngroups=1)
+    Cm: jax.Array,     # (B, T, ds)
+    dt: jax.Array,     # (B, T, nh)     post-softplus
+    A: jax.Array,      # (nh,)          negative per-head decay
+    chunk: int = 256,
+    interpret: bool | None = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y: (B, T, nh, hd), H: (B, nh, hd, ds) f32) — the exact
+    interface of models/ssm.ssd_chunked, Pallas-backed."""
+    B, T, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    xh = x.transpose(0, 2, 1, 3).reshape(B * nh, T, hd)
+    dth = dt.transpose(0, 2, 1).reshape(B * nh, T)
+    dAh = dth * jnp.tile(A.astype(dth.dtype), B)[:, None]
+    Bh = jnp.broadcast_to(Bm[:, None], (B, nh, T, ds)).reshape(B * nh, T, ds)
+    Ch = jnp.broadcast_to(Cm[:, None], (B, nh, T, ds)).reshape(B * nh, T, ds)
+    y, H = ssd_scan_fwd(
+        xh, Bh, Ch, dth, dAh,
+        chunk=chunk,
+        interpret=_use_interpret() if interpret is None else interpret,
+    )
+    y = y.reshape(B, nh, T, hd).transpose(0, 2, 1, 3)
+    H = H.reshape(B, nh, ds, hd).transpose(0, 1, 3, 2)  # -> (B, nh, hd, ds)
+    return y, H

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel.
+
+Evaluates the *sequential* (unchunked) state-space recurrence directly —
+the ground truth both the chunked jnp path (models/ssm.ssd_chunked) and
+the Pallas kernel must reproduce:
+
+  H_t = H_{t-1} * exp(dt_t * A) + dt_t * x_t B_t^T
+  y_t = C_t H_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    x: jax.Array,      # (BH, T, hd)
+    Bm: jax.Array,     # (BH, T, ds)
+    Cm: jax.Array,     # (BH, T, ds)
+    dt: jax.Array,     # (BH, T)
+    dA: jax.Array,     # (BH, T) = dt * A
+):
+    """Returns (y: (BH, T, hd), H: (BH, ds, hd) f32)."""
+    xf = x.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    dAf = dA.astype(jnp.float32)
+
+    def step(H, inp):
+        xt, bt, ct, dtt, dat = inp          # (BH,hd) (BH,ds) (BH,ds) (BH,) (BH,)
+        g = jnp.exp(jnp.clip(dat, -60.0, 0.0))[:, None, None]
+        H = H * g + jnp.einsum("bd,bh,b->bdh", bt, xt, dtt)
+        y = jnp.einsum("bd,bdh->bh", ct, H)
+        return H, y
+
+    BH, T, hd = x.shape
+    ds = Bm.shape[-1]
+    H0 = jnp.zeros((BH, ds, hd), jnp.float32)
+    H, ys = jax.lax.scan(
+        step,
+        H0,
+        (
+            jnp.moveaxis(xf, 1, 0), jnp.moveaxis(Bf, 1, 0),
+            jnp.moveaxis(Cf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+            jnp.moveaxis(dAf, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), H

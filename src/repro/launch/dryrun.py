@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 placeholder host devices build the production meshes, every
+cell's step function must lower AND compile, and the compiled artifact
+yields the roofline inputs:
+
+  * compiled.memory_analysis()  -> bytes per device (fits in 16 GiB HBM?)
+  * compiled.cost_analysis()    -> per-device HLO FLOPs / bytes accessed
+  * lowered/compiled HLO text   -> collective operand bytes (parsed here)
+
+Results are written to results/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline benchmark (benchmarks/roofline.py) consumes them.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch deepseek-67b --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--jobs 2]
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# bytes per element for HLO shape parsing
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+#: "%name = <types> <op>(", tolerant of layout annotations {2,1,0} inside
+#: the type string and of tuple types for -start variants.
+_OP_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+
+#: replica_groups={{0,1,..},{..}} (explicit) or [G,K]<=[N] (iota) formats.
+_GROUPS_EXPLICIT_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def _group_size(line: str) -> int:
+    """Participants per replica group of a collective op line (1 if absent)."""
+    m = _GROUPS_EXPLICIT_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    return 1
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from the partitioned HLO.
+
+    For each collective op we take the *output* bytes on this device (HLO
+    is the per-device module) and apply the ring-algorithm traffic
+    multiplier for a group of k participants:
+
+      all-gather        out is the gathered tensor: traffic = out*(k-1)/k
+      reduce-scatter    out is the shard:           traffic = out*(k-1)
+      all-reduce        out full tensor:            traffic = 2*out*(k-1)/k
+      all-to-all        out full tensor:            traffic = out*(k-1)/k
+      collective-permute                            traffic = out
+
+    ``bytes`` records raw output bytes; ``traffic`` the ring traffic; the
+    roofline's collective term uses traffic / (1 link x 50 GB/s).
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    traffic = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.match(line)
+        if m:
+            type_str, base, start = m.group(1), m.group(2), m.group(3)
+        else:
+            continue
+        # -done twins carry the same tuple type; only count -start or sync.
+        parts = [
+            _shape_bytes(p)
+            for p in re.findall(r"[a-z0-9]+\[[0-9,]*\]", type_str)
+        ]
+        if start:
+            # async start type is (operand, result, ...): take the result
+            # (largest component — exact for all-gather/all-reduce, and the
+            # CPU backend emits sync ops anyway).
+            total = max(parts) if parts else 0
+        else:
+            total = sum(parts)
+        k = _group_size(line)
+        mult = {
+            "all-gather": (k - 1) / k,
+            "reduce-scatter": float(k - 1),
+            "all-reduce": 2.0 * (k - 1) / k,
+            "all-to-all": (k - 1) / k,
+            "collective-permute": 1.0,
+        }[base]
+        out[base] += total
+        traffic[base] += total * mult
+        counts[base] += 1
+    return {"bytes": out, "traffic": traffic, "counts": counts}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path,
+             variant: str = "base") -> dict:
+    """variant: comma-joined optimization flags applied via env before
+    tracing — "base" (paper-faithful XLA baseline), or any of
+    {"flash" (Pallas attention via opaque stand-in), "kvint8" (AR² int8
+    KV fast tier), "ssdk" (Pallas SSD-scan stand-in)}, e.g.
+    "flash+kvint8"."""
+    flags = set(variant.split("+")) if variant != "base" else set()
+    if flags:
+        os.environ["REPRO_OPAQUE_KERNELS"] = "1"
+    if "flash" in flags:
+        os.environ["REPRO_ATTN_IMPL"] = "flash"
+    if "kvint8" in flags:
+        os.environ["REPRO_KV_INT8"] = "1"
+    if "ssdk" in flags:
+        os.environ["REPRO_PALLAS_SSD"] = "opaque"
+    if "ep" in flags:
+        os.environ["REPRO_MOE_EP"] = "1"
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import SHAPES, get_config
+    from repro.distributed.steps import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "skipped",
+            "reason": "full-attention decode over 524k ctx is quadratic; "
+                      "skipped per task rule (DESIGN.md §6)",
+        }
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.json").write_text(
+            json.dumps(rec, indent=2)
+        )
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    jitted, arg_specs, _ = build_cell(cfg, shape, mesh)
+    lowered = jitted.lower(*arg_specs)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    print(f"[{arch} x {shape_name} x {mesh_kind}] memory_analysis: {mem}")
+    print(f"[{arch} x {shape_name} x {mesh_kind}] cost_analysis flops="
+          f"{cost.get('flops', 0):.3e} bytes={cost.get('bytes accessed', 0):.3e}")
+    coll = collective_bytes(hlo_text)
+
+    # Loop-aware re-derivation: cost_analysis counts while (lax.scan)
+    # bodies once; hlo_cost multiplies by known_trip_count (see module doc).
+    from repro.launch import hlo_cost as HC
+
+    loop_cost = HC.analyze(hlo_text)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "variant": variant,
+        "status": "ok",
+        "n_devices": mesh.devices.size,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops_per_device": loop_cost.flops,
+        "bytes_accessed_per_device": loop_cost.bytes,
+        "transcendentals": loop_cost.transcendentals,
+        "xla_cost_analysis": {
+            "flops": cost.get("flops", 0.0),
+            "bytes_accessed": cost.get("bytes accessed", 0.0),
+            "transcendentals": cost.get("transcendentals", 0.0),
+            "note": "while bodies counted once by XLA; see flops_per_device "
+                    "for the loop-corrected value",
+        },
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+        },
+        "collectives": {
+            "bytes": loop_cost.coll_bytes,
+            "traffic": loop_cost.coll_traffic,
+            "counts": loop_cost.coll_counts,
+        },
+        "collectives_loop_body_once": coll,
+        "model": {
+            "n_params": cfg.n_params(),
+            "n_active_params": cfg.n_active_params(),
+        },
+        "shape_cfg": dataclasses.asdict(shape),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = "" if variant == "base" else f"__{variant}"
+    path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{tag}.json"
+    path.write_text(json.dumps(rec, indent=2))
+    print(f"wrote {path}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--variant", default="base",
+                    help="optimization flags, e.g. flash+kvint8 (see run_cell)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="parallel compile subprocesses for --all")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape
+        for m in meshes:
+            rec = run_cell(args.arch, args.shape, m, RESULTS_DIR, args.variant)
+            print(json.dumps(rec.get("memory", rec), indent=2))
+        return
+
+    from repro.configs import ARCHS, SHAPES  # safe: no device use
+
+    cells = [
+        (a, s, m)
+        for a in sorted(ARCHS)
+        for s in SHAPES
+        for m in meshes
+    ]
+    if args.skip_existing:
+        cells = [
+            (a, s, m) for (a, s, m) in cells
+            if not (RESULTS_DIR / f"{a}__{s}__{m}.json").exists()
+        ]
+    print(f"{len(cells)} cells to run")
+    procs = []
+    results = []
+
+    def drain(block_until_below: int):
+        while len(procs) >= max(block_until_below, 1):
+            for p, tag in list(procs):
+                if p.poll() is not None:
+                    procs.remove((p, tag))
+                    results.append((tag, p.returncode))
+                    status = "OK" if p.returncode == 0 else f"FAIL({p.returncode})"
+                    print(f"  [{len(results)}/{len(cells)}] {tag}: {status}", flush=True)
+            time.sleep(1.0)
+
+    for a, s, m in cells:
+        drain(args.jobs)
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", a, "--shape", s, "--mesh", m,
+        ]
+        log = RESULTS_DIR / f"{a}__{s}__{m}.log"
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        p = subprocess.Popen(
+            cmd, stdout=log.open("w"), stderr=subprocess.STDOUT,
+            env={**os.environ, "PYTHONPATH": "src"},
+        )
+        procs.append((p, f"{a}x{s}x{m}"))
+    drain(1)
+    while procs:
+        drain(1)
+    failures = [t for t, rc in results if rc != 0]
+    print(f"\ndone: {len(results) - len(failures)} ok, {len(failures)} failed")
+    for f in failures:
+        print("  FAILED:", f)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production meshes (a FUNCTION, so importing never touches device state)."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single-pod 16x16 (256 chips) or 2-pod 2x16x16 (512 chips).
+
+    The "pod" axis extends data parallelism across the inter-pod links
+    (DCN-class); "data" x "model" map onto the intra-pod ICI torus.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    assert n % model_parallel == 0
+    return jax.make_mesh(
+        (n // model_parallel, model_parallel),
+        ("data", "model"),
+        axis_types=(AxisType.Auto, AxisType.Auto),
+    )

@@ -1,0 +1,5 @@
+"""Model zoo: the 10 assigned architectures behind one API."""
+
+from repro.models.api import Model, build_model, input_specs
+
+__all__ = ["Model", "build_model", "input_specs"]

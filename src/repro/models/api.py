@@ -1,0 +1,111 @@
+"""Public model API: build_model(cfg) -> Model bundle + input_specs.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins for every model input
+of a given (shape kind) cell — weak-type-correct, shardable, and never
+allocating device memory.  Decode cache specs are derived with
+jax.eval_shape over the prefill function, so they are consistent with the
+real cache structure by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec as ED
+from repro.models import lm as LM
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    train_loss: Callable          # (params, batch) -> scalar loss
+    prefill: Callable             # (params, batch) -> (logits, cache)
+    decode_step: Callable         # (params, batch{token,pos,cache}) -> (logits, cache)
+
+    def input_specs(self, shape: ShapeConfig, batch_override: Optional[int] = None) -> Dict:
+        return input_specs(self.cfg, shape, batch_override)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init=functools.partial(ED.encdec_init, cfg=cfg),
+            train_loss=functools.partial(ED.train_loss, cfg),
+            prefill=functools.partial(ED.prefill, cfg),
+            decode_step=functools.partial(ED.decode_step, cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init=functools.partial(LM.lm_init, cfg=cfg),
+        train_loss=functools.partial(LM.train_loss, cfg),
+        prefill=functools.partial(LM.prefill, cfg),
+        decode_step=functools.partial(LM.decode_step, cfg),
+    )
+
+
+def _frontend_specs(cfg: ModelConfig, B: int) -> Dict:
+    """Stub modality frontends: precomputed frame/patch embeddings."""
+    act = jnp.dtype(cfg.activation_dtype)
+    if cfg.family == "encdec":
+        return {
+            "audio_embed": jax.ShapeDtypeStruct((B, cfg.enc_positions, cfg.d_model), act)
+        }
+    if cfg.family == "vlm":
+        return {"patches": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.d_model), act)}
+    return {}
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, batch_override: Optional[int] = None
+) -> Dict:
+    """ShapeDtypeStruct inputs for one grid cell.
+
+    train  -> {tokens, labels, frontend...}
+    prefill-> {tokens, frontend...}
+    decode -> {token, pos, cache} with a seq_len-deep cache.
+    """
+    B = batch_override or shape.global_batch
+    i32 = jnp.int32
+
+    if shape.kind == "train":
+        T = shape.seq_len
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            "labels": jax.ShapeDtypeStruct((B, T), i32),
+        }
+        specs.update(_frontend_specs(cfg, B))
+        return specs
+
+    if shape.kind == "prefill":
+        T = shape.seq_len
+        if cfg.family == "vlm":
+            T = max(T - cfg.n_patches, 1)   # patches occupy context slots
+        specs = {"tokens": jax.ShapeDtypeStruct((B, T), i32)}
+        specs.update(_frontend_specs(cfg, B))
+        return specs
+
+    # decode: cache specs come from eval_shape over prefill at depth seq_len.
+    model = build_model(cfg)
+    pre_shape = dataclasses.replace(shape, kind="prefill")
+    pre_specs = input_specs(cfg, pre_shape, batch_override=B)
+    _, cache_spec = jax.eval_shape(model.prefill, _params_spec(cfg), pre_specs)
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+        "cache": cache_spec,
+    }
+
+
+@functools.lru_cache(maxsize=32)
+def _params_spec(cfg: ModelConfig):
+    """Abstract parameter tree (no allocation)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda k: model.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))

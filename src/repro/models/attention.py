@@ -1,0 +1,439 @@
+"""GQA attention: global/local/bidirectional/cross, train + cached decode.
+
+Full-sequence paths use a blockwise online-softmax (nested lax.scan over
+query and key blocks), so the T x T score matrix is never materialized —
+required for the 32k-prefill shapes (a 32k x 32k fp32 score tensor per
+head would not fit HBM).  This pure-jnp implementation is also the oracle
+for the Pallas flash-attention kernel (repro.kernels.flash_attention).
+
+Layouts:
+  q:        (B, T, K, G, hd)   with H = K * G  (G = query groups per KV head)
+  k, v:     (B, S, K, hd)
+  caches:   global (B, K, S, hd) absolute-position slots;
+            local  (B, K, W, hd) shift-ring (roll per step).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import init_dense, rmsnorm, rope, softcap
+
+NEG = -1e30
+
+
+def _attn_impl() -> str:
+    """"blockwise" (paper-faithful baseline: pure-XLA online softmax) or
+    "flash" (optimized: Pallas kernel on TPU / opaque stand-in in the
+    dry-run / blockwise fallback on CPU tests)."""
+    return os.environ.get("REPRO_ATTN_IMPL", "blockwise")
+
+
+def _kv_int8() -> bool:
+    """int8 fast-tier KV cache (the AR² adaptation) for decode cells."""
+    return os.environ.get("REPRO_KV_INT8", "0") == "1"
+
+
+def seq_parallel_mode() -> bool:
+    """Megatron-SP residual stream: active alongside the flash kernel
+    (whose queries are context-parallel over the "model" axis), so
+    norms/elementwise run on T/TP tokens and projection outputs
+    reduce-scatter instead of all-reduce."""
+    return _attn_impl() == "flash"
+
+
+def _flash_dispatch(cfg, q, k, v, causal, window):
+    """Returns o or None (caller falls back to blockwise)."""
+    if _attn_impl() != "flash":
+        return None
+    from repro.kernels import opaque
+
+    if opaque.opaque_mode():
+        return opaque.make_flash_opaque(causal, window)(q, k, v)
+    if jax.default_backend() == "tpu":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(
+            q, k, v, causal=causal, window=window, softcap=cfg.attn_softcap
+        )
+    return None  # CPU numerics: blockwise reference
+
+
+def attn_init(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], (d, H, hd)),
+        "wk": init_dense(ks[1], (d, K, hd)),
+        "wv": init_dense(ks[2], (d, K, hd)),
+        "wo": init_dense(ks[3], (H, hd, d), in_dims=2),
+    }
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.zeros((hd,), jnp.float32)
+        p["k_scale"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x, kv_x=None):
+    """-> q (B,T,K,G,hd), k/v (B,S,K,hd) before rope."""
+    dt = x.dtype
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    src = x if kv_x is None else kv_x
+    k = jnp.einsum("bsd,dnk->bsnk", src, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dnk->bsnk", src, p["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_scale"])
+        k = rmsnorm(k, p["k_scale"])
+    B, T = q.shape[:2]
+    q = q.reshape(B, T, K, G, q.shape[-1])
+    return q, k, v
+
+
+def _merge_out(cfg: ModelConfig, p, o):
+    """o: (B,T,K,G,hd) -> (B,T,d)."""
+    B, T = o.shape[:2]
+    o = o.reshape(B, T, cfg.n_heads, o.shape[-1])
+    return jnp.einsum("bthk,hkd->btd", o, p["wo"].astype(o.dtype))
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _online_softmax_block(q, kb, vb, bias, scale, cap):
+    """One (q-block, kv-block) tile. q: (B,K,G,bq,hd); kb/vb: (B,bk,K,hd)."""
+    s = jnp.einsum(
+        "bkgqh,bskh->bkgqs", q, kb, preferred_element_type=jnp.float32
+    ) * scale
+    s = softcap(s, cap)
+    s = s + bias  # (bq, bk) or broadcastable
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(vb.dtype), vb)
+    return m, l, o
+
+
+def blockwise_attention(
+    cfg: ModelConfig,
+    q,                      # (B, T, K, G, hd), already roped
+    k, v,                   # (B, S, K, hd), already roped
+    q_positions,            # (T,) int32 absolute positions
+    kv_positions,           # (S,) int32 (NEG-masked entries < 0)
+    causal: bool,
+    window: Optional[int] = None,
+    bq: int = 512,
+    bk: int = 1024,
+) -> jax.Array:
+    """Nested-scan online-softmax attention. Returns (B, T, K, G, hd)."""
+    B, T, K, G, hd = q.shape
+    S = k.shape[1]
+    scale = hd**-0.5
+    cap = cfg.attn_softcap
+    bq = min(bq, max(T, 1))
+    bk = min(bk, max(S, 1))
+
+    qp = _pad_to(q_positions, bq, 0)
+    kp = _pad_to(jnp.where(kv_positions < 0, -1, kv_positions), bk, 0)
+    # Mark key padding invalid.
+    kp = jnp.where(jnp.arange(kp.shape[0]) < S, kp, -1)
+    kp = jnp.where(kv_positions.shape[0] == kp.shape[0], kp, kp)
+    q_pad = _pad_to(q, bq, 1)
+    k_pad = _pad_to(k, bk, 1)
+    v_pad = _pad_to(v, bk, 1)
+    nq, nk = q_pad.shape[1] // bq, k_pad.shape[1] // bk
+
+    q_blocks = q_pad.reshape(B, nq, bq, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    qp_blocks = qp.reshape(nq, bq)
+    k_blocks = k_pad.reshape(B, nk, bk, K, hd).transpose(1, 0, 2, 3, 4)
+    v_blocks = v_pad.reshape(B, nk, bk, K, hd).transpose(1, 0, 2, 3, 4)
+    kp_blocks = kp.reshape(nk, bk)
+
+    def q_step(_, q_in):
+        qb, qpos = q_in  # (B,K,G,bq,hd), (bq,)
+
+        # flash-attention discipline: never keep the per-tile probability
+        # matrix for the backward pass — recompute it (jax.checkpoint on
+        # the tile body), otherwise the scan linearization stores
+        # O(T^2 / bq / bk) tiles and blows HBM.
+        @jax.checkpoint
+        def kv_step(carry, kv_in):
+            m, l, acc = carry
+            kb, vb, kpos = kv_in
+            bias = jnp.where(kpos[None, :] >= 0, 0.0, NEG)
+            if causal:
+                bias = bias + jnp.where(kpos[None, :] <= qpos[:, None], 0.0, NEG)
+            if window is not None:
+                bias = bias + jnp.where(
+                    qpos[:, None] - kpos[None, :] < window, 0.0, NEG
+                )
+            mb, lb, ob = _online_softmax_block(qb, kb, vb, bias, scale, cap)
+            m_new = jnp.maximum(m, mb)
+            c_old = jnp.exp(m - m_new)
+            c_blk = jnp.exp(mb - m_new)
+            l_new = l * c_old + lb * c_blk
+            acc_new = acc * c_old[..., None] + ob * c_blk[..., None]
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((B, K, G, bq), NEG, jnp.float32),
+            jnp.zeros((B, K, G, bq), jnp.float32),
+            jnp.zeros((B, K, G, bq, hd), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (k_blocks, v_blocks, kp_blocks))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, o_blocks = jax.lax.scan(jax.checkpoint(q_step), None, (q_blocks, qp_blocks))
+    # (nq, B, K, G, bq, hd) -> (B, T, K, G, hd)
+    o = o_blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, K, G, hd)
+    return o[:, :T]
+
+
+def windowed_attention(
+    cfg: ModelConfig,
+    q, k, v,
+    q_positions,
+    causal_window: int,
+    bq: int = 256,
+) -> jax.Array:
+    """Local (sliding-window) attention: each q block attends to a slice
+    [start, start + window + bq) of the left-padded K/V — O(T * window)
+    instead of O(T^2)."""
+    B, T, K, G, hd = q.shape
+    w = causal_window
+    scale = hd**-0.5
+    cap = cfg.attn_softcap
+    bq = min(bq, T)
+
+    q_pad = _pad_to(q, bq, 1)
+    qp = _pad_to(q_positions, bq, 0)
+    nq = q_pad.shape[1] // bq
+
+    # Left-pad keys by window so the slice for q block i starts at i*bq.
+    k_pad = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    v_pad = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    kpos_full = jnp.concatenate(
+        [jnp.full((w,), -1, jnp.int32), jnp.arange(T, dtype=jnp.int32)]
+    )
+    span = w + bq
+
+    q_blocks = q_pad.reshape(B, nq, bq, K, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    qp_blocks = qp.reshape(nq, bq)
+
+    @jax.checkpoint
+    def q_step(_, q_in):
+        i, qb, qpos = q_in
+        start = i * bq
+        kb = jax.lax.dynamic_slice_in_dim(k_pad, start, span, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v_pad, start, span, axis=1)
+        kpos = jax.lax.dynamic_slice_in_dim(kpos_full, start, span, axis=0)
+        bias = jnp.where(kpos[None, :] >= 0, 0.0, NEG)
+        bias = bias + jnp.where(kpos[None, :] <= qpos[:, None], 0.0, NEG)
+        bias = bias + jnp.where(qpos[:, None] - kpos[None, :] < w, 0.0, NEG)
+        m, l, o = _online_softmax_block(qb, kb, vb, bias, scale, cap)
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return None, out.astype(q.dtype)
+
+    idx = jnp.arange(nq, dtype=jnp.int32)
+    _, o_blocks = jax.lax.scan(q_step, None, (idx, q_blocks, qp_blocks))
+    o = o_blocks.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * bq, K, G, hd)
+    return o[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# int8 KV tier (AR² adaptation): per-page symmetric quantization over hd.
+# ---------------------------------------------------------------------------
+
+
+def _quant_kv(x):
+    """x (..., hd) -> (int8 data, f32 scales (..., 1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _maybe_quantize_cache(cache: dict) -> dict:
+    if not _kv_int8():
+        return cache
+    kq, ks = _quant_kv(cache["k"])
+    vq, vs = _quant_kv(cache["v"])
+    return {"k": kq, "k_s": ks, "v": vq, "v_s": vs}
+
+
+# ---------------------------------------------------------------------------
+# Public layer entry points.
+# ---------------------------------------------------------------------------
+
+
+def attention_fullseq(
+    cfg: ModelConfig,
+    p: dict,
+    x,                         # (B, T, d)
+    positions,                 # (T,)
+    kind: str,                 # "causal" | "local" | "bidir" | "cross"
+    enc_out=None,              # (B, S, d) for cross
+    enc_positions=None,
+    return_cache: bool = True,
+    cache_len: Optional[int] = None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    q, k, v = _project_qkv(cfg, p, x, kv_x=enc_out)
+    kv_pos = positions if enc_out is None else enc_positions
+    q = rope(q.reshape(q.shape[:2] + (-1, q.shape[-1])), positions, cfg.rope_theta).reshape(q.shape)
+    if kind != "cross":
+        k = rope(k, kv_pos, cfg.rope_theta)
+    # Sequence-parallel mode keeps q context-sharded end to end (None on T
+    # would force a full-T re-gather just for the kernel to re-slice it).
+    q_t = "act_seq" if seq_parallel_mode() else None
+    q = constrain(q, ("batch", q_t, "kv_heads", None, None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    v = constrain(v, ("batch", None, "kv_heads", None))
+    if kind == "local":
+        o = _flash_dispatch(cfg, q, k, v, causal=True, window=cfg.window)
+        if o is None:
+            o = windowed_attention(cfg, q, k, v, positions, cfg.window)
+    else:
+        causal = kind == "causal"
+        o = _flash_dispatch(cfg, q, k, v, causal=causal, window=None)
+        if o is None:
+            o = blockwise_attention(cfg, q, k, v, positions, kv_pos, causal=causal)
+    if seq_parallel_mode():
+        # keep the kernel's context-parallel layout through the output
+        # projection (wo contracts heads only), so o is never re-gathered.
+        o = constrain(o, ("batch", "act_seq", None, None, None))
+    y = _merge_out(cfg, p, o)
+    if not return_cache:
+        return y, None
+    if kind == "local":
+        w = cfg.window
+        kc = k[:, -w:].transpose(0, 2, 1, 3)
+        vc = v[:, -w:].transpose(0, 2, 1, 3)
+        if kc.shape[2] < w:  # left-pad ring to full window
+            pad = w - kc.shape[2]
+            kc = jnp.pad(kc, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+        cache = {"k": kc, "v": vc}
+    elif kind == "cross":
+        cache = {"k": k.transpose(0, 2, 1, 3), "v": v.transpose(0, 2, 1, 3)}
+    else:
+        kc = k.transpose(0, 2, 1, 3)
+        vc = v.transpose(0, 2, 1, 3)
+        if cache_len is not None and cache_len > kc.shape[2]:
+            # Headroom for subsequent decode steps (decode writes at pos).
+            pad = cache_len - kc.shape[2]
+            kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        cache = {"k": kc, "v": vc}
+    return y, _maybe_quantize_cache(cache)
+
+
+def attention_decode(
+    cfg: ModelConfig,
+    p: dict,
+    x,                       # (B, 1, d)
+    cache: dict,             # {"k": (B,K,S|W,hd), "v": ...}
+    pos,                     # scalar int32: index of the new token
+    kind: str,               # "causal" | "local" | "cross"
+) -> Tuple[jax.Array, dict]:
+    dt = x.dtype
+    K = cfg.n_kv_heads
+    G = cfg.n_heads // K
+    hd = cfg.resolved_head_dim
+    B = x.shape[0]
+
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"].astype(dt))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_scale"])
+    q = rope(q, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+    q = q.reshape(B, 1, K, G, hd)
+
+    int8_cache = "k_s" in cache
+    scales = None
+    if kind == "cross":
+        ck, cv = cache["k"], cache["v"]           # static (B,K,S,hd)
+        S = ck.shape[2]
+        valid = jnp.ones((S,), bool)
+        new_cache = cache
+        if int8_cache:
+            scales = (cache["k_s"], cache["v_s"])
+    else:
+        knew = jnp.einsum("btd,dnk->btnk", x, p["wk"].astype(dt))
+        vnew = jnp.einsum("btd,dnk->btnk", x, p["wv"].astype(dt))
+        if cfg.qk_norm:
+            knew = rmsnorm(knew, p["k_scale"])
+        knew = rope(knew, jnp.full((1,), pos, jnp.int32), cfg.rope_theta)
+        knew = knew.transpose(0, 2, 1, 3)          # (B,K,1,hd)
+        vnew = vnew.transpose(0, 2, 1, 3)
+        if int8_cache:
+            knew, ks_new = _quant_kv(knew)
+            vnew, vs_new = _quant_kv(vnew)
+        if kind == "local":
+            # Shift-ring: slot W-1 always holds the newest token.
+            ck = jnp.concatenate([cache["k"][:, :, 1:], knew], axis=2)
+            cv = jnp.concatenate([cache["v"][:, :, 1:], vnew], axis=2)
+            W = ck.shape[2]
+            n_valid = jnp.minimum(pos + 1, W)
+            valid = jnp.arange(W) >= (W - n_valid)
+            if int8_cache:
+                scales = (
+                    jnp.concatenate([cache["k_s"][:, :, 1:], ks_new], axis=2),
+                    jnp.concatenate([cache["v_s"][:, :, 1:], vs_new], axis=2),
+                )
+        else:
+            dus = functools.partial(
+                jax.lax.dynamic_update_slice_in_dim, start_index=pos, axis=2
+            )
+            ck = dus(cache["k"], update=knew)
+            cv = dus(cache["v"], update=vnew)
+            S = ck.shape[2]
+            valid = jnp.arange(S) <= pos
+            if int8_cache:
+                scales = (
+                    dus(cache["k_s"], update=ks_new),
+                    dus(cache["v_s"], update=vs_new),
+                )
+        new_cache = {"k": ck, "v": cv}
+        if int8_cache:
+            new_cache["k_s"], new_cache["v_s"] = scales
+
+    from repro.kernels import opaque as OPQ
+
+    if _attn_impl() == "flash" and OPQ.opaque_mode():
+        # Fused KV-read + attend: one opaque call whose operand bytes are
+        # the honest HBM traffic (int8 fast tier when enabled — AR²).
+        o = OPQ.decode_attention_opaque(
+            q, ck, cv, pos, int8=int8_cache, scales=scales
+        )
+    else:
+        if int8_cache:
+            ck = _dequant_kv(ck, scales[0], dt)
+            cv = _dequant_kv(cv, scales[1], dt)
+        s = jnp.einsum(
+            "bqkgh,bksh->bkgqs", q, ck, preferred_element_type=jnp.float32
+        ) * (hd**-0.5)
+        s = softcap(s, cfg.attn_softcap)
+        s = jnp.where(valid[None, None, None, None, :], s, NEG)
+        w = jax.nn.softmax(s, axis=-1).astype(dt)
+        o = jnp.einsum("bkgqs,bksh->bqkgh", w, cv)
+    y = _merge_out(cfg, p, o)
+    return y, new_cache

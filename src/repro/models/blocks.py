@@ -1,0 +1,151 @@
+"""Residual block dispatch: one init/apply pair per block kind.
+
+Every layer is (norm -> temporal mixer -> residual) + (norm -> FFN ->
+residual); the mixer is the block kind from the config pattern (global/
+local attention, SSD, RG-LRU).  MoE layers replace the dense FFN.  The
+whisper decoder adds a cross-attention sub-block.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ENC_ATTN, LOCAL, RGLRU, SSM, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as A
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import ssm as SSMM
+from repro.models.common import apply_norm, mlp_apply, mlp_init, norm_init
+
+
+def _sp(x):
+    """Sequence-parallel residual stream (flash/Megatron-SP mode only):
+    elementwise + norms run on T/TP tokens; projection outputs
+    reduce-scatter into this layout instead of all-reducing."""
+    if A.seq_parallel_mode():
+        return constrain(x, ("batch", "act_seq", None))
+    return x
+
+
+def _is_attn(kind: str) -> bool:
+    return kind in (ATTN, LOCAL, ENC_ATTN)
+
+
+def block_init(
+    key, cfg: ModelConfig, kind: str, moe_here: bool, cross: bool = False
+) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p: dict = {"ln1": norm_init(cfg, d)}
+    if _is_attn(kind):
+        p["attn"] = A.attn_init(ks[0], cfg)
+    elif kind == SSM:
+        p["ssm"] = SSMM.ssm_init(ks[0], cfg)
+    elif kind == RGLRU:
+        p["rglru"] = RG.rglru_init(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["lnx"] = norm_init(cfg, d)
+        p["xattn"] = A.attn_init(ks[1], cfg)
+    if kind != SSM:  # SSD blocks are the whole mixer+channel layer
+        p["ln2"] = norm_init(cfg, d)
+        if moe_here:
+            p["moe"] = MOE.moe_init(ks[2], cfg, cfg.moe)
+        else:
+            p["mlp"] = mlp_init(ks[2], cfg, d, cfg.d_ff)
+    return p
+
+
+def block_fullseq(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x,
+    positions,
+    mode: str,                      # "train" | "prefill"
+    enc_out=None,
+    enc_positions=None,
+    cache_len=None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """Full-sequence block application; returns (x, cache or None)."""
+    want_cache = mode == "prefill"
+    cache: dict = {}
+    h = apply_norm(cfg, p["ln1"], x)
+    if _is_attn(kind):
+        attn_kind = {ATTN: "causal", LOCAL: "local", ENC_ATTN: "bidir"}[kind]
+        y, c = A.attention_fullseq(
+            cfg, p["attn"], h, positions, attn_kind, return_cache=want_cache,
+            cache_len=cache_len,
+        )
+        if want_cache:
+            cache["attn"] = c
+    elif kind == SSM:
+        y, c = SSMM.ssm_fullseq(cfg, p["ssm"], h, return_cache=want_cache)
+        if want_cache:
+            cache["ssm"] = c
+        return x + y, cache or None
+    else:  # RGLRU
+        y, c = RG.rglru_fullseq(cfg, p["rglru"], h, return_cache=want_cache)
+        if want_cache:
+            cache["rglru"] = c
+    x = _sp(x + y)
+    if "xattn" in p:
+        h = apply_norm(cfg, p["lnx"], x)
+        y, c = A.attention_fullseq(
+            cfg, p["xattn"], h, positions, "cross",
+            enc_out=enc_out, enc_positions=enc_positions,
+            return_cache=want_cache,
+        )
+        if want_cache:
+            cache["xattn"] = c
+        x = _sp(x + y)
+    h = apply_norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        if mode == "train":
+            y, aux = MOE.moe_apply(cfg, cfg.moe, p["moe"], h, with_aux=True)
+            cache["aux"] = aux
+        else:
+            y = MOE.moe_apply(cfg, cfg.moe, p["moe"], h)
+    else:
+        y = mlp_apply(cfg, p["mlp"], h)
+    return _sp(x + y), (cache or None)
+
+
+def block_decode(
+    cfg: ModelConfig,
+    kind: str,
+    p: dict,
+    x,
+    cache: dict,
+    pos,
+) -> Tuple[jax.Array, dict]:
+    new_cache: dict = {}
+    h = apply_norm(cfg, p["ln1"], x)
+    if _is_attn(kind):
+        attn_kind = "local" if kind == LOCAL else "causal"
+        y, c = A.attention_decode(cfg, p["attn"], h, cache["attn"], pos, attn_kind)
+        new_cache["attn"] = c
+    elif kind == SSM:
+        y, c = SSMM.ssm_decode(cfg, p["ssm"], h, cache["ssm"])
+        new_cache["ssm"] = c
+        return x + y, new_cache
+    else:
+        y, c = RG.rglru_decode(cfg, p["rglru"], h, cache["rglru"])
+        new_cache["rglru"] = c
+    x = x + y
+    if "xattn" in p:
+        h = apply_norm(cfg, p["lnx"], x)
+        y, c = A.attention_decode(cfg, p["xattn"], h, cache["xattn"], pos, "cross")
+        new_cache["xattn"] = c
+        x = x + y
+    h = apply_norm(cfg, p["ln2"], x)
+    if "moe" in p:
+        y = MOE.moe_apply(cfg, cfg.moe, p["moe"], h)
+    else:
+        y = mlp_apply(cfg, p["mlp"], h)
+    return x + y, new_cache

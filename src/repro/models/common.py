@@ -1,0 +1,157 @@
+"""Shared model primitives: norms, RoPE, MLPs, embeddings, losses."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig, kind: str = "param"):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.activation_dtype)
+
+
+def init_dense(key, shape, scale: Optional[float] = None, in_dims: int = 1):
+    """Truncated-normal fan-in init (stddev 1/sqrt(fan_in) by default)."""
+    fan_in = 1
+    for s in shape[:in_dims]:
+        fan_in *= s
+    stddev = scale if scale is not None else fan_in**-0.5
+    return stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+# -- norms -------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# -- rotary embeddings ---------------------------------------------------------
+
+
+def rope(x, positions, theta: float):
+    """Apply rotary embedding; x: (..., seq, heads, head_dim), positions: (seq,) or (..., seq)."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    ang = ang[..., None, :]                                  # broadcast heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -- MLPs ----------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d: int, ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wi": init_dense(k1, (d, ff)),
+            "wg": init_dense(k2, (d, ff)),
+            "wd": init_dense(k3, (ff, d)),
+        }
+    return {"wi": init_dense(k1, (d, ff)), "wd": init_dense(k3, (ff, d))}
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    from repro.distributed.sharding import constrain
+
+    dt = x.dtype
+    h = jnp.einsum("btd,df->btf", x, p["wi"].astype(dt))
+    if cfg.mlp in ("swiglu", "geglu"):
+        g = jnp.einsum("btd,df->btf", x, p["wg"].astype(dt))
+        act = jax.nn.silu if cfg.mlp == "swiglu" else jax.nn.gelu
+        h = act(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", None, "ff"))
+    return jnp.einsum("btf,fd->btd", h, p["wd"].astype(dt))
+
+
+# -- embeddings / head ---------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig):
+    p = {"embed": 0.02 * jax.random.normal(key, (cfg.vocab, cfg.d_model), jnp.float32)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_dense(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab)
+        )
+    return p
+
+
+def embed_apply(cfg: ModelConfig, p, tokens):
+    x = p["embed"][tokens].astype(dtype_of(cfg, "act"))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def logits_apply(cfg: ModelConfig, p, x):
+    from repro.distributed.sharding import constrain
+
+    w = p["embed"].T if cfg.tie_embeddings else p["unembed"]
+    logits = jnp.einsum(
+        "btd,dv->btv", x, w.astype(x.dtype), preferred_element_type=jnp.float32
+    )
+    logits = constrain(logits, ("batch", None, "vocab"))
+    return softcap(logits, cfg.final_softcap)
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token cross-entropy in fp32; mask: 1.0 = count this position.
+
+    Written so a vocab-sharded logits tensor never gets all-gathered:
+    logsumexp and the gold-logit pick are both reductions over the vocab
+    dim (select+reduce fuses; XLA turns them into partial reductions +
+    a scalar all-reduce across the model axis).
+    """
+    logits = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1)) + m[..., 0]
+    onehot = labels[..., None] == jnp.arange(logits.shape[-1], dtype=labels.dtype)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,130 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend is a stub).
+
+Encoder: precomputed frame embeddings (the stub frontend output per the
+task block) + sinusoidal positions -> n_enc_layers bidirectional blocks.
+Decoder: token embeddings + learned positions -> n_layers blocks with
+causal self-attention and cross-attention over the encoder output.
+LayerNorm + GELU MLP, tied unembedding (whisper convention).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ENC_ATTN, ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import blocks as B
+from repro.models.common import (
+    apply_norm,
+    cross_entropy,
+    dtype_of,
+    embed_apply,
+    embed_init,
+    logits_apply,
+    norm_init,
+)
+
+
+def sinusoids(length: int, channels: int):
+    """Whisper's sinusoidal position embedding."""
+    log_timescale = jnp.log(10000.0) / (channels // 2 - 1)
+    inv = jnp.exp(-log_timescale * jnp.arange(channels // 2, dtype=jnp.float32))
+    t = jnp.arange(length, dtype=jnp.float32)[:, None] * inv[None, :]
+    return jnp.concatenate([jnp.sin(t), jnp.cos(t)], axis=1)
+
+
+def encdec_init(key, cfg: ModelConfig) -> dict:
+    ek, dk, pk, emk = jax.random.split(key, 4)
+
+    enc_units = cfg.n_enc_layers  # uniform pattern: one block per unit
+    dec_units = cfg.unit_count()
+
+    def enc_unit(k):
+        return {"b0": B.block_init(k, cfg, ENC_ATTN, False)}
+
+    def dec_unit(k):
+        return {"b0": B.block_init(k, cfg, ATTN, False, cross=True)}
+
+    return {
+        "embed_p": embed_init(emk, cfg),
+        "pos_embed": 0.01 * jax.random.normal(
+            pk, (cfg.max_positions, cfg.d_model), jnp.float32
+        ),
+        "enc_units": jax.vmap(enc_unit)(jax.random.split(ek, enc_units)),
+        "enc_norm": norm_init(cfg, cfg.d_model),
+        "dec_units": jax.vmap(dec_unit)(jax.random.split(dk, dec_units)),
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+
+
+def encode(cfg: ModelConfig, params, audio_embed):
+    """audio_embed: (B, S, d) stub-frontend output -> (B, S, d)."""
+    S = audio_embed.shape[1]
+    x = audio_embed.astype(dtype_of(cfg, "act"))
+    x = x + sinusoids(S, cfg.d_model).astype(x.dtype)[None]
+    x = constrain(x, ("batch", None, None))
+    positions = jnp.arange(S, dtype=jnp.int32)
+
+    def body(carry, unit_p):
+        h, _ = B.block_fullseq(cfg, ENC_ATTN, unit_p["b0"], carry, positions, "train")
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_units"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def _decoder_fullseq(cfg, params, tokens, enc_out, mode: str, cache_len=None):
+    T = tokens.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x = embed_apply(cfg, params["embed_p"], tokens)
+    x = x + params["pos_embed"][:T].astype(x.dtype)[None]
+    x = constrain(x, ("batch", None, None))
+    enc_positions = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(carry, unit_p):
+        h, cache = B.block_fullseq(
+            cfg, ATTN, unit_p["b0"], carry, positions, mode,
+            enc_out=enc_out, enc_positions=enc_positions, cache_len=cache_len,
+        )
+        return h, ({"b0": cache} if mode == "prefill" else None)
+
+    x, caches = jax.lax.scan(body, x, params["dec_units"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, caches
+
+
+def train_loss(cfg: ModelConfig, params, batch) -> jax.Array:
+    enc_out = encode(cfg, params, batch["audio_embed"])
+    x, _ = _decoder_fullseq(cfg, params, batch["tokens"], enc_out, "train")
+    logits = logits_apply(cfg, params["embed_p"], x)
+    return cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len=None):
+    enc_out = encode(cfg, params, batch["audio_embed"])
+    x, caches = _decoder_fullseq(
+        cfg, params, batch["tokens"], enc_out, "prefill", cache_len
+    )
+    logits = logits_apply(cfg, params["embed_p"], x[:, -1:])
+    return logits, {"units": caches}
+
+
+def decode_step(cfg: ModelConfig, params, batch):
+    pos = batch["pos"]
+    x = embed_apply(cfg, params["embed_p"], batch["token"])
+    x = x + jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], pos, 1, axis=0
+    ).astype(x.dtype)[None]
+
+    def body(carry, xs):
+        unit_p, cache_in = xs
+        h, c = B.block_decode(cfg, ATTN, unit_p["b0"], carry, cache_in["b0"], pos)
+        return h, {"b0": c}
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec_units"], batch["cache"]["units"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_apply(cfg, params["embed_p"], x)
+    return logits, {"units": new_caches}

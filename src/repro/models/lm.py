@@ -1,0 +1,190 @@
+"""Decoder-only LM assembled from the block pattern.
+
+Layers are stacked by scanning over repeated pattern *units* (e.g. gemma2
+scans 13 units of [local, global]); unit parameters carry a leading U dim.
+Compile time is therefore O(pattern) not O(n_layers) — a 95-layer model
+lowers as fast as a 2-layer one.  Remat (jax.checkpoint) wraps each unit
+in training.  A remainder tail (recurrentgemma: 26 = 8*3 + 2) runs
+unscanned after the scan.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import blocks as B
+from repro.models.common import (
+    apply_norm,
+    cross_entropy,
+    dtype_of,
+    embed_apply,
+    embed_init,
+    logits_apply,
+    norm_init,
+)
+
+
+def _moe_here(cfg: ModelConfig, member_idx: int) -> bool:
+    if cfg.moe is None:
+        return False
+    il = cfg.moe.interleave
+    return member_idx % il == il - 1
+
+
+def lm_init(key, cfg: ModelConfig) -> dict:
+    U = cfg.unit_count()
+    pattern = cfg.block_pattern
+
+    def unit_init(k):
+        ks = jax.random.split(k, len(pattern))
+        return {
+            f"b{i}": B.block_init(ks[i], cfg, kind, _moe_here(cfg, i))
+            for i, kind in enumerate(pattern)
+        }
+
+    keys = jax.random.split(jax.random.fold_in(key, 1), U)
+    params = {
+        "embed_p": embed_init(jax.random.fold_in(key, 0), cfg),
+        "units": jax.vmap(unit_init)(keys),
+        "final_norm": norm_init(cfg, cfg.d_model),
+    }
+    tail = cfg.tail_pattern()
+    if tail:
+        tks = jax.random.split(jax.random.fold_in(key, 2), len(tail))
+        params["tail"] = [
+            B.block_init(tks[i], cfg, kind, _moe_here(cfg, i))
+            for i, kind in enumerate(tail)
+        ]
+    return params
+
+
+def _unit_fullseq(cfg, unit_p, x, positions, mode, cache_len=None):
+    caches = {}
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(cfg.block_pattern):
+        x, c = B.block_fullseq(cfg, kind, unit_p[f"b{i}"], x, positions, mode,
+                               cache_len=cache_len)
+        if mode == "prefill":
+            caches[f"b{i}"] = c
+        elif c is not None and "aux" in c:
+            aux = aux + c["aux"]
+    if mode == "train":
+        return x, aux
+    return x, caches
+
+
+def backbone_fullseq(cfg: ModelConfig, params, x, positions, mode: str, cache_len=None):
+    """x: (B,T,d) embedded input -> (x_out, cache_pytree|None)."""
+    x = constrain(x, ("batch", None, None))
+
+    if mode == "train":
+        def body(carry, unit_p):
+            h, aux_in = carry
+            # Sequence-parallel unit boundary: the remat-saved carry is
+            # sharded over ("model",) along seq, shrinking saved
+            # activations by the TP degree (16x on the production mesh).
+            h = constrain(h, ("batch", "act_seq", None))
+            h, aux = jax.checkpoint(
+                lambda hh, pp: _unit_fullseq(cfg, pp, hh, positions, "train"),
+            )(h, unit_p)
+            return (h, aux_in + aux), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["units"])
+        caches = None
+    else:
+        def body(carry, unit_p):
+            h, cache = _unit_fullseq(cfg, unit_p, carry, positions, "prefill", cache_len)
+            return h, cache
+        x, caches = jax.lax.scan(body, x, params["units"])
+
+    tail_caches = []
+    for i, kind in enumerate(cfg.tail_pattern()):
+        x, c = B.block_fullseq(cfg, kind, params["tail"][i], x, positions, mode,
+                               cache_len=cache_len)
+        tail_caches.append(c)
+    if mode == "train":
+        return x, aux_total
+    cache = {"units": caches}
+    if tail_caches:
+        cache["tail"] = tail_caches
+    return x, cache
+
+
+def backbone_decode(cfg: ModelConfig, params, x, cache, pos):
+    def body(carry, xs):
+        unit_p, cache_in = xs
+        h = carry
+        new_caches = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            h, c = B.block_decode(cfg, kind, unit_p[f"b{i}"], h, cache_in[f"b{i}"], pos)
+            new_caches[f"b{i}"] = c
+        return h, new_caches
+
+    x, new_unit_caches = jax.lax.scan(body, x, (params["units"], cache["units"]))
+    new_cache = {"units": new_unit_caches}
+    if "tail" in cache:
+        tail_caches = []
+        for i, kind in enumerate(cfg.tail_pattern()):
+            x, c = B.block_decode(cfg, kind, params["tail"][i], x, cache["tail"][i], pos)
+            tail_caches.append(c)
+        new_cache["tail"] = tail_caches
+    return x, new_cache
+
+
+# -- entry points ---------------------------------------------------------------
+
+
+def _embed_tokens(cfg, params, tokens):
+    return embed_apply(cfg, params["embed_p"], tokens)
+
+
+def _prepend_patches(cfg, x_tok, patches):
+    """VLM: prepend projected patch embeddings (stub frontend output)."""
+    return jnp.concatenate([patches.astype(x_tok.dtype), x_tok], axis=1)
+
+
+def train_loss(cfg: ModelConfig, params, batch) -> jax.Array:
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    n_prefix = 0
+    if cfg.family == "vlm":
+        x = _prepend_patches(cfg, x, batch["patches"])
+        n_prefix = batch["patches"].shape[1]
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x, aux = backbone_fullseq(cfg, params, x, positions, "train")
+    x = apply_norm(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    logits = logits_apply(cfg, params["embed_p"], x)
+    loss = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    if cfg.moe is not None:
+        loss = loss + 0.01 * aux   # load-balance coefficient (OLMoE uses 0.01)
+    return loss
+
+
+def prefill(cfg: ModelConfig, params, batch, cache_len=None):
+    tokens = batch["tokens"]
+    x = _embed_tokens(cfg, params, tokens)
+    if cfg.family == "vlm":
+        x = _prepend_patches(cfg, x, batch["patches"])
+    T = x.shape[1]
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x, cache = backbone_fullseq(cfg, params, x, positions, "prefill", cache_len)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_apply(cfg, params["embed_p"], x[:, -1:])
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, batch):
+    """batch: {"token": (B,1), "pos": scalar, "cache": pytree}."""
+    x = _embed_tokens(cfg, params, batch["token"])
+    x, new_cache = backbone_decode(cfg, params, x, batch["cache"], batch["pos"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_apply(cfg, params["embed_p"], x)
+    return logits, new_cache

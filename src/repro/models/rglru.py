@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (the "recurrent block" of Griffin):
+
+    x -> [gate branch: Linear(d->w) -> GeLU]
+      -> [rec branch:  Linear(d->w) -> causal conv1d(4) -> RG-LRU]
+    y = gate * rglru_out -> Linear(w->d)
+
+RG-LRU recurrence (real-gated linear recurrence unit):
+    r_t = sigmoid(a_gate(x_t));  i_t = sigmoid(x_gate(x_t))
+    log a_t = -c * softplus(Lambda) * r_t           (c = 8)
+    h_t = exp(log a_t) * h_{t-1} + sqrt(1 - exp(2 log a_t)) * (i_t * x_t)
+
+Full-sequence mode uses lax.associative_scan on the linear recurrence
+(h_t = a_t h_{t-1} + b_t is associative), giving O(T log T) depth-parallel
+training; decode carries (conv_state, h) with O(1) work per token — this
+plus the 2048-window local attention is why recurrentgemma runs long_500k.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import init_dense
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    K = cfg.rglru.d_conv
+    ks = jax.random.split(key, 6)
+    # Lambda init so a^c spans ~(0.9, 0.999) (Griffin appendix).
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9**2, 0.999**2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * _C)))   # inv-softplus
+    return {
+        "w_gate": init_dense(ks[0], (d, w)),
+        "w_rec": init_dense(ks[1], (d, w)),
+        "w_out": init_dense(ks[2], (w, d)),
+        "conv_w": 0.1 * jax.random.normal(ks[3], (K, w), jnp.float32),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lambda_p": lam,
+        "a_gate": init_dense(ks[5], (w, w)),
+        "x_gate": init_dense(jax.random.fold_in(ks[5], 1), (w, w)),
+        "a_gate_b": jnp.zeros((w,), jnp.float32),
+        "x_gate_b": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _conv(x, w, b, init_state=None):
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = init_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(K))
+    new_state = xp[:, -(K - 1) :] if K > 1 else None
+    return out + b.astype(x.dtype), new_state
+
+
+def _gates(p, x):
+    """x: (B,T,w) -> (log_a, b_t) of the recurrence h = a h + b."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["a_gate"] + p["a_gate_b"])
+    i = jax.nn.sigmoid(xf @ p["x_gate"] + p["x_gate_b"])
+    log_a = -_C * jax.nn.softplus(p["lambda_p"]) * r
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    b = beta * (i * xf)
+    return log_a, b
+
+
+def rglru_fullseq(cfg: ModelConfig, p: dict, x, return_cache: bool = True):
+    """x: (B,T,d) -> (y, cache)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"].astype(dt)))
+    u = jnp.einsum("btd,dw->btw", x, p["w_rec"].astype(dt))
+    u, conv_state = _conv(u, p["conv_w"], p["conv_b"])
+    log_a, b = _gates(p, u)
+    a = jnp.exp(log_a)
+
+    def combine(l, r):
+        a1, b1 = l
+        a2, b2 = r
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(dt)
+    y = jnp.einsum("btw,wd->btd", gate * h, p["w_out"].astype(dt))
+    if not return_cache:
+        return y, None
+    return y, {"conv": conv_state, "h": h[:, -1].astype(jnp.float32)}
+
+
+def rglru_decode(cfg: ModelConfig, p: dict, x, cache: dict):
+    """x: (B,1,d); O(1) recurrent step."""
+    dt = x.dtype
+    gate = jax.nn.gelu(jnp.einsum("btd,dw->btw", x, p["w_gate"].astype(dt)))
+    u = jnp.einsum("btd,dw->btw", x, p["w_rec"].astype(dt))
+    conv = cache["conv"]                       # (B, K-1, w)
+    window = jnp.concatenate([conv.astype(dt), u], axis=1)
+    w_ = p["conv_w"].astype(dt)
+    u_t = jnp.einsum("bkw,kw->bw", window, w_) + p["conv_b"].astype(dt)
+    log_a, b = _gates(p, u_t[:, None, :])
+    h = cache["h"] * jnp.exp(log_a[:, 0]) + b[:, 0]
+    y = jnp.einsum(
+        "btw,wd->btd", gate * h[:, None, :].astype(dt), p["w_out"].astype(dt)
+    )
+    return y, {"conv": window[:, 1:], "h": h}

@@ -1,0 +1,228 @@
+"""Mamba-2 SSD (state-space duality) block: chunked train, recurrent decode.
+
+Follows the Mamba-2 architecture (Dao & Gu, arXiv:2405.21060):
+  in_proj -> [z | xBC | dt], causal depthwise conv over xBC, scalar-decay
+  SSM per head (A scalar per head, B/C shared across heads, ngroups=1),
+  gated RMSNorm, out_proj.
+
+Training/prefill uses the chunked SSD algorithm: within a chunk the output
+is a masked (decay-weighted) quadratic form; across chunks a linear
+recurrence carries the (heads, head_dim, d_state) state — O(T * L) instead
+of O(T^2), and the inter-chunk pass is a lax.scan.  Decode carries
+(conv_state, ssm_state) and costs O(1) per token: this is why mamba2 runs
+the long_500k cell.
+
+The chunked pass is also the oracle for the Pallas kernel in
+repro.kernels.ssd_scan.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.sharding import constrain
+from repro.models.common import init_dense, rmsnorm
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ds = s.d_state
+    conv_dim = di + 2 * ds                       # xBC channels
+    ks = jax.random.split(key, 4)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba default).
+    u = jax.random.uniform(ks[2], (nh,), jnp.float32)
+    dt0 = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt0 + jnp.log(-jnp.expm1(-dt0))    # inverse softplus
+    return {
+        "in_proj": init_dense(ks[0], (d, 2 * di + 2 * ds + nh)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (s.d_conv, conv_dim), jnp.float32),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "a_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": dt_bias,
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), jnp.float32),
+        "out_proj": init_dense(ks[3], (di, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, p, u):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, ds, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    zxbcdt = jnp.einsum("btd,de->bte", u, p["in_proj"].astype(u.dtype))
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, init_state=None):
+    """Depthwise causal conv along seq. xBC: (B,T,C); w: (K,C)."""
+    K = w.shape[0]
+    if init_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = init_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)
+    out = sum(
+        xp[:, i : i + xBC.shape[1]] * w[i].astype(xBC.dtype) for i in range(K)
+    )
+    out = jax.nn.silu(out + b.astype(xBC.dtype))
+    new_state = xp[:, -(K - 1) :] if K > 1 else None
+    return out, new_state
+
+
+def _heads(cfg: ModelConfig, xBC, dt, p):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, ds, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    x = xBC[..., :di]
+    Bm = xBC[..., di : di + ds]                   # (B,T,ds)
+    Cm = xBC[..., di + ds :]                      # (B,T,ds)
+    B_, T = x.shape[:2]
+    x = x.reshape(B_, T, nh, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,T,nh)
+    A = -jnp.exp(p["a_log"])                       # (nh,) negative
+    return x, Bm, Cm, dt, A
+
+
+def ssd_chunked(x, Bm, Cm, dt, A, chunk: int):
+    """Chunked SSD scan (streaming over chunks to bound the L x L temps).
+
+    x: (B,T,nh,hd); Bm/Cm: (B,T,ds); dt: (B,T,nh); A: (nh,).
+    Returns y: (B,T,nh,hd), final_state: (B,nh,hd,ds).
+    """
+    B_, T, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // L
+
+    # Chunk-major for the scan: (nc, B, L, ...).
+    xc = jnp.moveaxis(x.reshape(B_, nc, L, nh, hd), 1, 0)
+    Bc = jnp.moveaxis(Bm.reshape(B_, nc, L, ds), 1, 0)
+    Cc = jnp.moveaxis(Cm.reshape(B_, nc, L, ds), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(B_, nc, L, nh), 1, 0)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(H, inp):
+        xk, Bk, Ck, dtk = inp                       # (B,L,nh,hd) (B,L,ds) ...
+        dA = dtk * A                                # (B,L,nh) log-decay <= 0
+        cum = jnp.cumsum(dA, axis=1)
+        total = cum[:, -1, :]                       # (B,nh)
+        # Intra-chunk quadratic with decay weighting.
+        scores = jnp.einsum(
+            "bld,bmd->blm", Ck, Bk, preferred_element_type=jnp.float32
+        )
+        decay = jnp.exp(
+            jnp.clip(cum[:, :, None, :] - cum[:, None, :, :], -60.0, 0.0)
+        )                                            # (B,L,L,nh)
+        w = scores[..., None] * decay
+        w = jnp.where(mask[None, :, :, None], w, 0.0)
+        xdt = (xk * dtk[..., None]).astype(jnp.float32)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", w, xdt)
+        # Contribution of the carried state.
+        y_inter = jnp.einsum(
+            "bld,bhpd,blh->blhp", Ck.astype(jnp.float32), H,
+            jnp.exp(jnp.clip(cum, -60.0, 0.0)),
+        )
+        # Chunk summary + recurrence.
+        seg = jnp.exp(jnp.clip(total[:, None, :] - cum, -60.0, 0.0))
+        S = jnp.einsum(
+            "bld,blh,blhp->bhpd",
+            Bk.astype(jnp.float32), seg * dtk, xk.astype(jnp.float32),
+        )
+        H_new = H * jnp.exp(jnp.clip(total, -60.0, 0.0))[:, :, None, None] + S
+        return H_new, (y_intra + y_inter).astype(x.dtype)
+
+    H0 = jnp.zeros((B_, nh, hd, ds), jnp.float32)
+    H_final, y_chunks = jax.lax.scan(chunk_step, H0, (xc, Bc, Cc, dtc))
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape(B_, nc * L, nh, hd)[:, :T]
+    return y, H_final
+
+
+def _pallas_ssd_mode() -> str:
+    """"off" (pure-jnp chunked scan — the baseline/oracle), "kernel"
+    (real Pallas: TPU, or interpret on CPU tests), or "opaque" (dry-run
+    stand-in, see kernels/opaque.py)."""
+    import os
+
+    flag = os.environ.get("REPRO_PALLAS_SSD", "auto")
+    if flag == "auto":
+        return "kernel" if jax.default_backend() == "tpu" else "off"
+    if flag == "opaque":
+        from repro.kernels import opaque
+
+        return "opaque" if opaque.opaque_mode() else "kernel"
+    return "off" if flag in ("0", "false", "off") else "kernel"
+
+
+def ssm_fullseq(cfg: ModelConfig, p: dict, u, return_cache: bool = True):
+    """Full-sequence SSD block. u: (B,T,d) -> (y, cache)."""
+    s = cfg.ssm
+    z, xBC, dt = _split_proj(cfg, p, u)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x, Bm, Cm, dtv, A = _heads(cfg, xBC, dt, p)
+    mode = _pallas_ssd_mode()
+    if mode == "opaque":
+        from repro.kernels.opaque import make_ssd_opaque
+
+        y, H = make_ssd_opaque(s.chunk)(x, Bm, Cm, dtv, A)
+    elif mode == "kernel":
+        from repro.kernels.ssd_scan import ssd_scan
+
+        y, H = ssd_scan(x, Bm, Cm, dtv, A, chunk=s.chunk)
+    else:
+        y, H = ssd_chunked(x, Bm, Cm, dtv, A, s.chunk)
+    y = y + x * p["d_skip"][None, None, :, None].astype(x.dtype)
+    di = s.d_inner(cfg.d_model)
+    y = y.reshape(y.shape[0], y.shape[1], di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(y.dtype))
+    if not return_cache:
+        return out, None
+    return out, {"conv": conv_state, "ssm": H}
+
+
+def ssm_decode(cfg: ModelConfig, p: dict, u, cache: dict):
+    """Single-token recurrent step. u: (B,1,d)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    di, ds, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    z, xBC, dt = _split_proj(cfg, p, u)
+
+    # Conv ring update.
+    conv = cache["conv"]                           # (B, K-1, C)
+    window = jnp.concatenate([conv.astype(xBC.dtype), xBC], axis=1)  # (B,K,C)
+    w = p["conv_w"].astype(xBC.dtype)
+    out = jnp.einsum("bkc,kc->bc", window, w) + p["conv_b"].astype(xBC.dtype)
+    xBC_t = jax.nn.silu(out)[:, None, :]
+    new_conv = window[:, 1:]
+
+    x, Bm, Cm, dtv, A = _heads(cfg, xBC_t, dt, p)
+    # x: (B,1,nh,hd); Bm/Cm: (B,1,ds); dtv: (B,1,nh)
+    H = cache["ssm"].astype(jnp.float32)           # (B,nh,hd,ds)
+    g = jnp.exp(dtv[:, 0, :, None, None] * A[None, :, None, None])
+    dBx = jnp.einsum(
+        "bd,bhp,bh->bhpd", Bm[:, 0].astype(jnp.float32),
+        x[:, 0].astype(jnp.float32), dtv[:, 0]
+    )
+    H_new = H * g + dBx
+    y = jnp.einsum("bd,bhpd->bhp", Cm[:, 0].astype(jnp.float32), H_new)
+    y = y + x[:, 0].astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(y.shape[0], 1, di).astype(u.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_scale"])
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"].astype(y.dtype))
+    return out, {"conv": new_conv, "ssm": H_new}

@@ -1,0 +1,4 @@
+from repro.serving.engine import ServeEngine, ServeStats
+from repro.serving.kv_store import KVReadStats, QuantizedKVStore
+
+__all__ = ["ServeEngine", "ServeStats", "QuantizedKVStore", "KVReadStats"]

@@ -1,0 +1,145 @@
+"""Batched serving engine with retry-aware KV reads.
+
+A production-shaped (but CPU-runnable) serving loop:
+
+  admit(prompts) -> prefill (one batched pass) -> decode loop
+                     |                              |
+                     v                              v
+              QuantizedKVStore.pack()        materialize() -> decode_step
+                                              -> update() + sample
+
+Requests of unequal length are left-padded to the batch maximum so the
+KV cache is rectangular (standard static-batch serving).  Per-token and
+per-request latency statistics are recorded; the KV store's read stats
+quantify the AR² fast-read fraction and HBM bytes saved.
+
+The engine honours ``RetryPolicy``: "baseline" serves every read from the
+full-precision backing tier; the PR²/AR² mechanisms serve margin-cleared
+pages from int8.  Greedy sampling keeps outputs deterministic for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.retry import RetryPolicy
+from repro.models.api import build_model
+from repro.serving.kv_store import KVReadStats, QuantizedKVStore
+
+
+@dataclasses.dataclass
+class ServeStats:
+    n_requests: int
+    prompt_tokens: int
+    generated_tokens: int
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+    kv: KVReadStats
+
+    def summary(self) -> str:
+        return (
+            f"reqs={self.n_requests} prompt={self.prompt_tokens}tok "
+            f"gen={self.generated_tokens}tok prefill={self.prefill_s * 1e3:.1f}ms "
+            f"decode={self.decode_s * 1e3:.1f}ms ({self.tokens_per_s:.1f} tok/s) "
+            f"kv_fast={100 * self.kv.fast_fraction:.1f}% "
+            f"hbm_saved={100 * self.kv.bytes_saved_fraction:.1f}%"
+        )
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params=None,
+        policy: RetryPolicy = RetryPolicy("pr2ar2"),
+        tau: float = 0.05,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = (
+            params
+            if params is not None
+            else self.model.init(jax.random.PRNGKey(seed))
+        )
+        self.policy = policy
+        self.store = QuantizedKVStore(policy, tau=tau)
+        self._prefill = jax.jit(self.model.prefill)
+        self._decode = jax.jit(self.model.decode_step)
+
+    def _pad_batch(self, prompts: List[np.ndarray]) -> np.ndarray:
+        T = max(len(p) for p in prompts)
+        out = np.zeros((len(prompts), T), np.int32)
+        for i, p in enumerate(prompts):
+            out[i, T - len(p):] = p  # left-pad
+        return out
+
+    def generate(
+        self,
+        prompts: List[np.ndarray],
+        max_new_tokens: int = 16,
+        eos_id: Optional[int] = None,
+    ) -> Tuple[np.ndarray, ServeStats]:
+        tokens = self._pad_batch(prompts)
+        B, T = tokens.shape
+        batch = {"tokens": jnp.asarray(tokens)}
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (B, self.cfg.n_patches, self.cfg.d_model),
+                jnp.dtype(self.cfg.activation_dtype),
+            )
+        if self.cfg.family == "encdec":
+            batch["audio_embed"] = jnp.zeros(
+                (B, self.cfg.enc_positions, self.cfg.d_model),
+                jnp.dtype(self.cfg.activation_dtype),
+            )
+
+        t0 = time.perf_counter()
+        logits, cache = jax.block_until_ready(self._prefill(self.params, batch))
+        prefill_s = time.perf_counter() - t0
+        self.store.pack(cache)
+
+        out = [np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)]
+        pos = T + (self.cfg.n_patches if self.cfg.family == "vlm" else 0)
+        done = np.zeros((B,), bool)
+
+        t0 = time.perf_counter()
+        for step in range(max_new_tokens - 1):
+            cache_in = self.store.materialize()
+            step_batch = {
+                "token": jnp.asarray(out[-1][:, None]),
+                "pos": jnp.int32(pos + step),
+                "cache": cache_in,
+            }
+            logits, new_cache = jax.block_until_ready(
+                self._decode(self.params, step_batch)
+            )
+            self.store.update(new_cache)
+            nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1), np.int32)
+            if eos_id is not None:
+                done |= nxt == eos_id
+                nxt = np.where(done, eos_id, nxt)
+            out.append(nxt)
+            if eos_id is not None and done.all():
+                break
+        decode_s = time.perf_counter() - t0
+
+        gen = np.stack(out, axis=1)
+        stats = ServeStats(
+            n_requests=B,
+            prompt_tokens=int(sum(len(p) for p in prompts)),
+            generated_tokens=int(gen.size),
+            prefill_s=prefill_s,
+            decode_s=decode_s,
+            tokens_per_s=gen.size / decode_s if decode_s else 0.0,
+            kv=self.store.stats,
+        )
+        return gen, stats

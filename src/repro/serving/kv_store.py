@@ -1,0 +1,129 @@
+"""Quantized, margin-aware KV store — the AR²/PR² adaptation for serving.
+
+The decode-time KV working set is the serving analogue of the paper's
+flash page: its read cost ("tR") is HBM bytes.  The store keeps every
+attention cache leaf in two tiers:
+
+  * fast tier: per-page symmetric int8 (a page = one sequence position's
+    (kv_heads x head_dim) vector per unit/batch) — 4x fewer bytes, the
+    reduced-tR read;
+  * backing tier: the original bf16/f32 copy — the full-tR fallback.
+
+A read returns the fast tier wherever the page's quantization-error bound
+sits within the margin tolerance (the ECC-capability-margin analogue) and
+*retries* from backing elsewhere — fused select in kernels/kv_retry, so
+the retry overlaps the fast read like CACHE READ overlaps sensing with
+transfer.  Non-attention cache leaves (SSM states, conv windows, RG-LRU
+states) are O(1)-sized and stay unquantized — the degenerate case noted in
+DESIGN.md §6 for attention-free architectures.
+
+``RetryPolicy`` integration: mechanism "baseline" always reads backing
+(no fast tier); the PR²/AR² mechanisms enable the fast tier; ``tau``
+plays the role of the characterized safe-tR table entry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.retry import RetryPolicy
+from repro.kernels.kv_retry.ops import kv_read_with_retry, quantize_pages
+
+
+@dataclasses.dataclass
+class KVReadStats:
+    pages: int = 0
+    fast_pages: int = 0              # served from int8 within margin
+    retried_pages: int = 0           # re-read from backing
+    fast_bytes: int = 0
+    backing_bytes: int = 0
+
+    @property
+    def fast_fraction(self) -> float:
+        return self.fast_pages / self.pages if self.pages else 0.0
+
+    @property
+    def bytes_saved_fraction(self) -> float:
+        """HBM traffic saved vs an always-backing read."""
+        full = (self.fast_bytes + self.backing_bytes) * 4  # backing is 4B/elt
+        if not full:
+            return 0.0
+        moved = self.fast_bytes + 4 * self.backing_bytes
+        return 1.0 - moved / full
+
+
+def _is_kv_leaf(path) -> bool:
+    keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+    return any(k in ("attn", "xattn") for k in keys) and keys[-1] in ("k", "v")
+
+
+class QuantizedKVStore:
+    """Two-tier KV cache with margin-aware retry reads."""
+
+    def __init__(self, policy: RetryPolicy = RetryPolicy("pr2ar2"),
+                 tau: float = 0.05):
+        self.policy = policy
+        self.tau = tau
+        self.fast: Dict[str, Tuple[jax.Array, jax.Array]] = {}
+        self.backing: Any = None
+        self.stats = KVReadStats()
+
+    # -- pack ---------------------------------------------------------------
+
+    def pack(self, cache: Any) -> None:
+        """Ingest a prefill cache pytree (quantize attention leaves)."""
+        self.backing = cache
+        self.fast.clear()
+        if not self.policy.adaptive_tr:
+            return  # baseline: no fast tier
+        flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+        for path, leaf in flat:
+            if not _is_kv_leaf(path) or leaf.ndim < 2:
+                continue
+            key = jax.tree_util.keystr(path)
+            pages = leaf.reshape(-1, leaf.shape[-1])
+            q, s = quantize_pages(pages)
+            self.fast[key] = (q, s)
+
+    # -- read ------------------------------------------------------------------
+
+    def materialize(self) -> Any:
+        """Cache pytree for the next decode step, reading through the
+        fast tier with margin-aware retry."""
+        if not self.fast:
+            return self.backing
+
+        def read(path, leaf):
+            key = jax.tree_util.keystr(path)
+            if key not in self.fast:
+                return leaf
+            q, s = self.fast[key]
+            backing_pages = leaf.reshape(-1, leaf.shape[-1])
+            out, margin = kv_read_with_retry(q, s, backing_pages, tau=self.tau)
+            took_fast = np.asarray(margin[:, 0] >= 0.0)
+            n = took_fast.size
+            self.stats.pages += n
+            self.stats.fast_pages += int(took_fast.sum())
+            self.stats.retried_pages += int(n - took_fast.sum())
+            elt = leaf.shape[-1]
+            self.stats.fast_bytes += int(took_fast.sum()) * elt
+            self.stats.backing_bytes += int(n - took_fast.sum()) * elt
+            return out.reshape(leaf.shape).astype(leaf.dtype)
+
+        return jax.tree_util.tree_map_with_path(read, self.backing)
+
+    # -- update ---------------------------------------------------------------
+
+    def update(self, new_cache: Any) -> None:
+        """Adopt the post-decode cache (re-quantize attention leaves).
+
+        Production note: on TPU this is an incremental one-page update (the
+        new token's column); re-quantizing whole leaves here keeps the CPU
+        reference simple and bit-identical.
+        """
+        self.pack(new_cache)

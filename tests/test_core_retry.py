@@ -1,0 +1,168 @@
+"""Paper-claim + invariant tests for the PR²/AR² core."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import characterize as CH
+from repro.core import constants as C
+from repro.core import ecc as E
+from repro.core import retry as R
+from repro.core import timing as T
+from repro.core import voltage as V
+
+
+class TestVoltageModel:
+    def test_fresh_chip_reads_clean(self):
+        mu, sigma = V.degraded_distributions(0.0, 0.0)
+        rber = V.rber_all_page_types(mu, sigma, V.default_read_levels())
+        assert float(jnp.max(rber)) < E.DEFAULT_ECC.rber_cap / 4
+
+    def test_degradation_monotone_in_retention(self):
+        levels = V.default_read_levels()
+        prev = -1.0
+        for t in (0.0, 10.0, 90.0, 365.0):
+            mu, sigma = V.degraded_distributions(t, 1000.0)
+            rber = float(V.rber_from_distributions(mu, sigma, levels, "csb"))
+            assert rber >= prev
+            prev = rber
+
+    def test_degradation_monotone_in_pec(self):
+        levels = V.default_read_levels()
+        prev = -1.0
+        for pec in (0.0, 500.0, 1500.0):
+            mu, sigma = V.degraded_distributions(180.0, pec)
+            rber = float(V.rber_from_distributions(mu, sigma, levels, "csb"))
+            assert rber >= prev
+            prev = rber
+
+    def test_optimal_boundaries_beat_default_after_stress(self):
+        mu, sigma = V.degraded_distributions(365.0, 1500.0)
+        r_def = float(
+            V.rber_from_distributions(mu, sigma, V.default_read_levels(), "csb")
+        )
+        r_opt = float(
+            V.rber_from_distributions(mu, sigma, V.optimal_boundaries(mu, sigma), "csb")
+        )
+        assert r_opt < r_def / 5
+
+    def test_reduced_tr_raises_rber(self):
+        mu, sigma = V.degraded_distributions(90.0, 0.0)
+        levels = V.optimal_boundaries(mu, sigma)
+        r_full = float(V.rber_from_distributions(mu, sigma, levels, "csb", 1.0))
+        r_fast = float(V.rber_from_distributions(mu, sigma, levels, "csb", 0.75))
+        r_faster = float(V.rber_from_distributions(mu, sigma, levels, "csb", 0.6))
+        assert r_full < r_fast < r_faster
+
+
+class TestRetrySearch:
+    def test_first_success_step_basic(self):
+        rber = jnp.array([[1e-2, 8e-3, 5e-3, 1e-3, 2e-3]])
+        k = R.first_success_step(rber, cap=6e-3)
+        assert int(k[0]) == 2
+
+    def test_first_success_respects_start(self):
+        rber = jnp.array([1e-3, 1e-2, 1e-2, 1e-3, 1e-3])
+        assert int(R.first_success_step(rber, cap=5e-3)) == 0
+        assert int(R.first_success_step(rber, jnp.int32(1), cap=5e-3)) == 3
+
+    def test_paper_obs1_mean_steps_3mo(self):
+        s = CH.characterize_condition(90.0, 0.0)
+        assert abs(s.mean_retry_steps - 4.5) < 0.5, s.mean_retry_steps
+
+    def test_aged_needs_more_steps_than_modest(self):
+        modest = CH.characterize_condition(90.0, 0.0)
+        aged = CH.characterize_condition(365.0, 1500.0)
+        assert aged.mean_retry_steps > modest.mean_retry_steps
+
+    def test_sota_reduces_attempts_but_not_below_one(self):
+        key = jax.random.PRNGKey(0)
+        a_base, _ = R.attempts_for_population(key, 365.0, 1000.0, "csb")
+        a_sota, _ = R.attempts_for_population(key, 365.0, 1000.0, "csb", sota=True)
+        assert float(jnp.mean(a_sota)) < 0.45 * float(jnp.mean(a_base))
+        assert int(jnp.min(a_sota)) >= 1
+
+    def test_sota_aged_still_multi_step(self):
+        """Paper §2: even under SOTA, aged reads retry >= ~3 steps."""
+        key = jax.random.PRNGKey(1)
+        a_sota, _ = R.attempts_for_population(key, 365.0, 1500.0, "csb", sota=True)
+        assert float(jnp.mean(a_sota - 1)) >= 3.0
+
+
+class TestECCMargin:
+    def test_paper_obs2_margin_positive_and_large(self):
+        for cond in ((90.0, 0.0), (365.0, 1500.0)):
+            s = CH.characterize_condition(*cond)
+            assert s.p01_margin_final >= 0.0
+            assert s.mean_margin_final > 0.33
+
+    def test_margin_formula(self):
+        m = float(E.capability_margin(jnp.float32(0.0)))
+        assert m == pytest.approx(1.0)
+        cap_rber = E.DEFAULT_ECC.rber_cap
+        assert float(E.capability_margin(jnp.float32(cap_rber))) == pytest.approx(
+            0.0, abs=1e-6
+        )
+
+    def test_page_fail_probability_monotone(self):
+        rber = jnp.array([1e-3, 5e-3, 7e-3, 9e-3])
+        p = np.asarray(E.page_fail_probability(rber))
+        assert (np.diff(p) >= 0).all()
+        assert p[0] < 1e-6 and p[-1] > 0.99
+
+
+class TestTrReduction:
+    def test_paper_obs3_worst_case_scale(self):
+        s = CH.characterize_condition(365.0, 1500.0)
+        assert s.safe_tr_scale <= 0.75
+
+    def test_scale_table_never_below_floor(self):
+        for cond in ((0.0, 0.0), (90.0, 0.0), (365.0, 1500.0)):
+            s = CH.characterize_condition(*cond)
+            assert CH.TR_SCALE_FLOOR <= s.safe_tr_scale <= 1.0
+
+    def test_lookup_snaps_conservatively(self):
+        exact = CH.characterize_condition(365.0, 1500.0).safe_tr_scale
+        assert CH.lookup_tr_scale(300.0, 1200.0) >= min(
+            exact, CH.lookup_tr_scale(365.0, 1500.0)
+        )
+
+
+class TestTiming:
+    def test_paper_pr2_per_step_reduction(self):
+        assert T.per_step_reduction_pr2() == pytest.approx(0.285, abs=0.005)
+
+    def test_pipelined_never_slower(self):
+        for a in range(1, 12):
+            for pt in ("lsb", "csb", "msb"):
+                assert T.pipelined_read_latency(a, pt) <= T.sequential_read_latency(a, pt)
+
+    def test_single_attempt_equal(self):
+        assert float(T.pipelined_read_latency(1)) == pytest.approx(
+            float(T.sequential_read_latency(1))
+        )
+
+    def test_ar2_scales_only_tr(self):
+        base = float(T.sequential_read_latency(3, "csb", 1.0))
+        ar2 = float(T.read_latency(3, "ar2", "csb", 0.75))
+        expected = base - 3 * 0.25 * C.TR_US["csb"]
+        assert ar2 == pytest.approx(expected)
+
+    def test_combined_latency_ordering(self):
+        for a in (2, 4, 8):
+            lat = {
+                m: float(T.read_latency(a, m, tr_scale=0.75))
+                for m in ("baseline", "pr2", "ar2", "pr2ar2")
+            }
+            assert lat["pr2ar2"] < lat["pr2"] < lat["baseline"]
+            assert lat["pr2ar2"] < lat["ar2"] < lat["baseline"]
+
+    def test_policy_flags(self):
+        from repro.core.retry import RetryPolicy
+
+        p = RetryPolicy("sota+pr2ar2")
+        assert p.pipelined and p.adaptive_tr and p.sota_start
+        assert not RetryPolicy("baseline").pipelined
+        with pytest.raises(ValueError):
+            RetryPolicy("bogus")

@@ -1,0 +1,85 @@
+"""Discrete-event SSD simulator invariants + mechanism orderings."""
+
+import numpy as np
+import pytest
+
+from repro.core.retry import RetryPolicy
+from repro.flashsim.config import DEFAULT_SSD, OperatingCondition
+from repro.flashsim.ssd import SSDSim, compare_mechanisms, simulate
+from repro.flashsim.workloads import PROFILES, generate_trace, make_workloads
+
+COND = OperatingCondition(365.0, 1000.0)
+W = make_workloads()["websearch"]
+N = 1200
+
+
+@pytest.fixture(scope="module")
+def stats_by_mechanism():
+    return compare_mechanisms(W, COND, seed=3, n_requests=N)
+
+
+class TestOrderings:
+    def test_pr2_beats_baseline(self, stats_by_mechanism):
+        s = stats_by_mechanism
+        assert s["pr2"].mean_us < s["baseline"].mean_us
+
+    def test_ar2_beats_baseline(self, stats_by_mechanism):
+        s = stats_by_mechanism
+        assert s["ar2"].mean_us < s["baseline"].mean_us
+
+    def test_combined_beats_each(self, stats_by_mechanism):
+        s = stats_by_mechanism
+        assert s["pr2ar2"].mean_us < s["pr2"].mean_us
+        assert s["pr2ar2"].mean_us < s["ar2"].mean_us
+
+    def test_sota_complementarity(self, stats_by_mechanism):
+        """The paper's complementarity claim: PR2+AR2 stacks on SOTA."""
+        s = stats_by_mechanism
+        assert s["sota+pr2ar2"].mean_us < s["sota"].mean_us
+        assert s["sota+pr2ar2"].mean_us < s["pr2ar2"].mean_us
+
+    def test_attempt_counts_mechanism_invariant(self, stats_by_mechanism):
+        """PR2 changes step latency, not step count (paper's design goal)."""
+        s = stats_by_mechanism
+        assert s["pr2"].mean_read_attempts == pytest.approx(
+            s["baseline"].mean_read_attempts, rel=0.02
+        )
+        # AR2's characterized scale keeps attempts within the search budget.
+        assert s["pr2ar2"].mean_read_attempts <= s["baseline"].mean_read_attempts + 0.5
+
+
+class TestDESBasics:
+    def test_percentile_ordering(self, stats_by_mechanism):
+        for st in stats_by_mechanism.values():
+            assert st.p50_us <= st.p95_us <= st.p99_us
+            assert st.die_util <= 1.0 and st.channel_util <= 1.0
+
+    def test_fresh_condition_is_fast(self):
+        fresh = simulate(W, OperatingCondition(0.0, 0.0), "baseline",
+                         n_requests=N)
+        aged = simulate(W, COND, "baseline", n_requests=N)
+        assert fresh.mean_us < aged.mean_us
+        assert fresh.mean_read_attempts < aged.mean_read_attempts
+
+    def test_trace_determinism(self):
+        t1 = generate_trace(W, seed=5)
+        t2 = generate_trace(W, seed=5)
+        np.testing.assert_array_equal(t1.arrival_us, t2.arrival_us)
+        np.testing.assert_array_equal(t1.start_page, t2.start_page)
+
+    def test_trace_stats_match_profile(self):
+        t = generate_trace(W, seed=0)
+        assert abs(t.is_read.mean() - W.read_ratio) < 0.02
+        gaps = np.diff(t.arrival_us)
+        assert np.mean(gaps) == pytest.approx(1e6 / W.iops, rel=0.25)
+
+    def test_writes_dilute_the_win(self):
+        """On a mixed workload the read-only response-time reduction must
+        exceed the overall reduction — writes are mechanism-invariant."""
+        prxy = make_workloads()["prxy"]
+        px = compare_mechanisms(
+            prxy, COND, mechanisms=("baseline", "pr2ar2"), n_requests=N
+        )
+        red_read = 1 - px["pr2ar2"].read_mean_us / px["baseline"].read_mean_us
+        red_all = 1 - px["pr2ar2"].mean_us / px["baseline"].mean_us
+        assert red_read > red_all > 0

@@ -1,0 +1,164 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.kv_retry.kernel import kv_retry_pallas
+from repro.kernels.kv_retry.ops import quantize_pages
+from repro.kernels.kv_retry.ref import kv_retry_ref
+from repro.kernels.rber.ops import rber_table
+from repro.kernels.rber.ref import rber_ref
+from repro.kernels.ssd_scan import ssd_scan, ssd_scan_ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=2e-4, rtol=2e-4
+    )
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("T,S,hd,causal,window", [
+        (64, 64, 16, True, None),
+        (100, 100, 32, True, None),     # non-multiple of block
+        (64, 192, 16, False, None),     # cross-ish (T != S)
+        (128, 128, 16, True, 32),       # sliding window
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_ref(self, T, S, hd, causal, window, dtype):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+        BH = 4
+        q = jax.random.normal(k1, (BH, T, hd), dtype)
+        k = jax.random.normal(k2, (BH, S, hd), dtype)
+        v = jax.random.normal(k3, (BH, S, hd), dtype)
+        out = flash_attention_fwd(
+            q, k, v, causal=causal, window=window, bq=32, bk=32, interpret=True
+        )
+        ref = attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32),
+            **_tol(dtype),
+        )
+
+    def test_softcap(self):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = 3.0 * jax.random.normal(k1, (2, 64, 16), jnp.float32)
+        k = 3.0 * jax.random.normal(k2, (2, 64, 16), jnp.float32)
+        v = jax.random.normal(k3, (2, 64, 16), jnp.float32)
+        out = flash_attention_fwd(
+            q, k, v, causal=True, softcap=20.0, bq=32, bk=32, interpret=True
+        )
+        ref = attention_ref(q, k, v, causal=True, softcap=20.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-4, rtol=3e-4)
+
+    def test_gqa_grouping(self):
+        """BH != BK exercises the kv-head index map (G = BH // BK)."""
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(k1, (8, 64, 16), jnp.float32)   # 8 q-head rows
+        k = jax.random.normal(k2, (2, 64, 16), jnp.float32)   # 2 kv-head rows
+        v = jax.random.normal(k3, (2, 64, 16), jnp.float32)
+        out = flash_attention_fwd(q, k, v, causal=True, bq=32, bk=32, interpret=True)
+        kk = jnp.repeat(k, 4, axis=0)
+        vv = jnp.repeat(v, 4, axis=0)
+        ref = attention_ref(q, kk, vv, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4, rtol=2e-4)
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("T,chunk,hd,ds", [
+        (64, 16, 16, 32),
+        (100, 32, 16, 32),    # padding path
+        (128, 128, 32, 64),   # single chunk
+    ])
+    def test_vs_sequential_ref(self, T, chunk, hd, ds):
+        B, nh = 2, 3
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        x = jax.random.normal(ks[0], (B, T, nh, hd), jnp.float32)
+        Bm = 0.5 * jax.random.normal(ks[1], (B, T, ds), jnp.float32)
+        Cm = 0.5 * jax.random.normal(ks[2], (B, T, ds), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, T, nh)))
+        A = -jnp.exp(jax.random.normal(ks[4], (nh,)))
+        y, H = ssd_scan(x, Bm, Cm, dt, A, chunk=chunk, interpret=True)
+
+        xh = x.transpose(0, 2, 1, 3).reshape(B * nh, T, hd)
+        dth = dt.transpose(0, 2, 1).reshape(B * nh, T)
+        dAh = dth * jnp.tile(A, B)[:, None]
+        Bh = jnp.broadcast_to(Bm[:, None], (B, nh, T, ds)).reshape(B * nh, T, ds)
+        Ch = jnp.broadcast_to(Cm[:, None], (B, nh, T, ds)).reshape(B * nh, T, ds)
+        yr, Hr = ssd_scan_ref(xh, Bh, Ch, dth, dAh)
+        yr = yr.reshape(B, nh, T, hd).transpose(0, 2, 1, 3)
+        Hr = Hr.reshape(B, nh, ds, hd).transpose(0, 1, 3, 2)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(np.asarray(H), np.asarray(Hr), atol=3e-4, rtol=3e-4)
+
+    def test_matches_model_chunked_path(self):
+        from repro.models.ssm import ssd_chunked
+
+        B, T, nh, hd, ds = 1, 96, 2, 16, 32
+        ks = jax.random.split(jax.random.PRNGKey(7), 5)
+        x = jax.random.normal(ks[0], (B, T, nh, hd), jnp.float32)
+        Bm = 0.5 * jax.random.normal(ks[1], (B, T, ds), jnp.float32)
+        Cm = 0.5 * jax.random.normal(ks[2], (B, T, ds), jnp.float32)
+        dt = jax.nn.softplus(jax.random.normal(ks[3], (B, T, nh)))
+        A = -jnp.exp(jax.random.normal(ks[4], (nh,)))
+        y1, H1 = ssd_scan(x, Bm, Cm, dt, A, chunk=32, interpret=True)
+        y2, H2 = ssd_chunked(x, Bm, Cm, dt, A, 32)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=3e-4, rtol=3e-4)
+        np.testing.assert_allclose(np.asarray(H1), np.asarray(H2), atol=3e-4, rtol=3e-4)
+
+
+class TestRBERKernel:
+    @pytest.mark.parametrize("n_pages,n_steps", [(32, 8), (100, 41)])
+    def test_vs_ref(self, n_pages, n_steps):
+        key = jax.random.PRNGKey(0)
+        mu = jax.random.normal(key, (n_pages, 8)) * 0.05 + jnp.arange(8.0)
+        sigma = 0.1 + 0.01 * jax.random.uniform(
+            jax.random.fold_in(key, 1), (n_pages, 8)
+        )
+        levels = jnp.linspace(0.3, 6.5, 7)[None, :] - 0.01 * jnp.arange(
+            n_steps, dtype=jnp.float32
+        )[:, None]                                    # (S, 7)
+        out = rber_table(mu, sigma, levels, interpret=True)
+        ref = rber_ref(mu, sigma, levels)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), atol=1e-5, rtol=1e-4
+        )
+
+
+class TestKVRetry:
+    @pytest.mark.parametrize("P,E", [(64, 64), (100, 128), (7, 32)])
+    @pytest.mark.parametrize("tau", [0.01, 0.05])
+    def test_vs_ref(self, P, E, tau):
+        key = jax.random.PRNGKey(3)
+        x = jax.random.normal(key, (P, E), jnp.float32)
+        q, s = quantize_pages(x)
+        out, margin = kv_retry_pallas(q, s, x, tau=tau, bp=32, interpret=True)
+        out_r, margin_r = kv_retry_ref(q, s, x, tau=tau)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(margin), np.asarray(margin_r), atol=1e-5, rtol=1e-4
+        )
+
+    def test_retry_pages_get_exact_backing(self):
+        key = jax.random.PRNGKey(4)
+        x = jax.random.normal(key, (64, 32), jnp.float32)
+        # huge outlier rows -> large scale -> margin < 0 -> backing
+        x = x.at[::4].mul(1e4)
+        q, s = quantize_pages(x)
+        out, margin = kv_retry_pallas(q, s, x, tau=0.001, bp=32, interpret=True)
+        retried = np.asarray(margin[:, 0]) < 0
+        assert retried.any()
+        np.testing.assert_array_equal(
+            np.asarray(out)[retried], np.asarray(x)[retried]
+        )
+
+    def test_quantization_error_within_bound(self):
+        key = jax.random.PRNGKey(5)
+        x = jax.random.normal(key, (128, 64), jnp.float32)
+        q, s = quantize_pages(x)
+        err = np.abs(np.asarray(q, np.float32) * np.asarray(s) - np.asarray(x))
+        assert (err <= np.asarray(s) * 0.5 + 1e-7).all()

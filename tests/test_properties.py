@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) over the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ecc as E
+from repro.core import retry as R
+from repro.core import timing as T
+from repro.core import voltage as V
+
+_conditions = st.tuples(
+    st.floats(0.0, 365.0),       # retention days
+    st.floats(0.0, 1500.0),      # P/E cycles
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_conditions)
+def test_ecc_margin_positive_at_any_success(cond):
+    """Whenever the retry search succeeds, the final-step margin is > 0 —
+    the paper's 'may sound contradictory' argument holds by construction."""
+    retention, pec = cond
+    mu, sigma = V.degraded_distributions(
+        jnp.float32(retention), jnp.float32(pec)
+    )
+    rber = R.rber_per_retry_step(mu, sigma, "csb")
+    k = R.first_success_step(rber)
+    if int(k) < rber.shape[-1] - 1:  # search succeeded
+        final = float(jnp.take(rber, k))
+        assert float(E.capability_margin(jnp.float32(final))) > 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(_conditions, st.floats(0.7, 1.0))
+def test_rber_monotone_in_tr_scale(cond, scale):
+    """Sensing faster never lowers RBER (the AR² trade-off direction)."""
+    retention, pec = cond
+    mu, sigma = V.degraded_distributions(
+        jnp.float32(retention), jnp.float32(pec)
+    )
+    levels = V.optimal_boundaries(mu, sigma)
+    r_full = float(V.rber_from_distributions(mu, sigma, levels, "csb", 1.0))
+    r_fast = float(V.rber_from_distributions(mu, sigma, levels, "csb", scale))
+    assert r_fast >= r_full - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 32), st.floats(0.7, 1.0))
+def test_pipelined_latency_never_worse(attempts, scale):
+    seq = float(T.sequential_read_latency(attempts, "csb", scale))
+    pipe = float(T.pipelined_read_latency(attempts, "csb", scale))
+    assert pipe <= seq + 1e-9
+    # and the pipelined lower bound: first sense + transfers can't vanish
+    assert pipe >= T.DEFAULT_TIMING.tr("csb", scale)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(2, 40),
+    st.floats(0.001, 0.02),
+)
+def test_first_success_monotone_in_cap(n_steps, cap):
+    """A stronger ECC (higher cap) never needs MORE retry steps."""
+    rng = np.random.default_rng(n_steps)
+    rber = jnp.asarray(
+        np.sort(rng.uniform(1e-4, 2e-2, size=(n_steps,)))[::-1].copy()
+    )
+    k1 = int(R.first_success_step(rber, cap=cap, max_steps=n_steps))
+    k2 = int(R.first_success_step(rber, cap=cap * 2, max_steps=n_steps))
+    assert k2 <= k1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(2, 6))
+def test_parity_reconstruction_any_single_shard(seed, group):
+    """XOR parity recovers any single missing shard in a group."""
+    rng = np.random.default_rng(seed)
+    shards = [rng.integers(0, 256, rng.integers(10, 200), dtype=np.uint8)
+              for _ in range(group)]
+    size = max(len(s) for s in shards)
+    parity = np.zeros(size, np.uint8)
+    for s in shards:
+        parity[: len(s)] ^= s
+    lost = int(rng.integers(0, group))
+    acc = parity.copy()
+    for i, s in enumerate(shards):
+        if i != lost:
+            acc[: len(s)] ^= s
+    np.testing.assert_array_equal(acc[: len(shards[lost])], shards[lost])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.floats(0.3, 3.0))
+def test_int8_quantization_error_bound(seed, scale_mag):
+    from repro.distributed.compress import dequantize_int8, quantize_int8
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(scale=scale_mag, size=(256,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 64))
+def test_elastic_plan_always_valid(n_devices, old_model):
+    from repro.distributed.elastic import plan_mesh
+
+    p = plan_mesh(n_devices, (16, old_model), global_batch=256)
+    d, m = p.new_shape
+    assert d * m == n_devices
+    assert p.grad_accum_factor >= 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.integers(2, 5),   # batch
+    st.integers(8, 64),  # seq
+    st.integers(0, 2**16),
+)
+def test_corpus_batches_reproducible(batch, seq, index):
+    from repro.data import CorpusConfig, SyntheticCorpus
+
+    c = SyntheticCorpus(CorpusConfig(vocab=128, seq_len=seq, batch=batch))
+    b1, b2 = c.batch(index), c.batch(index)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (batch, seq)
+    assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 128).all()

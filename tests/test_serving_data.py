@@ -1,0 +1,163 @@
+"""Serving engine, KV store, data pipeline, distributed extras."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import reduced_config
+from repro.core.retry import RetryPolicy
+from repro.data import CorpusConfig, FlashTierReader, PrefetchPipeline, SyntheticCorpus
+from repro.distributed.compress import (
+    compress_grads,
+    init_error_feedback,
+    quantize_int8,
+    dequantize_int8,
+)
+from repro.distributed.elastic import plan_mesh
+from repro.distributed.fault_tolerance import (
+    HeartbeatMonitor,
+    RestartPolicy,
+    StragglerMitigator,
+)
+from repro.flashsim.config import OperatingCondition
+from repro.serving import QuantizedKVStore, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return reduced_config(get_config("llama3.2-3b"))
+
+
+class TestServing:
+    def test_retry_kv_matches_baseline_greedy(self, small_cfg):
+        prompts = [np.array([5, 9, 11, 2], np.int32), np.array([7, 3], np.int32)]
+        eng = ServeEngine(small_cfg, policy=RetryPolicy("pr2ar2"), tau=0.2, seed=0)
+        gen, st = eng.generate(prompts, max_new_tokens=6)
+        eng_b = ServeEngine(
+            small_cfg, params=eng.params, policy=RetryPolicy("baseline"), seed=0
+        )
+        gen_b, st_b = eng_b.generate(prompts, max_new_tokens=6)
+        np.testing.assert_array_equal(gen, gen_b)
+        assert st.kv.fast_fraction > 0.9
+        assert st_b.kv.fast_fraction == 0.0
+        assert st.kv.bytes_saved_fraction > 0.5
+
+    def test_kv_store_degenerates_for_ssm(self):
+        """Attention-free arch: no KV leaves -> store is a no-op passthrough
+        (the DESIGN.md §6 inapplicability case)."""
+        cfg = reduced_config(get_config("mamba2-130m"))
+        from repro.models.api import build_model
+
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        batch = {"tokens": jnp.ones((1, 8), jnp.int32)}
+        _, cache = model.prefill(params, batch)
+        store = QuantizedKVStore(RetryPolicy("pr2ar2"))
+        store.pack(cache)
+        assert store.fast == {}  # nothing quantizable
+        out = store.materialize()
+        for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(cache)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestData:
+    def test_corpus_deterministic_and_distinct(self):
+        c = SyntheticCorpus(CorpusConfig(vocab=512, seq_len=64, batch=4, seed=1))
+        np.testing.assert_array_equal(c.batch(3)["tokens"], c.batch(3)["tokens"])
+        assert not np.array_equal(c.batch(3)["tokens"], c.batch(4)["tokens"])
+        assert c.batch(0)["tokens"].max() < 512
+
+    def test_flash_tier_mechanism_ordering(self):
+        c = SyntheticCorpus(CorpusConfig(vocab=512, seq_len=256, batch=16))
+        cond = OperatingCondition(365.0, 1000.0)
+        means = {}
+        for mech in ("baseline", "pr2", "pr2ar2", "sota+pr2ar2"):
+            r = FlashTierReader(c, RetryPolicy(mech), cond, seed=2)
+            for i in range(12):
+                r.read(i)
+            means[mech] = r.stats.mean_batch_us
+        assert means["pr2ar2"] < means["pr2"] < means["baseline"]
+        assert means["sota+pr2ar2"] < means["pr2ar2"]
+
+    def test_prefetch_order_and_completeness(self):
+        c = SyntheticCorpus(CorpusConfig(vocab=64, seq_len=16, batch=2))
+        pipe = PrefetchPipeline(c.batch, n_batches=7, device_put=False,
+                                start_index=3)
+        seen = [i for i, _ in pipe]
+        assert seen == list(range(3, 10))
+
+
+class TestCompression:
+    def test_roundtrip_error_bound(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(1000,)), jnp.float32)
+        q, s = quantize_int8(x)
+        err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+        assert err.max() <= float(s) * 0.5 + 1e-7
+
+    def test_error_feedback_unbiased_accumulation(self):
+        g = {"w": jnp.asarray(
+            np.random.default_rng(1).normal(size=(500,)) * 1e-3, jnp.float32
+        )}
+        ef = init_error_feedback(g)
+        acc_t = np.zeros(500)
+        acc_c = np.zeros(500)
+        for step in range(40):
+            gs = {"w": g["w"] * (1.0 + 0.2 * np.sin(step))}
+            comp, ef = compress_grads(gs, ef)
+            acc_t += np.asarray(gs["w"])
+            acc_c += np.asarray(comp["w"])
+        rel = np.abs(acc_c - acc_t).max() / np.abs(acc_t).max()
+        assert rel < 0.01  # residual is the (bounded) last-step error only
+
+
+class TestFaultTolerance:
+    def test_straggler_detection_and_redispatch(self):
+        t = [0.0]
+        mon = HeartbeatMonitor(8, dead_after_s=10.0, clock=lambda: t[0])
+        for w in range(8):
+            mon.beat(w, 1, 5.0 if w == 3 else 1.0)
+        assert mon.stragglers() == [3]
+        mit = StragglerMitigator(mon)
+        plan = mit.plan(1, {s: s % 8 for s in range(16)})
+        assert set(plan) == {3, 11}           # straggler 3's shards
+        assert all(b != 3 for b in plan.values())
+
+    def test_dead_worker_and_restart_decision(self):
+        t = [100.0]
+        mon = HeartbeatMonitor(4, dead_after_s=10.0, clock=lambda: t[0])
+        for w in range(4):
+            if w != 2:
+                mon.beat(w, 5, 1.0)
+        t[0] = 115.0
+        for w in range(4):
+            if w != 2:
+                mon.beat(w, 6, 1.0)
+        assert mon.dead_workers() == [2]
+        pol = RestartPolicy()
+        d = pol.on_failure(mon, transient=False, now=200.0)
+        assert d.action == "shrink" and d.dead_workers == (2,)
+
+    def test_failure_budget_aborts(self):
+        mon = HeartbeatMonitor(2)
+        pol = RestartPolicy(max_failures_per_hour=3)
+        actions = [pol.on_failure(mon, True, now=float(i)).action for i in range(5)]
+        assert actions[-1] == "abort"
+
+
+class TestElastic:
+    def test_tp_preserved_when_divisible(self):
+        p = plan_mesh(512, (16, 16), global_batch=256)
+        assert p.new_shape == (32, 16) and p.tp_preserved
+        assert p.grad_accum_factor == 1
+
+    def test_shrink_with_accumulation(self):
+        p = plan_mesh(448, (16, 16), global_batch=256)
+        assert p.new_shape == (28, 16) and p.tp_preserved
+        assert p.grad_accum_factor >= 2
+
+    def test_refactor_when_model_axis_impossible(self):
+        p = plan_mesh(18, (16, 16), global_batch=256)
+        assert p.new_shape[0] * p.new_shape[1] == 18
+        assert not p.tp_preserved
