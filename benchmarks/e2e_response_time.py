@@ -25,6 +25,11 @@ Attempt counts come from the 160-chip characterization histograms, exactly
 as the paper transplants real-device statistics into MQSim.
 
 Usage: PYTHONPATH=src python -m benchmarks.e2e_response_time [--n 20000]
+           [--seed 0] [--engine {array,reference}]
+
+``--engine reference`` runs the retired seed engine (closure DES) instead
+of the array event-core — used by benchmarks/microbench_sim.py to track
+the array engine's speedup in BENCH_sim.json.
 """
 
 from __future__ import annotations
@@ -60,16 +65,19 @@ PAPER_MAX_VS_SOTA = 0.315
 TOL = 0.08  # absolute tolerance on reduction fractions (DES + trace noise)
 
 
-def run(n_requests: int = 20000, seed: int = 0, verbose: bool = True):
+def run(n_requests: int = 20000, seed: int = 0, verbose: bool = True,
+        engine: str = "array"):
     mechs = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
     all_rows = []
+    t_start = time.perf_counter()
 
     # --- vs high-end baseline: aged SSD, all six workloads ---------------
     red_base, red_sota_aged = [], []
     for w in PROFILES:
         t0 = time.perf_counter()
         stats = compare_mechanisms(
-            w, AGED, mechanisms=mechs, seed=seed, n_requests=n_requests
+            w, AGED, mechanisms=mechs, seed=seed, n_requests=n_requests,
+            engine=engine,
         )
         dt = (time.perf_counter() - t0) * 1e6
         r_b = 1.0 - stats["pr2ar2"].mean_us / stats["baseline"].mean_us
@@ -94,7 +102,7 @@ def run(n_requests: int = 20000, seed: int = 0, verbose: bool = True):
             t0 = time.perf_counter()
             stats = compare_mechanisms(
                 w, cond, mechanisms=("sota", "sota+pr2ar2"),
-                seed=seed, n_requests=n_requests,
+                seed=seed, n_requests=n_requests, engine=engine,
             )
             dt = (time.perf_counter() - t0) * 1e6
             r_s = 1.0 - stats["sota+pr2ar2"].mean_us / stats["sota"].mean_us
@@ -132,11 +140,17 @@ def run(n_requests: int = 20000, seed: int = 0, verbose: bool = True):
             f"-{100 * avg_s_aged:.1f}% avg (SOTA leaves >=3 steps there, "
             f"so per-step cuts compound)"
         )
+        print(
+            f"wall: {time.perf_counter() - t_start:.1f}s total "
+            f"({engine} engine)"
+        )
     return all_rows, (avg_b, max_b, avg_s, max_s, ok)
 
 
-def csv_rows(n_requests: int = 8000):
-    rows, (avg_b, max_b, avg_s, max_s, ok) = run(n_requests, verbose=False)
+def csv_rows(n_requests: int = 8000, engine: str = "array"):
+    rows, (avg_b, max_b, avg_s, max_s, ok) = run(
+        n_requests, verbose=False, engine=engine
+    )
     out = []
     for w, cond, stats, r_b, r_s, dt in rows:
         if r_b is not None:
@@ -167,12 +181,16 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=20000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--engine", choices=("array", "reference"),
+                    default="array",
+                    help="DES engine: array event-core or the seed "
+                         "closure engine (for speedup tracking)")
     args = ap.parse_args()
     print(
         f"E2E response time — 6 workloads @ {AGED.label()} (vs baseline) + "
         f"read-dominant @ modest conditions (vs SOTA), {args.n} requests each"
     )
-    _, (_, _, _, _, ok) = run(args.n, args.seed)
+    _, (_, _, _, _, ok) = run(args.n, args.seed, engine=args.engine)
     if not ok:
         raise SystemExit("paper-claim validation failed")
 

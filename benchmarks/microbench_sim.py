@@ -1,0 +1,171 @@
+"""Simulator engine microbenchmark — emits ``BENCH_sim.json``.
+
+Times the array event-core (repro.flashsim.ssd.SSDSim) against the retired
+seed engine (repro.flashsim.engine_ref.SSDSimRef) on the exact cell grid
+of ``benchmarks/e2e_response_time``:
+
+  * 6 workloads @ aged (1y retention / 1K P/E) x 6 mechanisms, and
+  * read-dominant workloads @ 3 modest conditions x {sota, sota+pr2ar2},
+
+with every characterization table warmed first, so the recorded numbers
+isolate the DES hot path.  The seed path is measured faithfully to the
+original ``compare_mechanisms``: the trace is regenerated per mechanism
+and attempt counts are sampled per request inside the engine; the array
+path shares one trace + expansion per cell and samples attempts in one
+batched pass.
+
+``BENCH_sim.json`` records per-cell wall times, event counts, events/sec,
+and the aggregate speedup — the perf trajectory of the simulator is
+tracked through this file from PR 1 onward.
+
+Usage: PYTHONPATH=src python -m benchmarks.microbench_sim [--n 8000]
+           [--quick] [--skip-reference] [--out BENCH_sim.json]
+
+  --n N             requests per cell (default 8000, the acceptance size)
+  --quick           tiny grid + small n (CI smoke; implies --n 1200)
+  --skip-reference  only measure the array engine (no speedup column)
+  --out PATH        output JSON path (default BENCH_sim.json in cwd)
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core.retry import RetryPolicy
+from repro.flashsim.config import OperatingCondition
+from repro.flashsim.engine_ref import SSDSimRef
+from repro.flashsim.ssd import SSDSim, expand_trace
+from repro.flashsim.workloads import PROFILES, cached_trace, generate_trace
+
+from benchmarks.e2e_response_time import AGED, MODEST
+
+ALL_MECHS = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
+
+
+def e2e_cells(quick: bool = False):
+    """The (workload, condition, mechanisms) grid of the e2e benchmark."""
+    cells = []
+    profiles = PROFILES[:2] if quick else PROFILES
+    for w in profiles:
+        cells.append((w, AGED, ALL_MECHS))
+    modest = MODEST[:1] if quick else MODEST
+    for cond in modest:
+        for w in (w for w in profiles if w.read_dominant):
+            cells.append((w, cond, ("sota", "sota+pr2ar2")))
+    return cells
+
+
+def warm_characterization(cells):
+    """Build every (condition, mechanism) attempt table before timing."""
+    t0 = time.perf_counter()
+    for _, cond, mechs in cells:
+        for m in mechs:
+            SSDSim(condition=cond, policy=RetryPolicy(m))
+    return time.perf_counter() - t0
+
+
+def bench_cell(w, cond, mechs, n_requests, seed, skip_reference):
+    w = dataclasses.replace(w, n_requests=n_requests)
+
+    # Array path: one trace + one expansion shared by all mechanisms.
+    t0 = time.perf_counter()
+    trace = cached_trace(w, seed=seed)
+    expansion = expand_trace(trace)
+    events_array = 0
+    stats_array = {}
+    for m in mechs:
+        sim = SSDSim(condition=cond, policy=RetryPolicy(m), seed=seed + 7)
+        stats_array[m] = sim.run(trace, expansion=expansion)
+        events_array += sim.events_processed
+    wall_array = time.perf_counter() - t0
+
+    row = {
+        "workload": w.name,
+        "condition": cond.label(),
+        "mechanisms": list(mechs),
+        "n_requests": n_requests,
+        "wall_array_s": round(wall_array, 4),
+        "events_array": events_array,
+        "events_per_sec_array": round(events_array / wall_array),
+    }
+
+    if not skip_reference:
+        # Seed path, faithful to the original compare_mechanisms: trace
+        # regenerated per mechanism, per-request sampling in the engine.
+        t0 = time.perf_counter()
+        events_ref = 0
+        stats_ref = {}
+        for m in mechs:
+            trace_m = generate_trace(w, seed=seed)
+            ref = SSDSimRef(condition=cond, policy=RetryPolicy(m),
+                            seed=seed + 7)
+            stats_ref[m] = ref.run(trace_m)
+            events_ref += ref.events_processed
+        wall_ref = time.perf_counter() - t0
+        row["wall_seed_s"] = round(wall_ref, 4)
+        row["events_seed"] = events_ref
+        row["speedup"] = round(wall_ref / wall_array, 2)
+        # Cross-engine sanity: identical attempt statistics per mechanism.
+        row["attempts_match"] = all(
+            abs(stats_array[m].mean_read_attempts
+                - stats_ref[m].mean_read_attempts) < 1e-9
+            for m in mechs
+        )
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-reference", action="store_true")
+    ap.add_argument("--out", default="BENCH_sim.json")
+    args = ap.parse_args()
+    n = 1200 if args.quick else args.n
+
+    cells = e2e_cells(args.quick)
+    warm_s = warm_characterization(cells)
+    print(f"# characterization warm: {warm_s:.1f}s ({len(cells)} cells)")
+
+    rows = []
+    for w, cond, mechs in cells:
+        row = bench_cell(w, cond, mechs, n, args.seed, args.skip_reference)
+        rows.append(row)
+        spd = f" speedup={row['speedup']:5.2f}x" if "speedup" in row else ""
+        print(
+            f"{w.name:10s} @ {cond.label():>10s} x{len(mechs)} mechs: "
+            f"array {row['wall_array_s']:6.3f}s "
+            f"({row['events_per_sec_array'] / 1e6:.2f}M ev/s){spd}"
+        )
+
+    total_array = sum(r["wall_array_s"] for r in rows)
+    summary = {
+        "n_requests": n,
+        "cells": len(rows),
+        "wall_array_total_s": round(total_array, 3),
+        "events_per_sec_array": round(
+            sum(r["events_array"] for r in rows) / total_array
+        ),
+        "characterization_warm_s": round(warm_s, 2),
+    }
+    if not args.skip_reference:
+        total_ref = sum(r["wall_seed_s"] for r in rows)
+        summary["wall_seed_total_s"] = round(total_ref, 3)
+        summary["speedup_total"] = round(total_ref / total_array, 2)
+        summary["attempts_match_all"] = all(r["attempts_match"] for r in rows)
+
+    out = {"benchmark": "flashsim-des-engine", "summary": summary,
+           "cells_detail": rows}
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"# summary: {json.dumps(summary)}")
+    print(f"# wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,6 +11,21 @@ Prints ``name,us_per_call,derived`` CSV rows for:
                    artifacts, when results/dryrun is populated.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--skip-e2e] [--n 8000]
+           [--engine {array,reference}]
+
+Flags:
+  --skip-e2e   skip the discrete-event simulation table (the slowest
+               section; everything else is closed-form or cached).
+  --n N        requests per e2e simulation cell (default 8000).
+  --engine E   DES engine for the e2e section: "array" (default, the
+               integer-opcode event core) or "reference" (the retired
+               seed closure engine, kept for validation/speedup runs).
+
+Related stand-alone benchmarks (not aggregated here):
+  python -m benchmarks.microbench_sim [--n 8000] [--quick]
+      times array vs seed engine over the e2e cell grid and writes
+      BENCH_sim.json (events/sec, wall per cell, speedup) — the
+      simulator perf trajectory is tracked through that file.
 """
 
 from __future__ import annotations
@@ -49,6 +64,8 @@ def main() -> None:
                     help="skip the (slow) discrete-event simulation table")
     ap.add_argument("--n", type=int, default=8000,
                     help="requests per e2e simulation run")
+    ap.add_argument("--engine", choices=("array", "reference"),
+                    default="array", help="DES engine for the e2e section")
     args = ap.parse_args()
 
     sections = []
@@ -79,7 +96,7 @@ def main() -> None:
         from benchmarks import e2e_response_time
 
         print("# section: e2e response time (DES)", flush=True)
-        sections.append(e2e_response_time.csv_rows(args.n))
+        sections.append(e2e_response_time.csv_rows(args.n, engine=args.engine))
         for row in sections[-1]:
             print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
 

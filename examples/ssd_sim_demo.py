@@ -4,6 +4,12 @@ A compact tour of the flashsim reproduction: for each mechanism, simulate
 two workloads at two conditions and print mean/p99 response times plus
 the attempt counts the 160-chip characterization transplanted in.
 
+Each (workload, condition) cell runs through ``compare_mechanisms``, so
+the trace is generated once and shared by every mechanism (all mechanisms
+see the same arrivals), and the per-page schedule is expanded once.  The
+closing sweep shows ``simulate_batch`` — the throughput API for
+(mechanism x condition x seed) grids.
+
 Usage: PYTHONPATH=src python examples/ssd_sim_demo.py [--n 4000]
 """
 
@@ -12,7 +18,7 @@ from __future__ import annotations
 import argparse
 
 from repro.flashsim.config import OperatingCondition
-from repro.flashsim.ssd import simulate
+from repro.flashsim.ssd import compare_mechanisms, simulate_batch
 from repro.flashsim.workloads import make_workloads
 
 
@@ -33,13 +39,35 @@ def main():
         for wname in ("websearch", "oltp"):
             w = workloads[wname]
             print(f"  [{wname}] read_ratio={w.read_ratio}")
-            base = None
+            stats = compare_mechanisms(
+                w, cond, mechanisms=mechanisms, n_requests=args.n
+            )
+            base = stats["baseline"].mean_us
             for mech in mechanisms:
-                st = simulate(w, cond, mech, n_requests=args.n)
-                if mech == "baseline":
-                    base = st.mean_us
-                delta = f"{100 * (1 - st.mean_us / base):+5.1f}%" if base else ""
+                st = stats[mech]
+                delta = f"{100 * (1 - st.mean_us / base):+5.1f}%"
                 print(f"    {mech:12s} {st.as_row()}  vs_base={delta}")
+
+    # Sweep API: every (mechanism, condition, seed) cell of one workload,
+    # reusing the per-seed trace/expansion and cached characterization.
+    print("== simulate_batch: pr2ar2 across conditions x 2 seeds ==")
+    grid = simulate_batch(
+        workloads["websearch"],
+        conditions,
+        mechanisms=("baseline", "pr2ar2"),
+        seeds=(0, 1),
+        n_requests=args.n,
+    )
+    for cond in conditions:
+        for seed in (0, 1):
+            red = 1.0 - (
+                grid[("pr2ar2", cond, seed)].mean_us
+                / grid[("baseline", cond, seed)].mean_us
+            )
+            print(
+                f"  {cond.label():>12s} seed={seed}: "
+                f"pr2ar2 vs baseline -{100 * red:5.1f}%"
+            )
 
 
 if __name__ == "__main__":

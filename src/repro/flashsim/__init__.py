@@ -1,11 +1,20 @@
 """MQSim-analogue SSD simulator used for the paper's end-to-end evaluation."""
 
 from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
-from repro.flashsim.ssd import SSDSim, SimStats, compare_mechanisms, simulate
+from repro.flashsim.ssd import (
+    SSDSim,
+    SimStats,
+    TraceExpansion,
+    compare_mechanisms,
+    expand_trace,
+    simulate,
+    simulate_batch,
+)
 from repro.flashsim.workloads import (
     PROFILES,
     RequestTrace,
     Workload,
+    cached_trace,
     generate_trace,
     make_workloads,
 )
@@ -16,11 +25,15 @@ __all__ = [
     "SSDConfig",
     "SSDSim",
     "SimStats",
+    "TraceExpansion",
     "compare_mechanisms",
+    "expand_trace",
     "simulate",
+    "simulate_batch",
     "PROFILES",
     "RequestTrace",
     "Workload",
+    "cached_trace",
     "generate_trace",
     "make_workloads",
 ]

@@ -24,9 +24,22 @@ class SSDConfig:
     host_overhead_us: float = 8.0
     timing: TimingParams = DEFAULT_TIMING
 
+    def __post_init__(self):
+        if self.n_channels < 1 or self.dies_per_channel < 1:
+            raise ValueError(
+                f"SSDConfig needs >=1 channel and >=1 die per channel, got "
+                f"{self.n_channels}x{self.dies_per_channel}"
+            )
+
     @property
     def n_dies(self) -> int:
         return self.n_channels * self.dies_per_channel
+
+    def channel_of(self, die):
+        """Die -> channel mapping (interleaved).  Accepts int or ndarray —
+        the single striping rule both simulator engines and the vectorized
+        trace expansion share."""
+        return die % self.n_channels
 
 
 @dataclasses.dataclass(frozen=True)

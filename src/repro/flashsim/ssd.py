@@ -1,4 +1,4 @@
-"""Event-driven multi-queue SSD simulator (MQSim-analogue).
+"""Event-driven multi-queue SSD simulator (MQSim-analogue), array event-core.
 
 A true discrete-event simulation of what matters for read-retry latency at
 the device level:
@@ -26,23 +26,70 @@ Per-read attempt counts are sampled from the 160-chip characterization
 histograms (repro.core.characterize) for the simulated (retention, P/E)
 condition — the same transplant of real-device statistics into MQSim that
 the paper performs.
+
+Engine architecture
+-------------------
+The original engine scheduled a Python closure per page-op state transition
+on a ``(time, seq, fn, args)`` tuple heap and sampled attempt counts per
+request at admit time.  The hot path is now an integer-opcode event core:
+
+  * the whole trace is expanded to flat per-page-op NumPy arrays up front
+    (:func:`expand_trace`), and attempt counts for every read page are
+    sampled in one batched pass — the RNG stream is consumed in the same
+    order as the old per-request sampler, so attempt assignments are
+    bit-identical for a given seed;
+  * heap records are ``(time, seq, op_id << 2 | opcode)`` — no closures,
+    no argument tuples; the serial and PR²-pipelined read state machines
+    and the write path are opcode transitions over preallocated per-op
+    state buffers;
+  * admissions never enter the heap: page-ops are pre-sorted by arrival
+    time and merged into the event loop with a moving cursor;
+  * die/channel FCFS state lives in flat ``busy_until``/``busy_total``
+    buffers with per-resource FIFO queues.
+
+  * channels are single-server FCFS with constant-duration transfers whose
+    requests are always issued at the current sim time, so channel state
+    collapses to a cumulative busy-until scalar: a transfer's grant and
+    completion times are exact at issue, eliminating the per-transfer
+    completion event (and the channel queues) entirely — one heap event
+    per read attempt instead of two.
+
+The retired closure engine is preserved in
+:mod:`repro.flashsim.engine_ref` (``engine="reference"``); the array core
+reproduces its SimStats bit-for-bit on typical traces (see
+tests/test_flashsim_equiv.py) at a large wall-clock speedup (tracked in
+``BENCH_sim.json`` by ``benchmarks/microbench_sim.py``).  One caveat: die
+releases are scheduled with issue-time sequence numbers, so when two
+events collide at the *exact same float timestamp* their order can differ
+from the reference engine's; such ties are rare (a handful of requests per
+hundred thousand) and shift per-request times by at most a transfer slot,
+leaving every distribution statistically unchanged.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import heapq
 from collections import deque
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import characterize as CH
 from repro.core.retry import RetryPolicy
 from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
-from repro.flashsim.workloads import RequestTrace, Workload, generate_trace
+from repro.flashsim.workloads import RequestTrace, Workload, cached_trace
 
 PAGE_TYPE_ORDER = ("lsb", "csb", "msb")
+
+#: Event opcodes (low 2 bits of a heap record's packed code).
+_EV_NEXT = 0    # serial read: sense done -> issue transfer, schedule next
+_EV_COPY = 1    # pipelined read: copy into cache register -> issue transfer
+_EV_ACQ = 2     # write: transfer landed -> acquire die for programming
+_EV_REL = 3     # die release (read end / write program end)
+
+_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -67,15 +114,74 @@ class SimStats:
         )
 
 
-class _Resource:
-    """Single-server FCFS resource (a die or a channel)."""
+@dataclasses.dataclass(frozen=True)
+class TraceExpansion:
+    """Mechanism-independent flat page-op view of a trace (admission order).
 
-    __slots__ = ("busy_until", "queue", "busy_total")
+    Shared across all mechanisms of a sweep: only the per-op attempt counts
+    and sense times depend on the policy, and those are sampled separately.
+    """
 
-    def __init__(self):
-        self.busy_until = 0.0
-        self.queue: deque = deque()
-        self.busy_total = 0.0
+    arrival_us: np.ndarray   # (P,) op admission time = its request's arrival
+    rid: np.ndarray          # (P,) owning request index
+    die: np.ndarray          # (P,) die id
+    chan: np.ndarray         # (P,) channel id
+    ptype: np.ndarray        # (P,) page type index into PAGE_TYPE_ORDER
+    is_read: np.ndarray      # (P,) bool
+    n_requests: int
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.rid.shape[0])
+
+    @functools.cached_property
+    def admission_lists(self):
+        """Mechanism-independent per-op buffers as plain Python lists.
+
+        The event loop reads flat lists (scalar list indexing is ~4x faster
+        than ndarray scalar access); converting once here instead of per
+        ``run()`` lets a mechanism sweep reuse the views.
+        """
+        return (
+            self.arrival_us.tolist(),
+            self.rid.tolist(),
+            self.die.tolist(),
+            self.chan.tolist(),
+            self.is_read.tolist(),
+        )
+
+
+def expand_trace(trace: RequestTrace, cfg: SSDConfig = DEFAULT_SSD) -> TraceExpansion:
+    """Vectorized request -> page-op expansion (no per-request Python loop).
+
+    Ops come out in admission order.  Traces from :func:`generate_trace`
+    arrive sorted; externally-supplied traces (e.g. future MSR/blktrace
+    ingestion) may not, so unsorted arrivals are stably sorted here —
+    matching the retired heap engine's (time, request-index) admission
+    order exactly.
+    """
+    arrival = trace.arrival_us
+    n = len(arrival)
+    if np.any(np.diff(arrival) < 0):
+        req_order = np.argsort(arrival, kind="stable")
+    else:
+        req_order = np.arange(n)
+    n_pages = trace.n_pages[req_order]
+    rid = np.repeat(req_order, n_pages)
+    # Within-request page offsets 0..n_pages[r]-1, flattened.
+    starts = np.cumsum(n_pages) - n_pages
+    off = np.arange(int(n_pages.sum()), dtype=np.int64) - np.repeat(starts, n_pages)
+    page_ids = trace.start_page[rid] + off
+    die = (page_ids % cfg.n_dies).astype(np.int64)
+    return TraceExpansion(
+        arrival_us=trace.arrival_us[rid],
+        rid=rid,
+        die=die,
+        chan=cfg.channel_of(die),
+        ptype=(page_ids % 3).astype(np.int64),
+        is_read=trace.is_read[rid],
+        n_requests=n,
+    )
 
 
 class SSDSim:
@@ -92,6 +198,7 @@ class SSDSim:
         self.cond = condition
         self.policy = policy
         self.rng = np.random.default_rng(seed)
+        self.events_processed = 0
         # AR² tR scale for this operating condition (characterized table).
         if policy.adaptive_tr:
             if policy.tr_scale == "auto":
@@ -102,21 +209,28 @@ class SSDSim:
                 self.tr_scale = float(policy.tr_scale)
         else:
             self.tr_scale = 1.0
-        # Per-page-type attempt-count CDFs under this mechanism.
-        self._attempt_cdfs = {}
-        for pt in PAGE_TYPE_ORDER:
-            hist = CH.attempt_histogram(
+        # Per-page-type attempt-count CDFs under this mechanism (cached
+        # across SSDSim instances in repro.core.characterize).
+        self._attempt_cdfs = {
+            pt: CH.attempt_cdf(
                 condition.retention_days,
                 condition.pec,
                 page_type=pt,
                 sota=policy.sota_start,
                 tr_scale=self.tr_scale,
             )
-            self._attempt_cdfs[pt] = np.cumsum(hist)
+            for pt in PAGE_TYPE_ORDER
+        }
 
     # -- attempt sampling ----------------------------------------------------
 
     def _sample_attempts(self, page_types: np.ndarray) -> np.ndarray:
+        """Inverse-CDF attempt counts for a batch of page-type indices.
+
+        Consumes ``self.rng`` exactly like the retired per-request sampler
+        (one uniform per read page, in admission order), so a given seed
+        yields identical attempts under both engines.
+        """
         u = self.rng.random(page_types.shape)
         out = np.empty(page_types.shape, np.int64)
         for i, pt in enumerate(PAGE_TYPE_ORDER):
@@ -125,9 +239,14 @@ class SSDSim:
                 out[m] = np.searchsorted(self._attempt_cdfs[pt], u[m])
         return np.maximum(out, 1)
 
-    # -- discrete-event engine -------------------------------------------------
+    # -- array event-core ----------------------------------------------------
 
-    def run(self, trace: RequestTrace) -> SimStats:
+    def run(
+        self,
+        trace: RequestTrace,
+        expansion: Optional[TraceExpansion] = None,
+    ) -> SimStats:
+        """Simulate one trace; ``expansion`` may be shared across mechanisms."""
         cfg, t = self.cfg, self.cfg.timing
         tdma, tecc, tprog = t.tdma_us, t.tecc_us, t.tprog_us
         pipelined = self.policy.pipelined
@@ -135,182 +254,204 @@ class SSDSim:
             np.array([t.tr_us[pt] for pt in PAGE_TYPE_ORDER]) * self.tr_scale
         )
 
-        dies = [_Resource() for _ in range(cfg.n_dies)]
-        chans = [_Resource() for _ in range(cfg.n_channels)]
+        ex = expansion if expansion is not None else expand_trace(trace, cfg)
+        P = ex.n_ops
+        read_mask = ex.is_read
 
-        heap: List = []
-        seq = 0
+        # Batched per-trace attempt schedule (admit-time work, done up front).
+        attempts_np = np.ones(P, np.int64)
+        attempts_np[read_mask] = self._sample_attempts(ex.ptype[read_mask])
+        total_read_pages = int(read_mask.sum())
+        total_attempts = int(attempts_np[read_mask].sum())
+        tr_np = tr_by_type[ex.ptype]
 
-        def push(time_, fn, *args):
-            nonlocal seq
-            heapq.heappush(heap, (time_, seq, fn, args))
-            seq += 1
+        # Flat per-op state.  The schedules above are the NumPy source of
+        # truth; the interpreter loop reads them as plain Python buffers —
+        # the mechanism-independent views are converted once per expansion
+        # and shared across a sweep, only the policy-dependent attempt and
+        # sense-time buffers are built per run.
+        adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
+        op_a = attempts_np.tolist()
+        op_tr = tr_np.tolist()
 
-        n = len(trace.arrival_us)
-        req_remaining = np.zeros(n, np.int64)
-        req_done_at = np.zeros(n)
-        total_attempts = 0
-        total_read_pages = 0
+        op_rem = op_a[:]            # serial: attempts left; pipelined: copy idx
+        op_held = [0.0] * P         # die-held-since timestamp
 
-        # ------- resource helpers ------------------------------------------
+        n_dies, n_ch = cfg.n_dies, cfg.n_channels
+        die_busy = [0.0] * n_dies   # busy_until; inf while held
+        die_tot = [0.0] * n_dies
+        dieq = [deque() for _ in range(n_dies)]
+        # Channels are single-server FCFS with constant-duration jobs whose
+        # requests are always issued at the *current* sim time, so a
+        # cumulative busy-until scalar is an exact queue: a transfer's grant
+        # is max(now, busy_until) and its completion is known at issue time.
+        # That removes the per-transfer completion event (and the queue) —
+        # the dominant heap traffic of the retired engine.
+        ch_busy = [0.0] * n_ch
+        ch_tot = [0.0] * n_ch
 
-        def die_acquire(d: int, now: float, fn, *args):
-            res = dies[d]
-            if now >= res.busy_until and not res.queue:
-                res.busy_until = np.inf  # held until explicit release
-                fn(now, *args)
+        req_done = [0.0] * ex.n_requests
+
+        # Heap records are 2-tuples ``(time, seq << 40 | op << 2 | opcode)``:
+        # the packed int both tie-breaks FIFO (seq in the high bits — same
+        # push-order discipline as the reference engine's seq field) and
+        # carries the whole event, so an event costs one tuple, no closures,
+        # no argument unpacking.  All state transitions are inlined: at one
+        # event per read attempt the interpreter dispatch itself is the hot
+        # path, and a helper call per event would cost more than the
+        # transition it performs.
+        heap: list = []
+        push = heapq.heappush
+        pop = heapq.heappop
+        replace = heapq.heapreplace
+        seqc = 0                      # already-shifted seq (increments 1<<40)
+        _SEQ1 = 1 << 40
+        _OPSHIFT_MASK = (1 << 40) - 1
+        n_events = 0
+
+        read_start_ev = _EV_COPY if pipelined else _EV_NEXT
+
+        # Each event handler schedules AT MOST one successor event, so the
+        # pop+push pair collapses into a single heapreplace sift (pop alone
+        # when nothing is scheduled).  Events are peeked, dispatched, then
+        # replaced — never popped first.
+        ai = 0
+        next_adm = adm_t[0] if P else _INF
+        while True:
+            # Admission cursor merged with the heap (admits never queue).
+            if heap:
+                top = heap[0]
+                tt = top[0]
+            elif next_adm < _INF:
+                top = None
+                tt = _INF
             else:
-                res.queue.append((fn, args))
-
-        def die_release(d: int, now: float, held_since: float):
-            res = dies[d]
-            res.busy_total += now - held_since
-            res.busy_until = now
-            if res.queue:
-                fn, args = res.queue.popleft()
-                res.busy_until = np.inf
-                fn(now, *args)
-
-        def chan_request(ch: int, now: float, dur: float, fn):
-            """FCFS channel: start the transfer asap; fn fires at completion.
-
-            The channel chains its own job-done events, so callbacks never
-            manage channel state.
-            """
-            res = chans[ch]
-            if res.busy_until <= now and not res.queue:
-                res.busy_until = now + dur
-                res.busy_total += dur
-                push(now + dur, _chan_job_done, ch, fn)
-            else:
-                res.queue.append((dur, fn))
-
-        def _chan_job_done(tm: float, ch: int, fn):
-            res = chans[ch]
-            if res.queue:
-                dur, fn2 = res.queue.popleft()
-                res.busy_until = tm + dur
-                res.busy_total += dur
-                push(tm + dur, _chan_job_done, ch, fn2)
-            fn(tm)
-
-        # ------- read page-op state machines --------------------------------
-
-        def page_complete(now: float, rid: int):
-            req_remaining[rid] -= 1
-            req_done_at[rid] = max(req_done_at[rid], now)
-
-        def start_read_serial(now: float, rid: int, d: int, ch: int,
-                              a: int, tr: float):
-            held_since = now
-            state = {"i": 0}
-
-            def xfer_done(tm):
-                ecc_done = tm + tecc
-                state["i"] += 1
-                if state["i"] >= a:
-                    die_release(d, tm, held_since)       # die freed at last xfer
-                    page_complete(ecc_done, rid)
+                break
+            if next_adm <= tt:
+                op = ai
+                tm = next_adm
+                ai += 1
+                next_adm = adm_t[ai] if ai < P else _INF
+                # Reads contend for their die; writes go straight to
+                # the channel (program happens after the transfer).
+                if op_read[op]:
+                    d = op_die[op]
+                    if tm >= die_busy[d] and not dieq[d]:
+                        die_busy[d] = _INF
+                        op_held[op] = tm
+                        if pipelined:
+                            op_rem[op] = 0
+                        push(heap, (tm + op_tr[op],
+                                    seqc | op << 2 | read_start_ev))
+                        seqc += _SEQ1
+                    else:
+                        dieq[d].append(op)
                 else:
-                    # Decode failed; firmware re-senses with the next entry.
-                    push(ecc_done + tr, sense_fire)
+                    c = op_ch[op]
+                    b = ch_busy[c]
+                    done = (b if b > tm else tm) + tdma
+                    ch_busy[c] = done
+                    ch_tot[c] += tdma
+                    push(heap, (done, seqc | op << 2 | _EV_ACQ))
+                    seqc += _SEQ1
+                continue
 
-            def sense_fire(tm):
-                chan_request(ch, tm, tdma, xfer_done)
+            tm, code = top
+            ev = code & 3
+            op = (code & _OPSHIFT_MASK) >> 2
+            n_events += 1
 
-            push(now + tr, sense_fire)
-
-        def start_read_pipelined(now: float, rid: int, d: int, ch: int,
-                                 a: int, tr: float):
-            held_since = now
-            sense_done_t = [None] * a       # per-attempt milestones
-            xfer_done_t = [None] * a
-            copied = [False] * a
-
-            def try_copy(i: int, tm: float):
-                """copy_i fires when sense i is done and cache reg is free."""
-                if copied[i] or sense_done_t[i] is None:
-                    return
-                if i > 0 and xfer_done_t[i - 1] is None:
-                    return
-                tc = max(sense_done_t[i], xfer_done_t[i - 1] if i else 0.0)
-                copied[i] = True
-                chan_request(ch, tc, tdma, lambda tm2: on_xfer(i, tm2))
+            if ev == _EV_COPY:
+                # Pipelined copy into the cache register at tm: the sense is
+                # done and the previous transfer has drained.  Issue the
+                # transfer (completion time exact at issue) and schedule the
+                # next copy at max(sense done, transfer drained) — both
+                # already known — or end the sequence.
+                c = op_ch[op]
+                b = ch_busy[c]
+                done = (b if b > tm else tm) + tdma
+                ch_busy[c] = done
+                ch_tot[c] += tdma
+                i = op_rem[op]
+                a = op_a[op]
                 if i + 1 < a:
-                    push(tc + tr, lambda tm2: on_sense(i + 1, tm2))
+                    op_rem[op] = i + 1
+                    tnext = tm + op_tr[op]
+                    if done > tnext:
+                        tnext = done
+                    replace(heap, (tnext, seqc | op << 2 | _EV_COPY))
                 else:
+                    rid = op_rid[op]
+                    fin = done + tecc
+                    if fin > req_done[rid]:
+                        req_done[rid] = fin
                     # Final attempt leaves the die: charge one speculative
                     # sense when the sequence actually retried.
-                    spec = tr if a > 1 else 0.0
-                    push(tc + spec, lambda tm2: die_release(d, tm2, held_since))
-
-            def on_sense(i: int, tm: float):
-                sense_done_t[i] = tm
-                try_copy(i, tm)
-
-            def on_xfer(i: int, tm: float):
-                xfer_done_t[i] = tm
-                if i + 1 < a:
-                    try_copy(i + 1, tm)
-                if i == a - 1:
-                    page_complete(tm + tecc, rid)
-
-            push(now + tr, lambda tm: on_sense(0, tm))
-
-        # ------- write page-op ----------------------------------------------
-
-        def start_write(now: float, rid: int, d: int, ch: int):
-            def xfer_done(tm):
-                die_acquire(d, tm, prog_start)
-
-            def prog_start(tm):
-                push(tm + tprog, lambda tm2: prog_done(tm2))
-                state["held"] = tm
-
-            def prog_done(tm):
-                die_release(d, tm, state["held"])
-                page_complete(tm, rid)
-
-            state = {"held": now}
-            chan_request(ch, now, tdma, xfer_done)
-
-        # ------- request admission ------------------------------------------
-
-        def admit(now: float, rid: int):
-            pages = int(trace.n_pages[rid])
-            first = int(trace.start_page[rid])
-            req_remaining[rid] = pages
-            page_ids = first + np.arange(pages)
-            if trace.is_read[rid]:
-                ptypes = (page_ids % 3).astype(np.int64)
-                attempts = self._sample_attempts(ptypes)
-                nonlocal_totals[0] += int(attempts.sum())
-                nonlocal_totals[1] += pages
-                for j in range(pages):
-                    d = int(page_ids[j] % cfg.n_dies)
-                    ch = d % cfg.n_channels
-                    a = int(attempts[j])
-                    tr = float(tr_by_type[ptypes[j]])
-                    starter = start_read_pipelined if pipelined else start_read_serial
-                    die_acquire(d, now, starter, rid, d, ch, a, tr)
+                    rel = tm + op_tr[op] if a > 1 else tm
+                    replace(heap, (rel, seqc | op << 2 | _EV_REL))
+                seqc += _SEQ1
+            elif ev == _EV_NEXT:
+                # Serial read: sense done at tm -> transfer -> decode; on
+                # failure the firmware re-senses with the next table entry.
+                c = op_ch[op]
+                b = ch_busy[c]
+                done = (b if b > tm else tm) + tdma
+                ch_busy[c] = done
+                ch_tot[c] += tdma
+                rem = op_rem[op] - 1
+                if rem:
+                    op_rem[op] = rem
+                    replace(heap, (done + tecc + op_tr[op],
+                                   seqc | op << 2 | _EV_NEXT))
+                else:
+                    rid = op_rid[op]
+                    fin = done + tecc
+                    if fin > req_done[rid]:
+                        req_done[rid] = fin
+                    # Die freed at last transfer; the decode tail is off-die.
+                    replace(heap, (done, seqc | op << 2 | _EV_REL))
+                seqc += _SEQ1
+            elif ev == _EV_REL:
+                # Die release: read end or write program end.
+                d = op_die[op]
+                die_tot[d] += tm - op_held[op]
+                die_busy[d] = tm
+                dq = dieq[d]
+                if dq:
+                    op2 = dq.popleft()
+                    die_busy[d] = _INF
+                    op_held[op2] = tm
+                    if op_read[op2]:
+                        if pipelined:
+                            op_rem[op2] = 0
+                        replace(heap, (tm + op_tr[op2],
+                                       seqc | op2 << 2 | read_start_ev))
+                    else:
+                        replace(heap, (tm + tprog,
+                                       seqc | op2 << 2 | _EV_REL))
+                    seqc += _SEQ1
+                else:
+                    pop(heap)
+                if not op_read[op]:
+                    rid = op_rid[op]
+                    if tm > req_done[rid]:
+                        req_done[rid] = tm
             else:
-                for j in range(pages):
-                    d = int(page_ids[j] % cfg.n_dies)
-                    ch = d % cfg.n_channels
-                    start_write(now, rid, d, ch)
+                # _EV_ACQ — write transfer landed: acquire the die.
+                d = op_die[op]
+                if tm >= die_busy[d] and not dieq[d]:
+                    die_busy[d] = _INF
+                    op_held[op] = tm
+                    replace(heap, (tm + tprog, seqc | op << 2 | _EV_REL))
+                    seqc += _SEQ1
+                else:
+                    dieq[d].append(op)
+                    pop(heap)
 
-        nonlocal_totals = [0, 0]  # attempts, read pages
+        self.events_processed = n_events
 
-        for rid in range(n):
-            push(float(trace.arrival_us[rid]), admit, rid)
-
-        # ------- main loop ----------------------------------------------------
-
-        while heap:
-            tm, _, fn, args = heapq.heappop(heap)
-            fn(tm, *args)
-
-        total_attempts, total_read_pages = nonlocal_totals
+        req_done_at = np.asarray(req_done)
+        self.last_req_done_us = req_done_at
         response = req_done_at - trace.arrival_us + cfg.host_overhead_us
         read_resp = response[trace.is_read]
         span = float(req_done_at.max())
@@ -320,13 +461,26 @@ class SSDSim:
             p95_us=float(np.percentile(response, 95)),
             p99_us=float(np.percentile(response, 99)),
             read_mean_us=float(read_resp.mean()) if read_resp.size else 0.0,
-            n_requests=n,
+            n_requests=ex.n_requests,
             mean_read_attempts=(
                 total_attempts / total_read_pages if total_read_pages else 0.0
             ),
-            die_util=sum(r.busy_total for r in dies) / (span * cfg.n_dies),
-            channel_util=sum(r.busy_total for r in chans) / (span * cfg.n_channels),
+            die_util=sum(die_tot) / (span * n_dies),
+            channel_util=sum(ch_tot) / (span * n_ch),
         )
+
+
+# -- run API ---------------------------------------------------------------
+
+
+def _make_sim(cfg, condition, mechanism, seed, engine):
+    if engine == "array":
+        return SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed)
+    if engine == "reference":
+        from repro.flashsim.engine_ref import SSDSimRef
+
+        return SSDSimRef(cfg, condition, RetryPolicy(mechanism), seed=seed)
+    raise ValueError(f"unknown engine {engine!r} (use 'array' or 'reference')")
 
 
 def simulate(
@@ -336,12 +490,20 @@ def simulate(
     seed: int = 0,
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
+    trace: Optional[RequestTrace] = None,
+    engine: str = "array",
 ) -> SimStats:
-    """Convenience wrapper: one (workload, condition, mechanism) cell."""
-    if n_requests is not None:
-        workload = dataclasses.replace(workload, n_requests=n_requests)
-    trace = generate_trace(workload, seed=seed)
-    sim = SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed + 7)
+    """Convenience wrapper: one (workload, condition, mechanism) cell.
+
+    Pass ``trace=`` to reuse a pre-generated trace across calls (all
+    mechanisms then see the *same* arrivals); otherwise the trace is
+    generated (and memoized) from ``(workload, seed)``.
+    """
+    if trace is None:
+        if n_requests is not None:
+            workload = dataclasses.replace(workload, n_requests=n_requests)
+        trace = cached_trace(workload, seed=seed)
+    sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
     return sim.run(trace)
 
 
@@ -352,8 +514,58 @@ def compare_mechanisms(
     seed: int = 0,
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
+    engine: str = "array",
 ) -> Dict[str, SimStats]:
-    return {
-        m: simulate(workload, condition, m, seed, cfg, n_requests)
-        for m in mechanisms
-    }
+    """All mechanisms over ONE shared trace (generated once, expanded once)."""
+    if n_requests is not None:
+        workload = dataclasses.replace(workload, n_requests=n_requests)
+    trace = cached_trace(workload, seed=seed)
+    if engine != "array":
+        return {
+            m: simulate(workload, condition, m, seed, cfg, trace=trace,
+                        engine=engine)
+            for m in mechanisms
+        }
+    expansion = expand_trace(trace, cfg)
+    out = {}
+    for m in mechanisms:
+        sim = SSDSim(cfg, condition, RetryPolicy(m), seed=seed + 7)
+        out[m] = sim.run(trace, expansion=expansion)
+    return out
+
+
+def simulate_batch(
+    workload: Workload,
+    conditions: Iterable[OperatingCondition],
+    mechanisms: Sequence[str] = (
+        "baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2",
+    ),
+    seeds: Sequence[int] = (0,),
+    cfg: SSDConfig = DEFAULT_SSD,
+    n_requests: Optional[int] = None,
+    engine: str = "array",
+) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
+    """Sweep (mechanism x condition x seed) cells for one workload.
+
+    Throughput-structured: each seed's trace is generated and expanded once
+    and shared by every (mechanism, condition) cell; characterization
+    tables (AR² safe scales, attempt histograms) are memoized per condition
+    in :mod:`repro.core.characterize`, so the grid pays each JAX
+    characterization exactly once.  Returns
+    ``{(mechanism, condition, seed): SimStats}``.
+    """
+    conditions = tuple(conditions)
+    if n_requests is not None:
+        workload = dataclasses.replace(workload, n_requests=n_requests)
+    out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
+    for s in seeds:
+        trace = cached_trace(workload, seed=s)
+        expansion = expand_trace(trace, cfg) if engine == "array" else None
+        for cond in conditions:
+            for m in mechanisms:
+                sim = _make_sim(cfg, cond, m, s + 7, engine)
+                if expansion is not None:
+                    out[(m, cond, s)] = sim.run(trace, expansion=expansion)
+                else:
+                    out[(m, cond, s)] = sim.run(trace)
+    return out

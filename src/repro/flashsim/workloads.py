@@ -14,6 +14,8 @@ sizes are drawn from a small-page-biased geometric mixture, matching the
 from __future__ import annotations
 
 import dataclasses
+import functools
+import zlib
 from typing import Dict
 
 import numpy as np
@@ -59,8 +61,13 @@ class RequestTrace:
 
 
 def generate_trace(w: Workload, seed: int = 0) -> RequestTrace:
-    """Generate a trace for a profile (deterministic per seed)."""
-    rng = np.random.default_rng(seed ^ hash(w.name) & 0xFFFFFFFF)
+    """Generate a trace for a profile (deterministic per seed).
+
+    The per-profile salt is a stable CRC32 of the name — ``hash(str)`` is
+    randomized per process, which silently made traces unreproducible
+    across runs.
+    """
+    rng = np.random.default_rng(seed ^ zlib.crc32(w.name.encode()))
     n = w.n_requests
 
     # MMPP arrivals: alternate burst (rate*burstiness) and idle phases so
@@ -92,3 +99,18 @@ def generate_trace(w: Workload, seed: int = 0) -> RequestTrace:
     n_pages = rng.geometric(p, n).clip(1, 64)
     start_page = rng.integers(0, 1 << 22, n)
     return RequestTrace(arrival, is_read, n_pages.astype(np.int64), start_page)
+
+
+@functools.lru_cache(maxsize=128)
+def cached_trace(w: Workload, seed: int = 0) -> RequestTrace:
+    """Memoized :func:`generate_trace` — one trace per (workload, seed).
+
+    Mechanism sweeps (``compare_mechanisms``/``simulate_batch``) call this
+    so every mechanism sees the *same* arrivals without regenerating the
+    trace.  The arrays are marked read-only: treat the result as immutable
+    (call :func:`generate_trace` for a private copy).
+    """
+    t = generate_trace(w, seed=seed)
+    for arr in (t.arrival_us, t.is_read, t.n_pages, t.start_page):
+        arr.setflags(write=False)
+    return t

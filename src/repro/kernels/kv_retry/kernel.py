@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; take
+# whichever this installation provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _kv_retry_kernel(q_ref, s_ref, b_ref, out_ref, m_ref, *, tau: float):
     q = q_ref[...].astype(jnp.float32)         # (bp, E)
@@ -59,7 +63,7 @@ def kv_retry_pallas(data_q, scale, backing, *, tau: float = 0.02,
             jax.ShapeDtypeStruct((Pp, E), backing.dtype),
             jax.ShapeDtypeStruct((Pp, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; take
+# whichever this installation provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 from repro.kernels.rber.ref import PAGE_MASKS
 
 
@@ -79,7 +83,7 @@ def rber_pallas(mu, sigma, levels, *, bn: int = 256, bs: int = 128,
             pl.BlockSpec((bn, bs), lambda ni, si: (ni, si)),
         ],
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

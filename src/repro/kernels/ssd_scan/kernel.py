@@ -30,6 +30,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams across versions; take
+# whichever this installation provides.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 CLIP = -60.0  # exp underflow guard, matches the jnp oracle
 
 
@@ -134,7 +138,7 @@ def ssd_scan_fwd(
             jax.ShapeDtypeStruct((BH, ds, hd), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((ds, hd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

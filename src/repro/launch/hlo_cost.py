@@ -101,7 +101,12 @@ def _nbytes(shapes) -> int:
 
 
 def _split_operands(s: str) -> List[str]:
-    """Top-level %name operands of 'opcode(...' up to the closing paren."""
+    """Top-level %name operands of 'opcode(...' up to the closing paren.
+
+    Depending on the XLA version, operands print bare (``%x.1``) or with
+    an inline type (``f32[64,64]{1,0} %x.1``) — take the trailing %token
+    of each top-level comma field either way.
+    """
     out, depth = [], 0
     cur = ""
     for ch in s:
@@ -119,7 +124,12 @@ def _split_operands(s: str) -> List[str]:
             cur = ""
             continue
         cur += ch
-    return [o.lstrip("%") for o in out if o.startswith("%")]
+    names = []
+    for o in out:
+        tok = o.split()[-1]
+        if tok.startswith("%"):
+            names.append(tok.lstrip("%"))
+    return names
 
 
 def _group_size(line: str) -> int:

@@ -3,7 +3,16 @@
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5: explicit axis types on mesh construction
+    from jax.sharding import AxisType
+
+    def _make_mesh(shape, axes):
+        return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+except ImportError:  # older jax: Auto is the only (implicit) axis type
+
+    def _make_mesh(shape, axes):
+        return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,17 +23,11 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Tiny mesh over whatever devices exist (tests / examples on CPU)."""
     n = len(jax.devices())
     assert n % model_parallel == 0
-    return jax.make_mesh(
-        (n // model_parallel, model_parallel),
-        ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
-    )
+    return _make_mesh((n // model_parallel, model_parallel), ("data", "model"))

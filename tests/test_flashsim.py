@@ -3,6 +3,11 @@
 import numpy as np
 import pytest
 
+# Heavyweight DES lane: mechanism-ordering runs need the full aged-condition
+# characterization (AR² grid search).  The fast lane's DES coverage lives in
+# test_flashsim_equiv.py.
+pytestmark = pytest.mark.slow
+
 from repro.core.retry import RetryPolicy
 from repro.flashsim.config import DEFAULT_SSD, OperatingCondition
 from repro.flashsim.ssd import SSDSim, compare_mechanisms, simulate

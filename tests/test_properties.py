@@ -1,5 +1,13 @@
 """Property-based tests (hypothesis) over the system's invariants."""
 
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency 'hypothesis' not installed; "
+           "property tests skipped",
+)
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -113,6 +121,31 @@ def test_elastic_plan_always_valid(n_devices, old_model):
     d, m = p.new_shape
     assert d * m == n_devices
     assert p.grad_accum_factor >= 1
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(0, 2**16),           # seed
+    st.sampled_from(["websearch", "oltp", "prxy"]),
+    st.sampled_from(["baseline", "pr2ar2", "sota"]),
+)
+def test_sim_utilization_in_unit_interval(seed, workload, mechanism):
+    """DES resource accounting is physical: die/channel utilization stays
+    in [0, 1] for any (seed, workload, mechanism)."""
+    from repro.flashsim.config import OperatingCondition
+    from repro.flashsim.ssd import simulate
+    from repro.flashsim.workloads import make_workloads
+
+    s = simulate(
+        make_workloads()[workload],
+        OperatingCondition(365.0, 1000.0),
+        mechanism,
+        seed=seed,
+        n_requests=200,
+    )
+    assert 0.0 <= s.die_util <= 1.0
+    assert 0.0 <= s.channel_util <= 1.0
+    assert s.p50_us <= s.p95_us <= s.p99_us
 
 
 @settings(max_examples=15, deadline=None)

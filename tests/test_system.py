@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight: JAX training + full lowering
+
 from repro.configs import get_config
 from repro.configs.base import ShapeConfig, reduced_config
 from repro.data import CorpusConfig, SyntheticCorpus
@@ -107,7 +109,10 @@ class TestShardedLowering:
         mesh = make_host_mesh()
         jitted, arg_specs, _ = build_cell(cfg, shape, mesh)
         compiled = jitted.lower(*arg_specs).compile()
-        assert compiled.cost_analysis().get("flops", 0) > 0
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):  # older jax returns [dict], newer dict
+            ca = ca[0]
+        assert ca.get("flops", 0) > 0
 
     def test_host_mesh_decode_cell_lowers(self):
         from repro.distributed.steps import build_cell
