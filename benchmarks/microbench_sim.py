@@ -18,12 +18,18 @@ batched pass.
 and the aggregate speedup — the perf trajectory of the simulator is
 tracked through this file from PR 1 onward.
 
+A GC sweep (PR 2) rides along: each write-heavy profile runs with the
+page-mapping FTL off and on, recording write amplification, GC traffic,
+and the host-read p99 inflation GC contention causes — the acceptance
+check is WA > 1.0 and strictly higher host-read p99 with GC enabled.
+
 Usage: PYTHONPATH=src python -m benchmarks.microbench_sim [--n 8000]
-           [--quick] [--skip-reference] [--out BENCH_sim.json]
+           [--quick] [--skip-reference] [--skip-gc] [--out BENCH_sim.json]
 
   --n N             requests per cell (default 8000, the acceptance size)
   --quick           tiny grid + small n (CI smoke; implies --n 1200)
   --skip-reference  only measure the array engine (no speedup column)
+  --skip-gc         skip the FTL/GC sweep cells
   --out PATH        output JSON path (default BENCH_sim.json in cwd)
 """
 
@@ -35,14 +41,26 @@ import json
 import time
 
 from repro.core.retry import RetryPolicy
-from repro.flashsim.config import OperatingCondition
+from repro.flashsim.config import GCConfig, SSDConfig
 from repro.flashsim.engine_ref import SSDSimRef
-from repro.flashsim.ssd import SSDSim, expand_trace
-from repro.flashsim.workloads import PROFILES, cached_trace, generate_trace
+from repro.flashsim.ssd import SSDSim, expand_trace, simulate
+from repro.flashsim.workloads import (
+    GC_PROFILES,
+    PROFILES,
+    cached_trace,
+    generate_trace,
+)
 
 from benchmarks.e2e_response_time import AGED, MODEST
 
 ALL_MECHS = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
+
+#: Requests per GC cell in --quick mode.  GC intensity is non-monotonic
+#: in trace length (capacity auto-sizes with the footprint, which grows
+#: with n); 2500 sits past the near-dead zone around ~2k requests, where
+#: both write-heavy presets reliably churn (prn: ~100 invocations,
+#: rsrch: ~300 at seed 0).
+GC_QUICK_N = 2500
 
 
 def e2e_cells(quick: bool = False):
@@ -117,12 +135,61 @@ def bench_cell(w, cond, mechs, n_requests, seed, skip_reference):
     return row
 
 
+def bench_gc_cell(w, cond, n_requests, seed):
+    """FTL off vs on for one write-heavy profile: WA + read-tail impact.
+
+    Runs baseline and pr2ar2 under both configurations so the row also
+    records how much of the GC-induced read tail the paper's combined
+    mechanism claws back.
+    """
+    w = dataclasses.replace(w, n_requests=n_requests)
+    cfg_gc = SSDConfig(gc=GCConfig(enabled=True))
+    row = {
+        "workload": w.name,
+        "condition": cond.label(),
+        "n_requests": n_requests,
+        "span_pages": w.span_pages,
+    }
+    for mech in ("baseline", "pr2ar2"):
+        t0 = time.perf_counter()
+        off = simulate(w, cond, mech, seed=seed)
+        t1 = time.perf_counter()
+        on = simulate(w, cond, mech, seed=seed, cfg=cfg_gc)
+        t2 = time.perf_counter()
+        row[mech] = {
+            "wall_off_s": round(t1 - t0, 4),
+            "wall_on_s": round(t2 - t1, 4),
+            "read_p99_off_us": round(off.read_p99_us, 1),
+            "read_p99_on_us": round(on.read_p99_us, 1),
+            "read_p99_inflation": round(on.read_p99_us / off.read_p99_us, 2),
+            "mean_off_us": round(off.mean_us, 1),
+            "mean_on_us": round(on.mean_us, 1),
+            "die_util_on": round(on.die_util, 3),
+        }
+        if mech == "baseline":
+            row.update(
+                wa=round(on.wa, 3),
+                gc_invocations=on.gc_invocations,
+                gc_page_reads=on.gc_page_reads,
+                gc_page_progs=on.gc_page_progs,
+                blocks_erased=on.blocks_erased,
+            )
+    # The acceptance properties of the FTL subsystem:
+    row["ok_wa_gt_1"] = row["wa"] > 1.0
+    row["ok_read_p99_higher"] = all(
+        row[m]["read_p99_on_us"] > row[m]["read_p99_off_us"]
+        for m in ("baseline", "pr2ar2")
+    )
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=8000)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-reference", action="store_true")
+    ap.add_argument("--skip-gc", action="store_true")
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args()
     n = 1200 if args.quick else args.n
@@ -142,6 +209,31 @@ def main():
             f"({row['events_per_sec_array'] / 1e6:.2f}M ev/s){spd}"
         )
 
+    gc_rows = []
+    gc_carried = False
+    if args.skip_gc:
+        # Don't clobber the recorded GC trajectory: carry the previous
+        # file's GC cells forward (flagged so readers know they're stale).
+        try:
+            with open(args.out) as f:
+                gc_rows = json.load(f).get("gc_cells", [])
+            gc_carried = bool(gc_rows)
+        except (OSError, ValueError):
+            pass
+    else:
+        n_gc = GC_QUICK_N if args.quick else n
+        gc_profiles = GC_PROFILES[:1] if args.quick else GC_PROFILES
+        for w in gc_profiles:
+            row = bench_gc_cell(w, AGED, n_gc, args.seed)
+            gc_rows.append(row)
+            print(
+                f"GC {w.name:8s} @ {row['condition']:>10s}: "
+                f"WA={row['wa']:.2f} gc_inv={row['gc_invocations']} "
+                f"read_p99 x{row['baseline']['read_p99_inflation']:.1f} "
+                f"(pr2ar2 x{row['pr2ar2']['read_p99_inflation']:.1f}) "
+                f"ok={row['ok_wa_gt_1'] and row['ok_read_p99_higher']}"
+            )
+
     total_array = sum(r["wall_array_s"] for r in rows)
     summary = {
         "n_requests": n,
@@ -157,9 +249,16 @@ def main():
         summary["wall_seed_total_s"] = round(total_ref, 3)
         summary["speedup_total"] = round(total_ref / total_array, 2)
         summary["attempts_match_all"] = all(r["attempts_match"] for r in rows)
+    if gc_rows:
+        summary["gc_wa_max"] = max(r["wa"] for r in gc_rows)
+        summary["gc_acceptance_ok"] = all(
+            r["ok_wa_gt_1"] and r["ok_read_p99_higher"] for r in gc_rows
+        )
+        if gc_carried:
+            summary["gc_cells_carried"] = True  # from a previous run
 
     out = {"benchmark": "flashsim-des-engine", "summary": summary,
-           "cells_detail": rows}
+           "cells_detail": rows, "gc_cells": gc_rows}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

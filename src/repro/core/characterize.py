@@ -250,6 +250,20 @@ def safe_tr_table(
     }
 
 
+def snap_pec(pec: float) -> float:
+    """Snap a continuous P/E count *up* to the characterization grid.
+
+    Used for per-block condition resolution: a block worn past its bin is
+    characterized at the next-worse bin (data only gets older, wear only
+    grows), keeping the set of distinct characterizations bounded by
+    ``PEC_GRID`` regardless of how many wear levels a trace produces.
+    """
+    for p in PEC_GRID:
+        if p >= pec:
+            return float(p)
+    return float(PEC_GRID[-1])
+
+
 def lookup_tr_scale(retention_days: float, pec: float) -> float:
     """AR² table lookup with conservative (next-worse-bin) snapping.
 
@@ -260,9 +274,7 @@ def lookup_tr_scale(retention_days: float, pec: float) -> float:
     # gets older), and likewise for wear — conservative by construction.
     r_candidates = [r for r in RETENTION_GRID_DAYS if r >= retention_days]
     r_bin = r_candidates[0] if r_candidates else RETENTION_GRID_DAYS[-1]
-    p_candidates = [p for p in PEC_GRID if p >= pec]
-    p_bin = p_candidates[0] if p_candidates else PEC_GRID[-1]
-    return characterize_condition(r_bin, p_bin).safe_tr_scale
+    return characterize_condition(r_bin, snap_pec(pec)).safe_tr_scale
 
 
 @functools.lru_cache(maxsize=512)

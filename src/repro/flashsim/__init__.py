@@ -1,6 +1,17 @@
 """MQSim-analogue SSD simulator used for the paper's end-to-end evaluation."""
 
-from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
+from repro.flashsim.config import (
+    DEFAULT_SSD,
+    GCConfig,
+    OperatingCondition,
+    SSDConfig,
+)
+from repro.flashsim.ftl import (
+    FTLSchedule,
+    FTLStats,
+    PageMapFTL,
+    build_ftl_schedule,
+)
 from repro.flashsim.ssd import (
     SSDSim,
     SimStats,
@@ -11,6 +22,7 @@ from repro.flashsim.ssd import (
     simulate_batch,
 )
 from repro.flashsim.workloads import (
+    GC_PROFILES,
     PROFILES,
     RequestTrace,
     Workload,
@@ -21,8 +33,13 @@ from repro.flashsim.workloads import (
 
 __all__ = [
     "DEFAULT_SSD",
+    "GCConfig",
     "OperatingCondition",
     "SSDConfig",
+    "FTLSchedule",
+    "FTLStats",
+    "PageMapFTL",
+    "build_ftl_schedule",
     "SSDSim",
     "SimStats",
     "TraceExpansion",
@@ -30,6 +47,7 @@ __all__ = [
     "expand_trace",
     "simulate",
     "simulate_batch",
+    "GC_PROFILES",
     "PROFILES",
     "RequestTrace",
     "Workload",

@@ -8,6 +8,52 @@ from repro.core.timing import DEFAULT_TIMING, TimingParams
 
 
 @dataclasses.dataclass(frozen=True)
+class GCConfig:
+    """FTL / garbage-collection knobs (see :mod:`repro.flashsim.ftl`).
+
+    With ``enabled=False`` (the default) writes program in place and the
+    simulator behaves exactly as before the FTL existed — bit-identical
+    event streams, no mapping state.  With ``enabled=True`` host writes go
+    through a page-mapping FTL: out-of-place programs, greedy garbage
+    collection, and GC copy-back traffic injected into the event core as
+    page-ops that contend with host reads on die/channel queues.
+    """
+
+    #: Master switch for the page-mapping FTL + garbage collection.
+    enabled: bool = False
+    #: Over-provisioning: fraction of *physical* capacity held as spare
+    #: (industry-typical 7% ~ 0.07).  Used when ``blocks_per_die`` is None
+    #: (auto-sizing from the trace footprint); smaller OP -> earlier and
+    #: heavier GC.
+    op_ratio: float = 0.07
+    #: Physical pages per erase block (pages).  Sim-scaled: real TLC
+    #: erase blocks hold hundreds-to-thousands of pages, but with 64-way
+    #: die parallelism and 10^4-request traces, small blocks let the FTL
+    #: reach steady-state GC within a trace; the WA/contention dynamics
+    #: are geometry-relative (utilization decides them, not block size).
+    pages_per_block: int = 16
+    #: Blocks per die; None auto-sizes from the trace's logical footprint
+    #: so physical capacity = footprint / (1 - op_ratio).
+    blocks_per_die: int | None = None
+    #: GC runs while a die's free-block count is <= this (blocks).
+    gc_threshold_blocks: int = 2
+    #: Block erase latency charged to the die (us; TLC-class ~3 ms).
+    t_erase_us: float = 3000.0
+    #: P/E cycles a block accrues per erase.  1.0 is physical; larger
+    #: values accelerate wear so short traces exercise per-block retry
+    #: growth (the wear axis of Cai et al., arXiv:1706.08642).
+    pec_per_erase: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.op_ratio < 1.0:
+            raise ValueError(f"op_ratio must be in (0, 1), got {self.op_ratio}")
+        if self.pages_per_block < 1:
+            raise ValueError("pages_per_block must be >= 1")
+        if self.gc_threshold_blocks < 1:
+            raise ValueError("gc_threshold_blocks must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
 class SSDConfig:
     """High-end NVMe SSD organization, matching the paper's MQSim setup.
 
@@ -15,14 +61,21 @@ class SSDConfig:
     bandwidth (folded into tDMA), one LDPC engine per channel.
     """
 
+    #: Number of flash channels (each: one shared bus + one LDPC engine).
     n_channels: int = 8
+    #: Dies per channel; total die parallelism = n_channels * dies_per_channel.
     dies_per_channel: int = 8
+    #: LDPC decoders per channel (modeled as a fixed +tECC; see ssd.py).
     ecc_engines_per_channel: int = 1
+    #: Physical page size (KiB); one page-op senses/transfers one page.
     page_kib: int = 16
     #: Host-interface constant overhead per request (us): NVMe submission/
     #: completion, FTL lookup.
     host_overhead_us: float = 8.0
+    #: NAND operation latencies (tR / tDMA / tECC / tPROG, all us).
     timing: TimingParams = DEFAULT_TIMING
+    #: FTL / garbage-collection configuration (disabled by default).
+    gc: GCConfig = GCConfig()
 
     def __post_init__(self):
         if self.n_channels < 1 or self.dies_per_channel < 1:
@@ -44,10 +97,31 @@ class SSDConfig:
 
 @dataclasses.dataclass(frozen=True)
 class OperatingCondition:
-    """Retention age + wear state the SSD is simulated under."""
+    """Retention age + wear state the SSD is simulated under.
 
+    Without an FTL this is a *device-global* condition.  With the FTL/GC
+    layer enabled it is the **base** condition of the whole device, and
+    blocks that garbage collection has erased resolve to a *per-block*
+    condition via :meth:`with_wear` — their retry-attempt distributions
+    are characterized at the block's higher effective P/E count.
+    """
+
+    #: Data retention age (days since program).
     retention_days: float = 90.0
+    #: Program/erase cycles endured (device-wide baseline wear).
     pec: float = 0.0
+
+    def with_wear(self, extra_pec: float) -> "OperatingCondition":
+        """Per-block resolution: this condition plus block-local wear.
+
+        ``extra_pec`` is the additional P/E cycles a specific block has
+        accumulated (e.g. from GC erases) on top of the device baseline.
+        Returns ``self`` unchanged for non-positive wear, so the common
+        unworn path stays identical to the global-condition path.
+        """
+        if extra_pec <= 0:
+            return self
+        return dataclasses.replace(self, pec=self.pec + extra_pec)
 
     def label(self) -> str:
         if self.retention_days >= 30:

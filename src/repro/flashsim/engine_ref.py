@@ -12,6 +12,18 @@ this module is retained for
     speedup over this engine in ``BENCH_sim.json``.
 
 Select it at the API level with ``simulate(..., engine="reference")``.
+
+Parity notes
+------------
+This engine predates the FTL/GC subsystem (:mod:`repro.flashsim.ftl`) and
+models the original *in-place-program* device only.  The array-vs-
+reference equivalence contract therefore covers exactly the surface both
+engines implement: host reads (serial and PR²-pipelined) and host writes,
+with ``SSDConfig.gc.enabled = False`` — including write-heavy traces,
+which tests/test_flashsim_equiv.py pins.  Running it with GC enabled
+raises ``NotImplementedError`` rather than silently simulating a
+different device; FTL runs are validated by their own invariant tests
+(tests/test_ftl.py) instead of by cross-engine equivalence.
 """
 
 from __future__ import annotations
@@ -52,7 +64,14 @@ class SSDSimRef(SSDSim):
         self,
         trace: RequestTrace,
         expansion: Optional[TraceExpansion] = None,  # unused: closure engine
+        schedule=None,                               # FTL: not supported here
     ) -> SimStats:
+        if schedule is not None or self.cfg.gc.enabled:
+            raise NotImplementedError(
+                "the reference (seed) engine predates the FTL/GC subsystem; "
+                "run FTL configurations with engine='array' "
+                "(see the parity notes in repro/flashsim/engine_ref.py)"
+            )
         cfg, t = self.cfg, self.cfg.timing
         tdma, tecc, tprog = t.tdma_us, t.tecc_us, t.tprog_us
         pipelined = self.policy.pipelined
@@ -255,4 +274,7 @@ class SSDSimRef(SSDSim):
             ),
             die_util=sum(r.busy_total for r in dies) / (span * cfg.n_dies),
             channel_util=sum(r.busy_total for r in chans) / (span * cfg.n_channels),
+            read_p99_us=(
+                float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
+            ),
         )

@@ -29,24 +29,21 @@ the paper performs.
 
 Engine architecture
 -------------------
-The original engine scheduled a Python closure per page-op state transition
-on a ``(time, seq, fn, args)`` tuple heap and sampled attempt counts per
-request at admit time.  The hot path is now an integer-opcode event core:
+The event core is an integer-opcode interpreter over flat arrays:
 
   * the whole trace is expanded to flat per-page-op NumPy arrays up front
     (:func:`expand_trace`), and attempt counts for every read page are
     sampled in one batched pass — the RNG stream is consumed in the same
-    order as the old per-request sampler, so attempt assignments are
+    order as the retired per-request sampler, so attempt assignments are
     bit-identical for a given seed;
-  * heap records are ``(time, seq, op_id << 2 | opcode)`` — no closures,
-    no argument tuples; the serial and PR²-pipelined read state machines
-    and the write path are opcode transitions over preallocated per-op
-    state buffers;
+  * heap records are 2-tuples ``(time, seq << 40 | op_id << 2 | opcode)``
+    — no closures, no argument tuples; the serial and PR²-pipelined read
+    state machines, the write path, and block erases are opcode
+    transitions over preallocated per-op state buffers;
   * admissions never enter the heap: page-ops are pre-sorted by arrival
     time and merged into the event loop with a moving cursor;
-  * die/channel FCFS state lives in flat ``busy_until``/``busy_total``
-    buffers with per-resource FIFO queues.
-
+  * die FCFS state lives in flat ``busy_until``/``busy_total`` buffers
+    with per-die FIFO queues;
   * channels are single-server FCFS with constant-duration transfers whose
     requests are always issued at the current sim time, so channel state
     collapses to a cumulative busy-until scalar: a transfer's grant and
@@ -54,16 +51,31 @@ request at admit time.  The hot path is now an integer-opcode event core:
     completion event (and the channel queues) entirely — one heap event
     per read attempt instead of two.
 
-The retired closure engine is preserved in
+FTL / garbage collection (``SSDConfig.gc.enabled``)
+---------------------------------------------------
+By default writes program in place and the flash never fills.  With the
+page-mapping FTL enabled (:mod:`repro.flashsim.ftl`), a deterministic
+pre-pass maps every host op and interleaves GC copy-back page-ops
+(``OP_GC_READ`` / ``OP_GC_PROG`` / ``OP_ERASE``) into the admission
+stream.  Inside the event loop they are ordinary page-ops scheduled
+through the same heap — GC reads run the policy's read state machine
+(with retry attempts sampled at the victim block's *per-block* wear via
+``OperatingCondition.with_wear``), GC programs transfer over the channel
+and hold the die for tPROG, and erases hold the die for ``t_erase_us`` —
+so GC traffic contends with host reads on the die queues, and SimStats
+gains write-amplification / GC counters plus host-read p99.
+
+The seed engine (PR 1's closure-based DES) is preserved in
 :mod:`repro.flashsim.engine_ref` (``engine="reference"``); the array core
-reproduces its SimStats bit-for-bit on typical traces (see
+reproduces its SimStats bit-for-bit on fixed in-place traces (see
 tests/test_flashsim_equiv.py) at a large wall-clock speedup (tracked in
-``BENCH_sim.json`` by ``benchmarks/microbench_sim.py``).  One caveat: die
-releases are scheduled with issue-time sequence numbers, so when two
-events collide at the *exact same float timestamp* their order can differ
-from the reference engine's; such ties are rare (a handful of requests per
-hundred thousand) and shift per-request times by at most a transfer slot,
-leaving every distribution statistically unchanged.
+``BENCH_sim.json`` by ``benchmarks/microbench_sim.py``).  The reference
+engine predates the FTL and only validates the in-place path.  One
+caveat: die releases are scheduled with issue-time sequence numbers, so
+when two events collide at the *exact same float timestamp* their order
+can differ from the reference engine's; such ties are rare (a handful of
+requests per hundred thousand) and shift per-request times by at most a
+transfer slot, leaving every distribution statistically unchanged.
 """
 
 from __future__ import annotations
@@ -87,31 +99,46 @@ PAGE_TYPE_ORDER = ("lsb", "csb", "msb")
 _EV_NEXT = 0    # serial read: sense done -> issue transfer, schedule next
 _EV_COPY = 1    # pipelined read: copy into cache register -> issue transfer
 _EV_ACQ = 2     # write: transfer landed -> acquire die for programming
-_EV_REL = 3     # die release (read end / write program end)
+_EV_REL = 3     # die release (read end / program end / erase end)
 
 _INF = float("inf")
 
 
 @dataclasses.dataclass
 class SimStats:
-    """Response-time statistics over completed requests (microseconds)."""
+    """Response-time statistics over completed requests.
 
-    mean_us: float
-    p50_us: float
+    All times are microseconds; utilizations are fractions of the trace
+    span.  The GC block (``wa`` onward) is populated only when the run
+    went through the FTL (``SSDConfig.gc.enabled``); with the FTL off the
+    defaults state the in-place-program facts (WA = 1.0, no GC traffic).
+    """
+
+    mean_us: float            # mean response time over ALL requests (us)
+    p50_us: float             # response-time percentiles, all requests (us)
     p95_us: float
     p99_us: float
-    read_mean_us: float
-    n_requests: int
-    mean_read_attempts: float
-    die_util: float
-    channel_util: float
+    read_mean_us: float       # mean response time over host READS only (us)
+    n_requests: int           # completed requests (reads + writes)
+    mean_read_attempts: float # read attempts per host read page (>= 1)
+    die_util: float           # busy fraction, averaged over dies [0, 1]
+    channel_util: float       # busy fraction, averaged over channels [0, 1]
+    read_p99_us: float = 0.0  # p99 response time over host READS only (us)
+    wa: float = 1.0           # write amplification: phys/host programs
+    gc_invocations: int = 0   # GC victim-collection passes
+    gc_page_reads: int = 0    # pages read back by GC copy-back
+    gc_page_progs: int = 0    # pages re-programmed by GC copy-back
+    blocks_erased: int = 0    # blocks erased by GC
 
     def as_row(self) -> str:
-        return (
+        row = (
             f"mean={self.mean_us:9.1f}us p50={self.p50_us:8.1f} p95={self.p95_us:9.1f} "
             f"p99={self.p99_us:9.1f} attempts={self.mean_read_attempts:5.2f} "
             f"die_u={self.die_util:.2f} ch_u={self.channel_util:.2f}"
         )
+        if self.wa > 1.0 or self.gc_invocations:
+            row += f" wa={self.wa:.2f} gc={self.gc_invocations}"
+        return row
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,12 +149,13 @@ class TraceExpansion:
     and sense times depend on the policy, and those are sampled separately.
     """
 
-    arrival_us: np.ndarray   # (P,) op admission time = its request's arrival
+    arrival_us: np.ndarray   # (P,) op admission time = its request's arrival (us)
     rid: np.ndarray          # (P,) owning request index
     die: np.ndarray          # (P,) die id
     chan: np.ndarray         # (P,) channel id
     ptype: np.ndarray        # (P,) page type index into PAGE_TYPE_ORDER
     is_read: np.ndarray      # (P,) bool
+    page_id: np.ndarray      # (P,) logical page number (FTL input)
     n_requests: int
 
     @property
@@ -180,6 +208,7 @@ def expand_trace(trace: RequestTrace, cfg: SSDConfig = DEFAULT_SSD) -> TraceExpa
         chan=cfg.channel_of(die),
         ptype=(page_ids % 3).astype(np.int64),
         is_read=trace.is_read[rid],
+        page_id=page_ids.astype(np.int64),
         n_requests=n,
     )
 
@@ -224,19 +253,60 @@ class SSDSim:
 
     # -- attempt sampling ----------------------------------------------------
 
-    def _sample_attempts(self, page_types: np.ndarray) -> np.ndarray:
+    def _cdf_for(self, page_type: str, wear_pec: float) -> np.ndarray:
+        """Attempt CDF for one page type at a block's effective wear.
+
+        ``wear_pec`` is the block-local added P/E count from GC erases.
+        Zero wear uses the device-condition table untouched (bit-identical
+        to the pre-FTL sampler); worn blocks resolve the condition per
+        block (``OperatingCondition.with_wear``) and snap the effective
+        P/E count up to the characterization grid, so the handful of
+        distinct wear bins stays cache-bounded.  The search still executes
+        at the *device-condition* AR² tR scale — the firmware looks its
+        scale up per condition, not per block (per-block scale resolution
+        is a noted ROADMAP follow-up) — so worn blocks honestly pay extra
+        attempts rather than silently sensing slower.
+        """
+        if wear_pec <= 0.0:
+            return self._attempt_cdfs[page_type]
+        worn = self.cond.with_wear(wear_pec)
+        return CH.attempt_cdf(
+            self.cond.retention_days,
+            CH.snap_pec(worn.pec),
+            page_type=page_type,
+            sota=self.policy.sota_start,
+            tr_scale=self.tr_scale,
+        )
+
+    def _sample_attempts(
+        self,
+        page_types: np.ndarray,
+        wear_pec: Optional[np.ndarray] = None,
+    ) -> np.ndarray:
         """Inverse-CDF attempt counts for a batch of page-type indices.
 
         Consumes ``self.rng`` exactly like the retired per-request sampler
         (one uniform per read page, in admission order), so a given seed
-        yields identical attempts under both engines.
+        yields identical attempts under both engines.  With ``wear_pec``
+        (FTL runs) each read samples from the CDF of its block's effective
+        wear; the uniform stream is unchanged, only the inverse CDF varies.
         """
         u = self.rng.random(page_types.shape)
         out = np.empty(page_types.shape, np.int64)
         for i, pt in enumerate(PAGE_TYPE_ORDER):
             m = page_types == i
-            if m.any():
+            if not m.any():
+                continue
+            if wear_pec is None:
                 out[m] = np.searchsorted(self._attempt_cdfs[pt], u[m])
+            else:
+                um, wm = u[m], wear_pec[m]
+                om = np.empty(um.shape, np.int64)
+                for wv in np.unique(wm):
+                    sel = wm == wv
+                    om[sel] = np.searchsorted(self._cdf_for(pt, float(wv)),
+                                              um[sel])
+                out[m] = om
         return np.maximum(out, 1)
 
     # -- array event-core ----------------------------------------------------
@@ -245,8 +315,15 @@ class SSDSim:
         self,
         trace: RequestTrace,
         expansion: Optional[TraceExpansion] = None,
+        schedule=None,
     ) -> SimStats:
-        """Simulate one trace; ``expansion`` may be shared across mechanisms."""
+        """Simulate one trace.
+
+        ``expansion`` (in-place runs) or ``schedule`` (an
+        :class:`repro.flashsim.ftl.FTLSchedule`, FTL/GC runs) may be
+        shared across the mechanisms of a sweep.  When ``cfg.gc.enabled``
+        and no schedule is supplied, the FTL pre-pass runs here.
+        """
         cfg, t = self.cfg, self.cfg.timing
         tdma, tecc, tprog = t.tdma_us, t.tecc_us, t.tprog_us
         pipelined = self.policy.pipelined
@@ -254,23 +331,50 @@ class SSDSim:
             np.array([t.tr_us[pt] for pt in PAGE_TYPE_ORDER]) * self.tr_scale
         )
 
-        ex = expansion if expansion is not None else expand_trace(trace, cfg)
-        P = ex.n_ops
-        read_mask = ex.is_read
+        if schedule is None and cfg.gc.enabled:
+            from repro.flashsim.ftl import build_ftl_schedule
 
-        # Batched per-trace attempt schedule (admit-time work, done up front).
-        attempts_np = np.ones(P, np.int64)
-        attempts_np[read_mask] = self._sample_attempts(ex.ptype[read_mask])
-        total_read_pages = int(read_mask.sum())
-        total_attempts = int(attempts_np[read_mask].sum())
-        tr_np = tr_by_type[ex.ptype]
+            schedule = build_ftl_schedule(trace, cfg)
+
+        if schedule is not None:
+            # FTL path: host + GC page-ops, attempts sampled per block wear.
+            from repro.flashsim import ftl as _ftl
+
+            P = schedule.n_ops
+            host_read_np = schedule.kind == _ftl.OP_READ
+            read_like_np = schedule.kind <= _ftl.OP_GC_READ
+            attempts_np = np.ones(P, np.int64)
+            attempts_np[read_like_np] = self._sample_attempts(
+                schedule.ptype[read_like_np],
+                schedule.wear_pec[read_like_np],
+            )
+            total_read_pages = int(host_read_np.sum())
+            total_attempts = int(attempts_np[host_read_np].sum())
+            tr_np = tr_by_type[schedule.ptype]
+            (adm_t, op_rid, op_die, op_ch, op_read,
+             op_erase, op_dur) = schedule.admission_lists
+            n_requests = schedule.n_requests
+        else:
+            ex = expansion if expansion is not None else expand_trace(trace, cfg)
+            P = ex.n_ops
+            read_mask = ex.is_read
+
+            # Batched per-trace attempt schedule (admit-time work, up front).
+            attempts_np = np.ones(P, np.int64)
+            attempts_np[read_mask] = self._sample_attempts(ex.ptype[read_mask])
+            total_read_pages = int(read_mask.sum())
+            total_attempts = int(attempts_np[read_mask].sum())
+            tr_np = tr_by_type[ex.ptype]
+            adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
+            op_erase = [False] * P      # no erase traffic without the FTL
+            op_dur = [tprog] * P        # write-like ops all program-length
+            n_requests = ex.n_requests
 
         # Flat per-op state.  The schedules above are the NumPy source of
         # truth; the interpreter loop reads them as plain Python buffers —
-        # the mechanism-independent views are converted once per expansion
-        # and shared across a sweep, only the policy-dependent attempt and
-        # sense-time buffers are built per run.
-        adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
+        # the mechanism-independent views are converted once per
+        # expansion/schedule and shared across a sweep, only the
+        # policy-dependent attempt and sense-time buffers are built per run.
         op_a = attempts_np.tolist()
         op_tr = tr_np.tolist()
 
@@ -290,7 +394,7 @@ class SSDSim:
         ch_busy = [0.0] * n_ch
         ch_tot = [0.0] * n_ch
 
-        req_done = [0.0] * ex.n_requests
+        req_done = [0.0] * n_requests
 
         # Heap records are 2-tuples ``(time, seq << 40 | op << 2 | opcode)``:
         # the packed int both tie-breaks FIFO (seq in the high bits — same
@@ -333,7 +437,8 @@ class SSDSim:
                 ai += 1
                 next_adm = adm_t[ai] if ai < P else _INF
                 # Reads contend for their die; writes go straight to
-                # the channel (program happens after the transfer).
+                # the channel (program happens after the transfer);
+                # erases hold their die with no channel traffic.
                 if op_read[op]:
                     d = op_die[op]
                     if tm >= die_busy[d] and not dieq[d]:
@@ -343,6 +448,16 @@ class SSDSim:
                             op_rem[op] = 0
                         push(heap, (tm + op_tr[op],
                                     seqc | op << 2 | read_start_ev))
+                        seqc += _SEQ1
+                    else:
+                        dieq[d].append(op)
+                elif op_erase[op]:
+                    d = op_die[op]
+                    if tm >= die_busy[d] and not dieq[d]:
+                        die_busy[d] = _INF
+                        op_held[op] = tm
+                        push(heap, (tm + op_dur[op],
+                                    seqc | op << 2 | _EV_REL))
                         seqc += _SEQ1
                     else:
                         dieq[d].append(op)
@@ -382,9 +497,10 @@ class SSDSim:
                     replace(heap, (tnext, seqc | op << 2 | _EV_COPY))
                 else:
                     rid = op_rid[op]
-                    fin = done + tecc
-                    if fin > req_done[rid]:
-                        req_done[rid] = fin
+                    if rid >= 0:            # GC reads complete no request
+                        fin = done + tecc
+                        if fin > req_done[rid]:
+                            req_done[rid] = fin
                     # Final attempt leaves the die: charge one speculative
                     # sense when the sequence actually retried.
                     rel = tm + op_tr[op] if a > 1 else tm
@@ -405,14 +521,15 @@ class SSDSim:
                                    seqc | op << 2 | _EV_NEXT))
                 else:
                     rid = op_rid[op]
-                    fin = done + tecc
-                    if fin > req_done[rid]:
-                        req_done[rid] = fin
+                    if rid >= 0:            # GC reads complete no request
+                        fin = done + tecc
+                        if fin > req_done[rid]:
+                            req_done[rid] = fin
                     # Die freed at last transfer; the decode tail is off-die.
                     replace(heap, (done, seqc | op << 2 | _EV_REL))
                 seqc += _SEQ1
             elif ev == _EV_REL:
-                # Die release: read end or write program end.
+                # Die release: read end, write program end, or erase end.
                 d = op_die[op]
                 die_tot[d] += tm - op_held[op]
                 die_busy[d] = tm
@@ -427,14 +544,16 @@ class SSDSim:
                         replace(heap, (tm + op_tr[op2],
                                        seqc | op2 << 2 | read_start_ev))
                     else:
-                        replace(heap, (tm + tprog,
+                        # Program or erase: hold the die for the op's
+                        # duration (tPROG / t_erase), then release.
+                        replace(heap, (tm + op_dur[op2],
                                        seqc | op2 << 2 | _EV_REL))
                     seqc += _SEQ1
                 else:
                     pop(heap)
                 if not op_read[op]:
                     rid = op_rid[op]
-                    if tm > req_done[rid]:
+                    if rid >= 0 and tm > req_done[rid]:
                         req_done[rid] = tm
             else:
                 # _EV_ACQ — write transfer landed: acquire the die.
@@ -442,7 +561,7 @@ class SSDSim:
                 if tm >= die_busy[d] and not dieq[d]:
                     die_busy[d] = _INF
                     op_held[op] = tm
-                    replace(heap, (tm + tprog, seqc | op << 2 | _EV_REL))
+                    replace(heap, (tm + op_dur[op], seqc | op << 2 | _EV_REL))
                     seqc += _SEQ1
                 else:
                     dieq[d].append(op)
@@ -455,22 +574,54 @@ class SSDSim:
         response = req_done_at - trace.arrival_us + cfg.host_overhead_us
         read_resp = response[trace.is_read]
         span = float(req_done_at.max())
+        gc_kw = {}
+        if schedule is not None:
+            # GC traffic can outlive the last host completion (an erase
+            # triggered by the final write holds its die past it); extend
+            # the utilization span to the last resource release so
+            # die/channel utilization stays a fraction in [0, 1].  After
+            # the loop every die_busy/ch_busy entry is a finite release
+            # time.  (In-place runs keep the host-completion span for
+            # bit-parity with the reference engine.)
+            span = max(span, max(die_busy), max(ch_busy))
+            fs = schedule.stats
+            gc_kw = dict(
+                wa=fs.write_amplification,
+                gc_invocations=fs.gc_invocations,
+                gc_page_reads=fs.gc_page_reads,
+                gc_page_progs=fs.gc_page_progs,
+                blocks_erased=fs.blocks_erased,
+            )
         return SimStats(
             mean_us=float(response.mean()),
             p50_us=float(np.percentile(response, 50)),
             p95_us=float(np.percentile(response, 95)),
             p99_us=float(np.percentile(response, 99)),
             read_mean_us=float(read_resp.mean()) if read_resp.size else 0.0,
-            n_requests=ex.n_requests,
+            n_requests=n_requests,
             mean_read_attempts=(
                 total_attempts / total_read_pages if total_read_pages else 0.0
             ),
             die_util=sum(die_tot) / (span * n_dies),
             channel_util=sum(ch_tot) / (span * n_ch),
+            read_p99_us=(
+                float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
+            ),
+            **gc_kw,
         )
 
 
 # -- run API ---------------------------------------------------------------
+
+
+def _shared_views(trace, cfg):
+    """(expansion, schedule) pair shared by every mechanism of a sweep."""
+    expansion = expand_trace(trace, cfg)
+    if not cfg.gc.enabled:
+        return expansion, None
+    from repro.flashsim.ftl import build_ftl_schedule
+
+    return expansion, build_ftl_schedule(trace, cfg, expansion=expansion)
 
 
 def _make_sim(cfg, condition, mechanism, seed, engine):
@@ -497,7 +648,10 @@ def simulate(
 
     Pass ``trace=`` to reuse a pre-generated trace across calls (all
     mechanisms then see the *same* arrivals); otherwise the trace is
-    generated (and memoized) from ``(workload, seed)``.
+    generated (and memoized) from ``(workload, seed)``.  With
+    ``cfg.gc.enabled`` the trace runs through the page-mapping FTL
+    (:mod:`repro.flashsim.ftl`) and the returned stats carry WA/GC
+    counters; the reference engine predates the FTL and rejects it.
     """
     if trace is None:
         if n_requests is not None:
@@ -516,7 +670,12 @@ def compare_mechanisms(
     n_requests: Optional[int] = None,
     engine: str = "array",
 ) -> Dict[str, SimStats]:
-    """All mechanisms over ONE shared trace (generated once, expanded once)."""
+    """All mechanisms over ONE shared trace (generated once, expanded once).
+
+    With ``cfg.gc.enabled`` the FTL pre-pass also runs once and its
+    schedule is shared: every mechanism sees identical GC traffic and
+    per-block wear, so mechanism deltas isolate the retry policy.
+    """
     if n_requests is not None:
         workload = dataclasses.replace(workload, n_requests=n_requests)
     trace = cached_trace(workload, seed=seed)
@@ -526,11 +685,11 @@ def compare_mechanisms(
                         engine=engine)
             for m in mechanisms
         }
-    expansion = expand_trace(trace, cfg)
+    expansion, schedule = _shared_views(trace, cfg)
     out = {}
     for m in mechanisms:
         sim = SSDSim(cfg, condition, RetryPolicy(m), seed=seed + 7)
-        out[m] = sim.run(trace, expansion=expansion)
+        out[m] = sim.run(trace, expansion=expansion, schedule=schedule)
     return out
 
 
@@ -547,11 +706,12 @@ def simulate_batch(
 ) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
     """Sweep (mechanism x condition x seed) cells for one workload.
 
-    Throughput-structured: each seed's trace is generated and expanded once
-    and shared by every (mechanism, condition) cell; characterization
-    tables (AR² safe scales, attempt histograms) are memoized per condition
-    in :mod:`repro.core.characterize`, so the grid pays each JAX
-    characterization exactly once.  Returns
+    Throughput-structured: each seed's trace is generated and expanded
+    once — and, with ``cfg.gc.enabled``, run through the FTL pre-pass
+    once — then shared by every (mechanism, condition) cell;
+    characterization tables (AR² safe scales, attempt histograms) are
+    memoized per condition in :mod:`repro.core.characterize`, so the grid
+    pays each JAX characterization exactly once.  Returns
     ``{(mechanism, condition, seed): SimStats}``.
     """
     conditions = tuple(conditions)
@@ -560,12 +720,16 @@ def simulate_batch(
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
     for s in seeds:
         trace = cached_trace(workload, seed=s)
-        expansion = expand_trace(trace, cfg) if engine == "array" else None
+        if engine == "array":
+            expansion, schedule = _shared_views(trace, cfg)
+        else:
+            expansion = schedule = None
         for cond in conditions:
             for m in mechanisms:
                 sim = _make_sim(cfg, cond, m, s + 7, engine)
                 if expansion is not None:
-                    out[(m, cond, s)] = sim.run(trace, expansion=expansion)
+                    out[(m, cond, s)] = sim.run(trace, expansion=expansion,
+                                                schedule=schedule)
                 else:
                     out[(m, cond, s)] = sim.run(trace)
     return out

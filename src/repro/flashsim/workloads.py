@@ -1,10 +1,12 @@
-"""Six workload profiles with distinct I/O characteristics.
+"""Workload profiles with distinct I/O characteristics.
 
 The paper evaluates on six real-world block traces.  Traces are not
 redistributable, so we generate statistically-shaped equivalents covering
 the same axes the paper varies: read ratio (read-dominant vs mixed),
-request size, arrival burstiness, and intensity.  Profiles are named after
-the MSR-Cambridge / enterprise classes they emulate.
+request size, arrival burstiness, and intensity — plus a logical-span
+axis that the write-heavy FTL/GC profiles (``GC_PROFILES``) shrink to
+force overwrites and garbage collection.  Profiles are named after the
+MSR-Cambridge / enterprise classes they emulate.
 
 Arrivals are a Markov-modulated Poisson process (bursty <-> idle phases);
 sizes are drawn from a small-page-biased geometric mixture, matching the
@@ -23,12 +25,19 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class Workload:
+    """One synthetic trace profile (the generator's six statistical axes)."""
+
     name: str
-    read_ratio: float          # fraction of requests that are reads
+    read_ratio: float          # fraction of requests that are reads [0, 1]
     iops: float                # mean arrival rate (requests/s)
     burstiness: float          # >1: bursty MMPP; 1: plain Poisson
-    mean_pages: float          # mean request size in 16 KiB pages
-    n_requests: int = 20000
+    mean_pages: float          # mean request size (16 KiB pages)
+    n_requests: int = 20000    # trace length (requests)
+    #: Logical address-space footprint (pages).  The paper's read-dominant
+    #: profiles roam a large cold span; write-heavy FTL/GC profiles use a
+    #: small span so sustained writes overwrite hot data, fill the
+    #: over-provisioned capacity, and force garbage collection.
+    span_pages: int = 1 << 22
 
     @property
     def read_dominant(self) -> bool:
@@ -45,19 +54,36 @@ PROFILES = (
     Workload("prxy",      read_ratio=0.55, iops=12000, burstiness=2.0, mean_pages=1.4),
 )
 
+#: Write-heavy MMPP profiles for the FTL/GC regime (MSR-Cambridge print/
+#: research-server classes: ~90% writes re-walking a small hot span).
+#: Sustained small-span overwrites are what fill the over-provisioned
+#: capacity and keep the garbage collector busy — the contention regime
+#: the in-place simulator could never reach.
+GC_PROFILES = (
+    Workload("prn",   read_ratio=0.11, iops=16000, burstiness=2.0,
+             mean_pages=1.6, span_pages=1 << 13),
+    Workload("rsrch", read_ratio=0.09, iops=10000, burstiness=3.0,
+             mean_pages=1.1, span_pages=1 << 12),
+)
+
 
 def make_workloads() -> Dict[str, Workload]:
-    return {w.name: w for w in PROFILES}
+    """Name -> profile map over the paper's six profiles + GC profiles."""
+    return {w.name: w for w in PROFILES + GC_PROFILES}
 
 
 @dataclasses.dataclass
 class RequestTrace:
-    """Flat arrays describing one generated trace (times in us)."""
+    """Flat arrays describing one trace (generated or externally loaded).
 
-    arrival_us: np.ndarray     # (N,) sorted arrival times
-    is_read: np.ndarray        # (N,) bool
-    n_pages: np.ndarray        # (N,) int, pages per request
-    start_page: np.ndarray     # (N,) int, first logical page (for striping)
+    Requests touch ``n_pages`` consecutive logical pages starting at
+    ``start_page``; the simulator stripes logical pages across dies.
+    """
+
+    arrival_us: np.ndarray     # (N,) arrival times (us; need not be sorted)
+    is_read: np.ndarray        # (N,) bool: True = read, False = write
+    n_pages: np.ndarray        # (N,) request length (16 KiB pages)
+    start_page: np.ndarray     # (N,) first logical page number
 
 
 def generate_trace(w: Workload, seed: int = 0) -> RequestTrace:
@@ -97,7 +123,7 @@ def generate_trace(w: Workload, seed: int = 0) -> RequestTrace:
     # Geometric page counts with the requested mean (>= 1 page).
     p = min(1.0 / w.mean_pages, 1.0)
     n_pages = rng.geometric(p, n).clip(1, 64)
-    start_page = rng.integers(0, 1 << 22, n)
+    start_page = rng.integers(0, w.span_pages, n)
     return RequestTrace(arrival, is_read, n_pages.astype(np.int64), start_page)
 
 

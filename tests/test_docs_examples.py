@@ -1,0 +1,54 @@
+"""Execute every ```python code block in README.md and docs/*.md.
+
+The CI docs lane runs this module so quick-start snippets cannot rot:
+a renamed API, changed default, or stale assertion in the docs fails the
+build.  Blocks execute top-to-bottom *per document* in one shared
+namespace (later snippets may reuse names introduced earlier), each
+document isolated from the others.
+
+Keep doc snippets small (n_requests <= 2000) — they run in CI.
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOCS = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+
+_BLOCK_RE = re.compile(r"```python\n(.*?)```", re.S)
+
+
+def _doc_params():
+    for path in DOCS:
+        if not path.exists():
+            continue
+        blocks = _BLOCK_RE.findall(path.read_text())
+        if blocks:
+            yield pytest.param(path, blocks, id=path.name)
+
+
+@pytest.mark.parametrize("path,blocks", list(_doc_params()))
+def test_doc_snippets_execute(path, blocks):
+    ns = {"__name__": f"doc_snippet[{path.name}]"}
+    for i, code in enumerate(blocks):
+        try:
+            exec(compile(code, f"<{path.name} block {i}>", "exec"), ns)
+        except Exception as e:  # pragma: no cover - failure reporting
+            pytest.fail(
+                f"{path.name} code block {i} failed: {type(e).__name__}: {e}\n"
+                f"--- block ---\n{code}"
+            )
+
+
+def test_docs_exist_and_have_snippets():
+    """README and the flashsim architecture doc must exist and carry
+    executable quick-start examples."""
+    readme = ROOT / "README.md"
+    flashsim = ROOT / "docs" / "flashsim.md"
+    assert readme.exists() and flashsim.exists()
+    assert len(_BLOCK_RE.findall(readme.read_text())) >= 3
+    assert len(_BLOCK_RE.findall(flashsim.read_text())) >= 2

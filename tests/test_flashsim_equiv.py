@@ -32,7 +32,7 @@ AGED = OperatingCondition(365.0, 1000.0)
 MODEST = OperatingCondition(30.0, 0.0)
 
 STAT_FIELDS = (
-    "mean_us", "p50_us", "p95_us", "p99_us", "read_mean_us",
+    "mean_us", "p50_us", "p95_us", "p99_us", "read_mean_us", "read_p99_us",
     "n_requests", "mean_read_attempts", "die_util", "channel_util",
 )
 
@@ -103,6 +103,21 @@ class TestSeedEquivalence:
             sr = r.run(shuffled)
             assert sa.mean_us > 0
             assert _stats_tuple(sa) == _stats_tuple(sr)
+
+    @pytest.mark.parametrize("workload", ["prn", "rsrch"])
+    def test_write_heavy_presets_match_reference(self, workload):
+        """The FTL-regime write-heavy presets must still agree exactly
+        between engines with GC *off* (the surface both implement): the
+        kind-generalized event loop may not perturb the in-place path."""
+        w = make_workloads()[workload]
+        for mech in ("baseline", "pr2ar2"):
+            a = simulate(w, AGED, mech, seed=0, n_requests=400,
+                         engine="array")
+            r = simulate(w, AGED, mech, seed=0, n_requests=400,
+                         engine="reference")
+            assert _stats_tuple(a) == _stats_tuple(r)
+            assert a.wa == r.wa == 1.0
+            assert a.gc_invocations == r.gc_invocations == 0
 
     def test_batched_sampler_matches_per_request_stream(self):
         """The batched attempt sampler consumes the RNG exactly like the

@@ -1,0 +1,224 @@
+"""FTL/GC invariants: mapping bijectivity, WA, victim discipline, wear.
+
+The FTL is a deterministic pre-pass (no RNG), so every invariant here is
+checked after *random write/GC interleavings* driven by seeded NumPy
+streams — the mapping must stay a bijection no matter how GC relocations
+interleave with host overwrites.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.flashsim.config import GCConfig, OperatingCondition, SSDConfig
+from repro.flashsim.ftl import (
+    OP_ERASE,
+    OP_GC_PROG,
+    OP_GC_READ,
+    OP_PROG,
+    OP_READ,
+    PageMapFTL,
+    build_ftl_schedule,
+)
+from repro.flashsim.ssd import SSDSim, expand_trace, simulate
+from repro.flashsim.workloads import cached_trace, make_workloads
+
+AGED = OperatingCondition(365.0, 1000.0)
+MODEST = OperatingCondition(30.0, 0.0)
+
+GC_SSD = SSDConfig(gc=GCConfig(enabled=True))
+
+
+def small_ftl(**gc_kw) -> PageMapFTL:
+    """2x2-die device with explicit tiny geometry for direct-FTL churn."""
+    kw = dict(enabled=True, pages_per_block=8, blocks_per_die=6)
+    kw.update(gc_kw)
+    cfg = SSDConfig(n_channels=2, dies_per_channel=2, gc=GCConfig(**kw))
+    return PageMapFTL(cfg)
+
+
+def churn(ftl: PageMapFTL, span: int, n_writes: int, seed: int = 0,
+          read_ratio: float = 0.2) -> None:
+    """Random overwrite/read interleaving (drains GC events as it goes)."""
+    rng = np.random.default_rng(seed)
+    lpns = rng.integers(0, span, n_writes)
+    reads = rng.random(n_writes) < read_ratio
+    for lpn, is_read in zip(lpns, reads):
+        if is_read:
+            ftl.host_read(int(lpn))
+        else:
+            ftl.host_write(int(lpn))
+        ftl.drain_events()
+
+
+def assert_bijective(ftl: PageMapFTL) -> None:
+    """l2p and p2l are mutually-inverse injections; valid counts agree."""
+    ppns = np.array(sorted(ftl.l2p.values()))
+    assert len(np.unique(ppns)) == len(ppns), "two lpns share a ppn"
+    for lpn, ppn in ftl.l2p.items():
+        assert ftl.p2l[ppn] == lpn
+    assert int((ftl.p2l >= 0).sum()) == len(ftl.l2p)
+    per_block = np.add.reduceat(
+        (ftl.p2l >= 0).astype(np.int64),
+        np.arange(0, ftl.n_blocks * ftl.ppb, ftl.ppb),
+    )
+    np.testing.assert_array_equal(per_block, ftl.valid)
+
+
+class TestMappingInvariants:
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_bijectivity_after_random_churn(self, seed):
+        ftl = small_ftl()
+        churn(ftl, span=4 * 32, n_writes=3000, seed=seed)
+        assert ftl.gc_invocations > 0, "churn must actually trigger GC"
+        assert_bijective(ftl)
+
+    def test_bijectivity_without_gc_pressure(self):
+        ftl = small_ftl(blocks_per_die=64)  # plenty of room: no GC
+        churn(ftl, span=4 * 32, n_writes=1000, seed=3)
+        assert ftl.gc_invocations == 0
+        assert_bijective(ftl)
+
+    def test_write_amplification_at_least_one(self):
+        for seed in range(3):
+            ftl = small_ftl()
+            churn(ftl, span=4 * 32, n_writes=2500, seed=seed)
+            assert ftl.write_amplification >= 1.0
+            if ftl.gc_page_progs:
+                assert ftl.write_amplification > 1.0
+
+    def test_gc_never_evicts_its_own_destination(self):
+        ftl = small_ftl()
+        churn(ftl, span=4 * 32, n_writes=4000, seed=0)
+        assert ftl.gc_log, "expected GC activity"
+        for die, victim, dest in ftl.gc_log:
+            assert victim != dest, (
+                f"die {die}: GC selected its relocation frontier {dest}"
+            )
+            assert victim // ftl.blocks_per_die == die
+
+    def test_erases_accumulate_wear(self):
+        ftl = small_ftl(pec_per_erase=2.5)
+        churn(ftl, span=4 * 32, n_writes=4000, seed=0)
+        st = ftl.stats()
+        assert st.blocks_erased > 0
+        assert st.max_block_pe == pytest.approx(float(ftl.erases.max()) * 2.5)
+        # wear is per block: erased blocks carry it, untouched frontiers may not
+        assert ftl.erases.max() >= 1
+
+    def test_auto_sizing_requires_lpns(self):
+        with pytest.raises(ValueError, match="auto-size"):
+            PageMapFTL(GC_SSD, lpns=None)
+
+    def test_out_of_space_is_loud(self):
+        ftl = small_ftl(blocks_per_die=4, gc_threshold_blocks=1)
+        with pytest.raises(RuntimeError, match="out of free blocks"):
+            # write-once fill (no overwrites => GC has nothing to reclaim);
+            # 10 blocks' worth of unique lpns per die overruns the 4 blocks
+            for lpn in range(4 * 10 * 8):
+                ftl.host_write(lpn)
+                ftl.drain_events()
+
+
+class TestSchedule:
+    def _sched(self, n=1500, seed=0, workload="prn"):
+        w = dataclasses.replace(make_workloads()[workload], n_requests=n)
+        trace = cached_trace(w, seed=seed)
+        return trace, build_ftl_schedule(trace, GC_SSD)
+
+    def test_host_ops_preserved_verbatim(self):
+        """FTL injection must not disturb host page-ops: same arrivals,
+        rids, dies, channels, page types as the in-place expansion."""
+        trace, sched = self._sched()
+        ex = expand_trace(trace, GC_SSD)
+        host = sched.rid >= 0
+        assert int(host.sum()) == ex.n_ops
+        np.testing.assert_array_equal(sched.arrival_us[host], ex.arrival_us)
+        np.testing.assert_array_equal(sched.rid[host], ex.rid)
+        np.testing.assert_array_equal(sched.die[host], ex.die)
+        np.testing.assert_array_equal(sched.chan[host], ex.chan)
+        np.testing.assert_array_equal(sched.ptype[host], ex.ptype)
+
+    def test_admission_order_and_kind_durations(self):
+        trace, sched = self._sched()
+        assert np.all(np.diff(sched.arrival_us) >= 0)
+        t = GC_SSD.timing
+        k, d = sched.kind, sched.dur_us
+        assert np.all(d[(k == OP_READ) | (k == OP_GC_READ)] == 0.0)
+        assert np.all(d[(k == OP_PROG) | (k == OP_GC_PROG)] == t.tprog_us)
+        assert np.all(d[k == OP_ERASE] == GC_SSD.gc.t_erase_us)
+        # GC traffic exists and is anonymous (rid == -1)
+        gc_ops = (k == OP_GC_READ) | (k == OP_GC_PROG) | (k == OP_ERASE)
+        assert gc_ops.any()
+        assert np.all(sched.rid[gc_ops] == -1)
+
+    def test_stats_consistency(self):
+        trace, sched = self._sched()
+        fs = sched.stats
+        k = sched.kind
+        assert fs.gc_page_reads == int((k == OP_GC_READ).sum())
+        assert fs.gc_page_progs == int((k == OP_GC_PROG).sum())
+        assert fs.blocks_erased == int((k == OP_ERASE).sum())
+        assert fs.host_progs == int((k == OP_PROG).sum())
+        assert fs.write_amplification == pytest.approx(
+            (fs.host_progs + fs.gc_page_progs) / fs.host_progs
+        )
+        assert fs.write_amplification > 1.0
+        # relocated data carries per-block wear into read sampling
+        assert float(sched.wear_pec[k <= OP_GC_READ].max()) > 0.0
+
+    def test_schedule_deterministic(self):
+        _, s1 = self._sched(seed=4)
+        _, s2 = self._sched(seed=4)
+        np.testing.assert_array_equal(s1.arrival_us, s2.arrival_us)
+        np.testing.assert_array_equal(s1.kind, s2.kind)
+        np.testing.assert_array_equal(s1.wear_pec, s2.wear_pec)
+
+
+class TestEngineWithGC:
+    def test_gc_raises_read_tail_latency(self):
+        """The acceptance property: a write-heavy workload under GC shows
+        WA > 1 and strictly higher host-read p99 than in-place baseline."""
+        w = dataclasses.replace(make_workloads()["prn"], n_requests=1500)
+        off = simulate(w, AGED, "baseline", seed=0)
+        on = simulate(w, AGED, "baseline", seed=0, cfg=GC_SSD)
+        assert off.wa == 1.0 and off.gc_invocations == 0
+        assert on.wa > 1.0
+        assert on.gc_invocations > 0
+        assert on.read_p99_us > off.read_p99_us
+        assert on.mean_us > off.mean_us
+
+    def test_wear_increases_attempts(self):
+        """Per-block wear feeds attempt sampling: acceleration of
+        pec_per_erase must raise mean host-read attempts (blocks snap to
+        worse characterization bins)."""
+        w = dataclasses.replace(make_workloads()["prn"], n_requests=1500)
+        unworn = SSDConfig(gc=GCConfig(enabled=True, pec_per_erase=0.0))
+        worn = SSDConfig(gc=GCConfig(enabled=True, pec_per_erase=300.0))
+        a = simulate(w, MODEST, "baseline", seed=0, cfg=unworn)
+        b = simulate(w, MODEST, "baseline", seed=0, cfg=worn)
+        assert b.mean_read_attempts > a.mean_read_attempts
+
+    def test_gc_stats_shared_across_mechanisms(self):
+        from repro.flashsim.ssd import compare_mechanisms
+
+        w = dataclasses.replace(make_workloads()["rsrch"], n_requests=2000)
+        stats = compare_mechanisms(
+            w, AGED, mechanisms=("baseline", "pr2ar2"), seed=0, cfg=GC_SSD
+        )
+        assert stats["baseline"].wa == stats["pr2ar2"].wa > 1.0
+        assert (stats["baseline"].gc_invocations
+                == stats["pr2ar2"].gc_invocations > 0)
+
+    def test_reference_engine_rejects_gc(self):
+        w = dataclasses.replace(make_workloads()["prn"], n_requests=200)
+        with pytest.raises(NotImplementedError, match="FTL"):
+            simulate(w, AGED, "baseline", seed=0, cfg=GC_SSD,
+                     engine="reference")
+
+    def test_gc_run_deterministic(self):
+        w = dataclasses.replace(make_workloads()["rsrch"], n_requests=1000)
+        a = simulate(w, AGED, "pr2ar2", seed=5, cfg=GC_SSD)
+        b = simulate(w, AGED, "pr2ar2", seed=5, cfg=GC_SSD)
+        assert a == b
