@@ -18,18 +18,29 @@ batched pass.
 and the aggregate speedup — the perf trajectory of the simulator is
 tracked through this file from PR 1 onward.
 
-A GC sweep (PR 2) rides along: each write-heavy profile runs with the
-page-mapping FTL off and on, recording write amplification, GC traffic,
-and the host-read p99 inflation GC contention causes — the acceptance
-check is WA > 1.0 and strictly higher host-read p99 with GC enabled.
+Three sweeps ride along:
+
+  * **claim cells** (PR 3): the paper's headline reductions (PR²+AR² vs
+    baseline @ aged; SOTA+PR²+AR² vs SOTA @ modest) re-measured as
+    mean ± 95% CI over ``--seeds`` independent traces, with the paper
+    check as a CI-overlap test instead of a point comparison;
+  * **GC cells** (PR 2, multi-seed since PR 3): each write-heavy profile
+    with the page-mapping FTL off and on — write amplification and the
+    host-read p99 inflation GC contention causes, mean ± 95% CI;
+  * **scheduler cells** (PR 3): the GC profiles under online GC across
+    the die-queue policies (fcfs / host_prio / preempt) — the
+    host-read-priority acceptance: host_prio and preempt must cut the
+    fcfs read-p99 inflation by >= 2x at equal (±10%) WA.
 
 Usage: PYTHONPATH=src python -m benchmarks.microbench_sim [--n 8000]
-           [--quick] [--skip-reference] [--skip-gc] [--out BENCH_sim.json]
+           [--seeds 5] [--quick] [--skip-reference] [--skip-gc]
+           [--out BENCH_sim.json]
 
   --n N             requests per cell (default 8000, the acceptance size)
-  --quick           tiny grid + small n (CI smoke; implies --n 1200)
+  --seeds K         seeds per claim/GC/scheduler cell (default 5)
+  --quick           tiny grid (CI smoke; n defaults to 1200, 2 seeds)
   --skip-reference  only measure the array engine (no speedup column)
-  --skip-gc         skip the FTL/GC sweep cells
+  --skip-gc         skip the FTL/GC + scheduler sweep cells
   --out PATH        output JSON path (default BENCH_sim.json in cwd)
 """
 
@@ -38,12 +49,15 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import math
 import time
+
+import numpy as np
 
 from repro.core.retry import RetryPolicy
 from repro.flashsim.config import GCConfig, SSDConfig
 from repro.flashsim.engine_ref import SSDSimRef
-from repro.flashsim.ssd import SSDSim, expand_trace, simulate
+from repro.flashsim.ssd import SSDSim, expand_trace, simulate, simulate_batch
 from repro.flashsim.workloads import (
     GC_PROFILES,
     PROFILES,
@@ -51,9 +65,18 @@ from repro.flashsim.workloads import (
     generate_trace,
 )
 
-from benchmarks.e2e_response_time import AGED, MODEST
+from benchmarks.e2e_response_time import (
+    AGED,
+    MODEST,
+    PAPER_AVG_VS_BASELINE,
+    PAPER_AVG_VS_SOTA,
+    PAPER_MAX_VS_BASELINE,
+    PAPER_MAX_VS_SOTA,
+    TOL,
+)
 
 ALL_MECHS = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
+SCHED_POLICIES = ("fcfs", "host_prio", "preempt")
 
 #: Requests per GC cell in --quick mode.  GC intensity is non-monotonic
 #: in trace length (capacity auto-sizes with the footprint, which grows
@@ -61,6 +84,37 @@ ALL_MECHS = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
 #: both write-heavy presets reliably churn (prn: ~100 invocations,
 #: rsrch: ~300 at seed 0).
 GC_QUICK_N = 2500
+
+#: Two-sided 95% t critical values by degrees of freedom (n_seeds - 1).
+_T95 = {1: 12.706, 2: 4.303, 3: 3.182, 4: 2.776, 5: 2.571, 6: 2.447,
+        7: 2.365, 8: 2.306, 9: 2.262, 10: 2.228, 11: 2.201, 12: 2.179,
+        13: 2.160, 14: 2.145, 15: 2.131, 16: 2.120, 17: 2.110, 18: 2.101,
+        19: 2.093, 20: 2.086}
+
+
+def mean_ci95(xs):
+    """(mean, 95% CI half-width) of a small sample (t-distribution).
+
+    One seed yields a degenerate (mean, 0.0) — the claim check then
+    reduces to a point comparison.  Beyond 21 seeds the critical value
+    is approximated by the dof=30 entry (2.042, within 1% of the true
+    value for any larger sample; never the understating z=1.96).
+    """
+    xs = np.asarray(list(xs), dtype=float)
+    n = xs.size
+    m = float(xs.mean())
+    if n < 2:
+        return m, 0.0
+    t = _T95.get(n - 1, 2.042)
+    return m, t * float(xs.std(ddof=1)) / math.sqrt(n)
+
+
+def ci_overlaps(mean, half, target, tol):
+    """CI-overlap test: [mean±half] intersects [target±tol]."""
+    return mean - half <= target + tol and target - tol <= mean + half
+
+
+# -- engine timing cells (single-seed; the PR 1 speedup trajectory) -------
 
 
 def e2e_cells(quick: bool = False):
@@ -135,8 +189,98 @@ def bench_cell(w, cond, mechs, n_requests, seed, skip_reference):
     return row
 
 
-def bench_gc_cell(w, cond, n_requests, seed):
-    """FTL off vs on for one write-heavy profile: WA + read-tail impact.
+# -- paper-claim cells: mean ± 95% CI over seeds --------------------------
+
+
+def bench_claim_cells(n_requests, seeds, quick=False):
+    """Re-measure the paper's headline reductions across >= 2 seeds.
+
+    Per seed: the PR²+AR²-vs-baseline reduction averaged over the six
+    profiles @ aged, and the SOTA+PR²+AR²-vs-SOTA reduction averaged
+    over read-dominant profiles @ modest conditions.  The claim check is
+    a CI-overlap test against the paper figure ± the historical point
+    tolerance.
+    """
+    profiles = PROFILES[:3] if quick else PROFILES
+    modest = MODEST[:1] if quick else MODEST
+    per_workload = []
+    red_base = {s: [] for s in seeds}   # seed -> per-workload reductions
+    red_sota = {s: [] for s in seeds}
+    for w in profiles:
+        grid = simulate_batch(
+            w, (AGED,), mechanisms=("baseline", "pr2ar2"),
+            seeds=seeds, n_requests=n_requests,
+        )
+        rs = [
+            1.0 - grid[("pr2ar2", AGED, s)].mean_us
+            / grid[("baseline", AGED, s)].mean_us
+            for s in seeds
+        ]
+        for s, r in zip(seeds, rs):
+            red_base[s].append(r)
+        m, h = mean_ci95(rs)
+        per_workload.append({
+            "workload": w.name, "condition": AGED.label(),
+            "metric": "pr2ar2_vs_baseline",
+            "mean_reduction": round(m, 4), "ci95": round(h, 4),
+            "n_seeds": len(seeds),
+        })
+    for w in (w for w in profiles if w.read_dominant):
+        grid = simulate_batch(
+            w, modest, mechanisms=("sota", "sota+pr2ar2"),
+            seeds=seeds, n_requests=n_requests,
+        )
+        for cond in modest:
+            rs = [
+                1.0 - grid[("sota+pr2ar2", cond, s)].mean_us
+                / grid[("sota", cond, s)].mean_us
+                for s in seeds
+            ]
+            for s, r in zip(seeds, rs):
+                red_sota[s].append(r)
+            m, h = mean_ci95(rs)
+            per_workload.append({
+                "workload": w.name, "condition": cond.label(),
+                "metric": "sota+pr2ar2_vs_sota",
+                "mean_reduction": round(m, 4), "ci95": round(h, 4),
+                "n_seeds": len(seeds),
+            })
+
+    # Per-seed grid averages -> CI over seeds (seed = independent trace).
+    avg_b = [float(np.mean(red_base[s])) for s in seeds]
+    max_b = [float(np.max(red_base[s])) for s in seeds]
+    avg_s = [float(np.mean(red_sota[s])) for s in seeds]
+    max_s = [float(np.max(red_sota[s])) for s in seeds]
+    mb, hb = mean_ci95(avg_b)
+    mxb, hxb = mean_ci95(max_b)
+    ms, hs = mean_ci95(avg_s)
+    mxs, hxs = mean_ci95(max_s)
+    summary = {
+        "n_seeds": len(seeds),
+        "avg_vs_baseline": {"mean": round(mb, 4), "ci95": round(hb, 4),
+                            "paper": PAPER_AVG_VS_BASELINE},
+        "max_vs_baseline": {"mean": round(mxb, 4), "ci95": round(hxb, 4),
+                            "paper": PAPER_MAX_VS_BASELINE},
+        "avg_vs_sota": {"mean": round(ms, 4), "ci95": round(hs, 4),
+                        "paper": PAPER_AVG_VS_SOTA},
+        "max_vs_sota": {"mean": round(mxs, 4), "ci95": round(hxs, 4),
+                        "paper": PAPER_MAX_VS_SOTA},
+        "claim_ci_overlap_ok": bool(
+            ci_overlaps(mb, hb, PAPER_AVG_VS_BASELINE, TOL)
+            and ci_overlaps(mxb, hxb, PAPER_MAX_VS_BASELINE, TOL + 0.04)
+            and ci_overlaps(ms, hs, PAPER_AVG_VS_SOTA, TOL)
+            and ci_overlaps(mxs, hxs, PAPER_MAX_VS_SOTA, TOL + 0.04)
+        ),
+    }
+    return per_workload, summary
+
+
+# -- GC cells: FTL off/on, mean ± CI over seeds ---------------------------
+
+
+def bench_gc_cell(w, cond, n_requests, seeds):
+    """FTL off vs on for one write-heavy profile: WA + read-tail impact,
+    mean ± 95% CI over seeds.
 
     Runs baseline and pr2ar2 under both configurations so the row also
     records how much of the GC-induced read tail the paper's combined
@@ -149,50 +293,123 @@ def bench_gc_cell(w, cond, n_requests, seed):
         "condition": cond.label(),
         "n_requests": n_requests,
         "span_pages": w.span_pages,
+        "n_seeds": len(seeds),
     }
+    wa_list, gc_inv = [], []
     for mech in ("baseline", "pr2ar2"):
-        t0 = time.perf_counter()
-        off = simulate(w, cond, mech, seed=seed)
-        t1 = time.perf_counter()
-        on = simulate(w, cond, mech, seed=seed, cfg=cfg_gc)
-        t2 = time.perf_counter()
+        p99_off, p99_on, infl, mean_on, wall = [], [], [], [], 0.0
+        for s in seeds:
+            t0 = time.perf_counter()
+            off = simulate(w, cond, mech, seed=s)
+            on = simulate(w, cond, mech, seed=s, cfg=cfg_gc)
+            wall += time.perf_counter() - t0
+            p99_off.append(off.read_p99_us)
+            p99_on.append(on.read_p99_us)
+            infl.append(on.read_p99_us / off.read_p99_us)
+            mean_on.append(on.mean_us)
+            if mech == "baseline":
+                wa_list.append(on.wa)
+                gc_inv.append(on.gc_invocations)
+        mi, hi_ = mean_ci95(infl)
         row[mech] = {
-            "wall_off_s": round(t1 - t0, 4),
-            "wall_on_s": round(t2 - t1, 4),
-            "read_p99_off_us": round(off.read_p99_us, 1),
-            "read_p99_on_us": round(on.read_p99_us, 1),
-            "read_p99_inflation": round(on.read_p99_us / off.read_p99_us, 2),
-            "mean_off_us": round(off.mean_us, 1),
-            "mean_on_us": round(on.mean_us, 1),
-            "die_util_on": round(on.die_util, 3),
+            "wall_s": round(wall, 3),
+            "read_p99_off_us": round(float(np.mean(p99_off)), 1),
+            "read_p99_on_us": round(float(np.mean(p99_on)), 1),
+            "read_p99_inflation_mean": round(mi, 2),
+            "read_p99_inflation_ci95": round(hi_, 2),
+            "mean_on_us": round(float(np.mean(mean_on)), 1),
         }
-        if mech == "baseline":
-            row.update(
-                wa=round(on.wa, 3),
-                gc_invocations=on.gc_invocations,
-                gc_page_reads=on.gc_page_reads,
-                gc_page_progs=on.gc_page_progs,
-                blocks_erased=on.blocks_erased,
-            )
-    # The acceptance properties of the FTL subsystem:
-    row["ok_wa_gt_1"] = row["wa"] > 1.0
-    row["ok_read_p99_higher"] = all(
-        row[m]["read_p99_on_us"] > row[m]["read_p99_off_us"]
-        for m in ("baseline", "pr2ar2")
+    wm, wh = mean_ci95(wa_list)
+    row.update(
+        wa_mean=round(wm, 3), wa_ci95=round(wh, 3),
+        gc_invocations_mean=round(float(np.mean(gc_inv)), 1),
+    )
+    # The acceptance properties of the FTL subsystem (per-seed, all seeds):
+    row["ok_wa_gt_1"] = bool(min(wa_list) > 1.0)
+    row["ok_read_p99_higher"] = bool(
+        min(row[m]["read_p99_inflation_mean"] for m in ("baseline", "pr2ar2"))
+        > 1.0
+    )
+    return row
+
+
+# -- scheduler cells: online GC x die-queue policy ------------------------
+
+
+def bench_sched_cell(w, cond, n_requests, seeds, mech="baseline"):
+    """Online GC under fcfs / host_prio / preempt for one GC profile.
+
+    Inflation is host-read p99 with GC on over GC off (same seed, same
+    scheduler-independent off-run).  The acceptance: host_prio and
+    preempt cut fcfs inflation >= 2x at equal (±10%) WA.
+    """
+    w = dataclasses.replace(w, n_requests=n_requests)
+    row = {
+        "workload": w.name,
+        "condition": cond.label(),
+        "mechanism": mech,
+        "n_requests": n_requests,
+        "n_seeds": len(seeds),
+        "gc_mode": "online",
+    }
+    off_p99 = {s: simulate(w, cond, mech, seed=s).read_p99_us for s in seeds}
+    wa_by_policy = {}
+    for sched in SCHED_POLICIES:
+        infl, wa, stalls, susp, wall = [], [], [], [], 0.0
+        for s in seeds:
+            t0 = time.perf_counter()
+            on = simulate(w, cond, mech, seed=s, scheduler=sched,
+                          gc="online")
+            wall += time.perf_counter() - t0
+            infl.append(on.read_p99_us / off_p99[s])
+            wa.append(on.wa)
+            stalls.append(on.write_stalls)
+            susp.append(on.gc_suspensions)
+        mi, hi_ = mean_ci95(infl)
+        wam, wah = mean_ci95(wa)
+        wa_by_policy[sched] = wam
+        row[sched] = {
+            "wall_s": round(wall, 3),
+            "read_p99_inflation_mean": round(mi, 2),
+            "read_p99_inflation_ci95": round(hi_, 2),
+            "wa_mean": round(wam, 3),
+            "wa_ci95": round(wah, 3),
+            "write_stalls_mean": round(float(np.mean(stalls)), 1),
+            "gc_suspensions_mean": round(float(np.mean(susp)), 1),
+        }
+    f = row["fcfs"]["read_p99_inflation_mean"]
+    row["inflation_cut_host_prio"] = round(
+        f / row["host_prio"]["read_p99_inflation_mean"], 2)
+    row["inflation_cut_preempt"] = round(
+        f / row["preempt"]["read_p99_inflation_mean"], 2)
+    row["ok_wa_equal"] = bool(
+        max(wa_by_policy.values()) <= min(wa_by_policy.values()) * 1.10
+    )
+    row["ok_p99_cut_2x"] = bool(
+        row["inflation_cut_host_prio"] >= 2.0
+        and row["inflation_cut_preempt"] >= 2.0
     )
     return row
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--n", type=int, default=8000)
+    ap.add_argument("--n", type=int, default=None,
+                    help="requests per cell (default 8000; 1200 in --quick)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="seeds per claim/GC/scheduler cell "
+                         "(default 5; 2 in --quick)")
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-reference", action="store_true")
     ap.add_argument("--skip-gc", action="store_true")
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args()
-    n = 1200 if args.quick else args.n
+    n = args.n if args.n is not None else (1200 if args.quick else 8000)
+    n_seeds = args.seeds if args.seeds is not None else (2 if args.quick else 5)
+    if n_seeds < 1:
+        ap.error("--seeds must be >= 1")
+    seeds = tuple(range(args.seed, args.seed + n_seeds))
 
     cells = e2e_cells(args.quick)
     warm_s = warm_characterization(cells)
@@ -209,29 +426,56 @@ def main():
             f"({row['events_per_sec_array'] / 1e6:.2f}M ev/s){spd}"
         )
 
-    gc_rows = []
+    t0 = time.perf_counter()
+    claim_rows, claim_summary = bench_claim_cells(n, seeds, args.quick)
+    print(
+        f"# claim CI ({len(seeds)} seeds, {time.perf_counter() - t0:.1f}s): "
+        f"vs baseline -{100 * claim_summary['avg_vs_baseline']['mean']:.1f}%"
+        f"±{100 * claim_summary['avg_vs_baseline']['ci95']:.1f} "
+        f"(paper -35.7%) | vs SOTA "
+        f"-{100 * claim_summary['avg_vs_sota']['mean']:.1f}%"
+        f"±{100 * claim_summary['avg_vs_sota']['ci95']:.1f} (paper -21.8%) "
+        f"-> {'OK' if claim_summary['claim_ci_overlap_ok'] else 'MISMATCH'}"
+    )
+
+    gc_rows, sched_rows = [], []
     gc_carried = False
     if args.skip_gc:
         # Don't clobber the recorded GC trajectory: carry the previous
         # file's GC cells forward (flagged so readers know they're stale).
         try:
             with open(args.out) as f:
-                gc_rows = json.load(f).get("gc_cells", [])
-            gc_carried = bool(gc_rows)
+                prev = json.load(f)
+            gc_rows = prev.get("gc_cells", [])
+            sched_rows = prev.get("sched_cells", [])
+            gc_carried = bool(gc_rows or sched_rows)
         except (OSError, ValueError):
             pass
     else:
         n_gc = GC_QUICK_N if args.quick else n
         gc_profiles = GC_PROFILES[:1] if args.quick else GC_PROFILES
         for w in gc_profiles:
-            row = bench_gc_cell(w, AGED, n_gc, args.seed)
+            row = bench_gc_cell(w, AGED, n_gc, seeds)
             gc_rows.append(row)
             print(
                 f"GC {w.name:8s} @ {row['condition']:>10s}: "
-                f"WA={row['wa']:.2f} gc_inv={row['gc_invocations']} "
-                f"read_p99 x{row['baseline']['read_p99_inflation']:.1f} "
-                f"(pr2ar2 x{row['pr2ar2']['read_p99_inflation']:.1f}) "
+                f"WA={row['wa_mean']:.2f}±{row['wa_ci95']:.2f} "
+                f"read_p99 x{row['baseline']['read_p99_inflation_mean']:.1f}"
+                f"±{row['baseline']['read_p99_inflation_ci95']:.1f} "
+                f"(pr2ar2 x{row['pr2ar2']['read_p99_inflation_mean']:.1f}) "
                 f"ok={row['ok_wa_gt_1'] and row['ok_read_p99_higher']}"
+            )
+        for w in gc_profiles:
+            row = bench_sched_cell(w, AGED, n_gc, seeds)
+            sched_rows.append(row)
+            print(
+                f"SCHED {w.name:8s} online-GC inflation: "
+                f"fcfs x{row['fcfs']['read_p99_inflation_mean']:.1f} -> "
+                f"host_prio x{row['host_prio']['read_p99_inflation_mean']:.1f} "
+                f"(cut {row['inflation_cut_host_prio']:.0f}x) -> "
+                f"preempt x{row['preempt']['read_p99_inflation_mean']:.1f} "
+                f"(cut {row['inflation_cut_preempt']:.0f}x) "
+                f"wa_eq={row['ok_wa_equal']} ok={row['ok_p99_cut_2x']}"
             )
 
     total_array = sum(r["wall_array_s"] for r in rows)
@@ -243,6 +487,7 @@ def main():
             sum(r["events_array"] for r in rows) / total_array
         ),
         "characterization_warm_s": round(warm_s, 2),
+        "claim": claim_summary,
     }
     if not args.skip_reference:
         total_ref = sum(r["wall_seed_s"] for r in rows)
@@ -250,15 +495,24 @@ def main():
         summary["speedup_total"] = round(total_ref / total_array, 2)
         summary["attempts_match_all"] = all(r["attempts_match"] for r in rows)
     if gc_rows:
-        summary["gc_wa_max"] = max(r["wa"] for r in gc_rows)
+        summary["gc_wa_max"] = max(r["wa_mean"] for r in gc_rows)
         summary["gc_acceptance_ok"] = all(
             r["ok_wa_gt_1"] and r["ok_read_p99_higher"] for r in gc_rows
         )
         if gc_carried:
             summary["gc_cells_carried"] = True  # from a previous run
+    if sched_rows:
+        summary["sched_acceptance_ok"] = all(
+            r["ok_p99_cut_2x"] and r["ok_wa_equal"] for r in sched_rows
+        )
+        summary["sched_min_inflation_cut"] = min(
+            min(r["inflation_cut_host_prio"], r["inflation_cut_preempt"])
+            for r in sched_rows
+        )
 
     out = {"benchmark": "flashsim-des-engine", "summary": summary,
-           "cells_detail": rows, "gc_cells": gc_rows}
+           "cells_detail": rows, "claim_cells": claim_rows,
+           "gc_cells": gc_rows, "sched_cells": sched_rows}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

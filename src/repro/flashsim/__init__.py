@@ -6,11 +6,20 @@ from repro.flashsim.config import (
     OperatingCondition,
     SSDConfig,
 )
+from repro.flashsim.engine import EngineResult, OpBuffers, run_event_core
 from repro.flashsim.ftl import (
     FTLSchedule,
     FTLStats,
     PageMapFTL,
     build_ftl_schedule,
+)
+from repro.flashsim.gc_online import OnlineGC
+from repro.flashsim.sched import (
+    SCHEDULERS,
+    FCFSQueue,
+    HostPrioQueue,
+    SchedulerPolicy,
+    get_scheduler,
 )
 from repro.flashsim.ssd import (
     SSDSim,
@@ -36,10 +45,19 @@ __all__ = [
     "GCConfig",
     "OperatingCondition",
     "SSDConfig",
+    "EngineResult",
+    "OpBuffers",
+    "run_event_core",
     "FTLSchedule",
     "FTLStats",
     "PageMapFTL",
     "build_ftl_schedule",
+    "OnlineGC",
+    "SCHEDULERS",
+    "FCFSQueue",
+    "HostPrioQueue",
+    "SchedulerPolicy",
+    "get_scheduler",
     "SSDSim",
     "SimStats",
     "TraceExpansion",

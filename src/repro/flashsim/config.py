@@ -21,6 +21,20 @@ class GCConfig:
 
     #: Master switch for the page-mapping FTL + garbage collection.
     enabled: bool = False
+    #: GC trigger mode.  ``"prepass"`` (default): the deterministic
+    #: admission-order pre-pass (:func:`repro.flashsim.ftl.
+    #: build_ftl_schedule`) — mapping exact, trigger instants approximated
+    #: at write admission; the compatibility mode the equivalence suite
+    #: pins.  ``"online"``: completion-time triggering (:mod:`repro.
+    #: flashsim.gc_online`) — pages allocate when the die takes the
+    #: program, GC fires when the projected free-block pool crosses the
+    #: watermark, and erased blocks return to the pool only when their
+    #: erase *completes* on the simulated die.
+    mode: str = "prepass"
+    #: Online mode only: collect while (free + in-flight-erase) blocks per
+    #: die <= this watermark.  None uses ``gc_threshold_blocks``.  Raise it
+    #: to start reclaim earlier (fewer write stalls, more copy-back).
+    watermark_blocks: int | None = None
     #: Over-provisioning: fraction of *physical* capacity held as spare
     #: (industry-typical 7% ~ 0.07).  Used when ``blocks_per_die`` is None
     #: (auto-sizing from the trace footprint); smaller OP -> earlier and
@@ -51,6 +65,13 @@ class GCConfig:
             raise ValueError("pages_per_block must be >= 1")
         if self.gc_threshold_blocks < 1:
             raise ValueError("gc_threshold_blocks must be >= 1")
+        if self.mode not in ("prepass", "online"):
+            raise ValueError(
+                f"GCConfig.mode must be 'prepass' or 'online', "
+                f"got {self.mode!r}"
+            )
+        if self.watermark_blocks is not None and self.watermark_blocks < 1:
+            raise ValueError("watermark_blocks must be >= 1 (or None)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,12 +97,24 @@ class SSDConfig:
     timing: TimingParams = DEFAULT_TIMING
     #: FTL / garbage-collection configuration (disabled by default).
     gc: GCConfig = GCConfig()
+    #: Die-queue scheduling policy (:mod:`repro.flashsim.sched`):
+    #: ``"fcfs"`` (strict arrival order — bit-identical to the original
+    #: engine), ``"host_prio"`` (host reads jump GC/program ops), or
+    #: ``"preempt"`` (host_prio + read-suspend of in-flight GC ops).
+    scheduler: str = "fcfs"
 
     def __post_init__(self):
         if self.n_channels < 1 or self.dies_per_channel < 1:
             raise ValueError(
                 f"SSDConfig needs >=1 channel and >=1 die per channel, got "
                 f"{self.n_channels}x{self.dies_per_channel}"
+            )
+        from repro.flashsim.sched import SCHEDULERS
+
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r} "
+                f"(choose from {SCHEDULERS})"
             )
 
     @property

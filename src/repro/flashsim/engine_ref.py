@@ -65,12 +65,19 @@ class SSDSimRef(SSDSim):
         trace: RequestTrace,
         expansion: Optional[TraceExpansion] = None,  # unused: closure engine
         schedule=None,                               # FTL: not supported here
+        validate: bool = False,                      # engine-core flag: n/a
     ) -> SimStats:
         if schedule is not None or self.cfg.gc.enabled:
             raise NotImplementedError(
                 "the reference (seed) engine predates the FTL/GC subsystem; "
                 "run FTL configurations with engine='array' "
                 "(see the parity notes in repro/flashsim/engine_ref.py)"
+            )
+        if self.cfg.scheduler != "fcfs":
+            raise NotImplementedError(
+                "the reference (seed) engine predates the scheduler layer "
+                "and implements strict FCFS die queues only; run "
+                f"scheduler={self.cfg.scheduler!r} with engine='array'"
             )
         cfg, t = self.cfg, self.cfg.timing
         tdma, tecc, tprog = t.tdma_us, t.tecc_us, t.tprog_us

@@ -149,13 +149,28 @@ class PageMapFTL:
     The class is pure mapping state — it emits page-op *events* (tuples)
     into an internal buffer that :func:`build_ftl_schedule` drains; it
     never touches simulated time.
+
+    Two construction flags adapt the same state machine to the *online*
+    GC driver (:mod:`repro.flashsim.gc_online`):
+
+    ``auto_gc=False``
+        host ops never trigger collection themselves; the driver calls
+        :meth:`_collect` explicitly at watermark crossings.
+    ``defer_free=True``
+        an erased victim does **not** re-enter the free pool inside
+        :meth:`_collect`; the driver returns it via
+        :meth:`erase_complete` when the erase finishes on the simulated
+        die — reclaim takes simulated time.
     """
 
     def __init__(self, cfg: SSDConfig = DEFAULT_SSD,
-                 lpns: Optional[np.ndarray] = None):
+                 lpns: Optional[np.ndarray] = None,
+                 auto_gc: bool = True, defer_free: bool = False):
         gc = cfg.gc
         self.cfg = cfg
         self.gc = gc
+        self.auto_gc = auto_gc
+        self.defer_free = defer_free
         self.n_dies = cfg.n_dies
         self.ppb = gc.pages_per_block
 
@@ -207,7 +222,7 @@ class PageMapFTL:
         #: (die, victim, gc_frontier_at_selection) per collection — lets
         #: tests assert GC never evicts the block it compacts into.
         self.gc_log: List[Tuple[int, int, int]] = []
-        self._events: List[Tuple[int, int, int, float]] = []
+        self._events: List[Tuple[int, int, int, float, int]] = []
 
     # -- allocation ---------------------------------------------------------
 
@@ -245,6 +260,21 @@ class PageMapFTL:
         ppn = blk * self.ppb + int(self.wp[blk])
         self.wp[blk] += 1
         return ppn
+
+    def can_alloc(self, die: int, gc_stream: bool = False) -> bool:
+        """Whether :meth:`_alloc` on ``die`` would succeed right now.
+
+        The online driver probes this before mapping a host write at
+        program start; False means the write must stall until an erase
+        completes (host write throttling).
+        """
+        frontier = (self.gc_active if gc_stream else self.active)[die]
+        if frontier >= 0 and self.wp[frontier] < self.ppb:
+            return True
+        if self.free[die]:
+            return True
+        other = (self.active if gc_stream else self.gc_active)[die]
+        return other >= 0 and self.wp[other] < self.ppb
 
     def _map_write(self, lpn: int, gc_stream: bool) -> int:
         """(Re)map ``lpn`` to a fresh physical page; invalidate the old one."""
@@ -292,22 +322,31 @@ class PageMapFTL:
             lpn = int(self.p2l[base + slot])
             if lpn < 0:
                 continue  # already invalidated by a newer host write
-            self._events.append((OP_GC_READ, die, lpn % 3, wear))
+            self._events.append((OP_GC_READ, die, lpn % 3, wear, victim))
             self.gc_page_reads += 1
             self._map_write(lpn, gc_stream=True)
-            self._events.append((OP_GC_PROG, die, lpn % 3, 0.0))
+            self._events.append((OP_GC_PROG, die, lpn % 3, 0.0, victim))
             self.gc_page_progs += 1
-        # Victim is now fully invalid: erase it and return it to the pool.
+        # Victim is now fully invalid: erase it and (prepass) return it to
+        # the pool; under defer_free the online driver returns it via
+        # erase_complete() when the erase finishes on the simulated die.
         self.erases[victim] += 1
         self.wp[victim] = 0
         self.valid[victim] = 0
         self.sealed[die].discard(victim)
-        self.free[die].append(victim)
+        if not self.defer_free:
+            self.free[die].append(victim)
         self.blocks_erased += 1
-        self._events.append((OP_ERASE, die, 0, 0.0))
+        self._events.append((OP_ERASE, die, 0, 0.0, victim))
         return True
 
+    def erase_complete(self, die: int, block: int) -> None:
+        """Return an erased (defer_free) victim to ``die``'s free pool."""
+        self.free[die].append(block)
+
     def _maybe_gc(self, die: int) -> None:
+        if not self.auto_gc:
+            return
         guard = 4 * self.blocks_per_die
         while len(self.free[die]) <= self.gc.gc_threshold_blocks and guard > 0:
             if not self._collect(die):
@@ -336,9 +375,11 @@ class PageMapFTL:
             self._maybe_gc(lpn % self.n_dies)
         return float(self.erases[ppn // self.ppb]) * self.gc.pec_per_erase
 
-    def drain_events(self) -> List[Tuple[int, int, int, float]]:
+    def drain_events(self) -> List[Tuple[int, int, int, float, int]]:
         """Take the GC page-op events emitted since the last drain —
-        ``(kind, die, ptype, wear_pec)`` tuples in emission order."""
+        ``(kind, die, ptype, wear_pec, victim_block)`` tuples in emission
+        order (the block id lets the online driver credit the right free
+        pool when the erase completes)."""
         ev = self._events
         self._events = []
         return ev
@@ -424,7 +465,7 @@ def build_ftl_schedule(
         else:
             ftl.host_write(lpn)
             emit(a, rid_l[i], d, lpn % 3, OP_PROG, tprog, 0.0)
-        for (k, gd, pt, gw) in ftl.drain_events():
+        for (k, gd, pt, gw, _blk) in ftl.drain_events():
             gdur = tprog if k == OP_GC_PROG else (terase if k == OP_ERASE else 0.0)
             emit(a, -1, gd, pt, k, gdur, gw)
 

@@ -1,0 +1,223 @@
+"""Online garbage collection: completion-time watermark triggering.
+
+The prepass FTL (:func:`repro.flashsim.ftl.build_ftl_schedule`) decides
+*when* GC runs by walking the trace in write-admission order: a host
+write admitted at ``t`` schedules its GC at ``t``, regardless of when the
+write actually reaches its die.  That is exact for the *mapping* but
+approximates the trigger instant — under bursts the pre-pass front-loads
+GC storms that real firmware would spread across the burst's drain time.
+
+This module replaces the trigger with device dynamics.  An
+:class:`OnlineGC` driver rides inside the event core and advances the
+FTL at *simulated* instants:
+
+  * **reads** map (with lazy pre-fill) when admitted, resolving per-block
+    wear for attempt sampling and the per-block AR² tR scale;
+  * **writes** allocate their physical page when the die actually takes
+    the program — the free-block pool is consumed at simulated
+    program-start times, not admission times;
+  * when a die's projected free-block pool — free blocks plus erases
+    already in flight — falls to the **watermark**
+    (``GCConfig.watermark_blocks``, default ``gc_threshold_blocks``), the
+    driver collects greedy victims *now*: copy-back page-ops and the
+    erase are injected into the event core at the current sim time and
+    contend through the die scheduler like any other op;
+  * an erased block re-enters the free pool only when its **erase
+    completes** on the die — reclaim takes simulated time, which is the
+    whole point;
+  * a write that finds no free page **stalls** (host write throttling):
+    it is parked off-queue, its die is released to the GC traffic ahead
+    of it, and it re-dispatches when an erase completes.  A device whose
+    stalls can never drain raises at end of run rather than reporting
+    truncated statistics.
+
+Mapping state machine and victim policy are shared with the prepass
+(:class:`repro.flashsim.ftl.PageMapFTL` with ``auto_gc=False`` +
+``defer_free=True``); only the trigger and free-pool dynamics differ.
+GC-read attempt counts are drawn from the owning run's RNG at injection
+time (there is no bit-parity contract with the prepass stream), at the
+victim block's wear and per-block AR² scale.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.flashsim.config import SSDConfig
+from repro.flashsim.ftl import OP_ERASE, OP_GC_READ, PageMapFTL
+
+
+class OnlineGC:
+    """Event-core driver for completion-time-triggered garbage collection.
+
+    Engine-facing protocol (called by :func:`repro.flashsim.engine.
+    run_event_core`):
+
+    ``bind(bufs)``                 attach the run's growing op buffers;
+    ``on_read_admit(op, tm)``      map a host read; returns (attempts, tR);
+    ``on_program_start(op, tm)``   map a host write at program start;
+                                   False = no free page (caller stalls it);
+    ``stall(op)``                  park a write that could not start;
+    ``on_erase_complete(op, tm)``  return the erased block to the pool;
+    ``take_injected()``            drain newly-emitted GC ops to admit;
+    ``take_unstalled()``           drain writes made runnable by an erase;
+    ``assert_drained()``           end-of-run wedge check.
+    """
+
+    def __init__(self, cfg: SSDConfig, expansion, sim):
+        gc = cfg.gc
+        self.cfg = cfg
+        self.sim = sim
+        self.ftl = PageMapFTL(cfg, lpns=expansion.page_id,
+                              auto_gc=False, defer_free=True)
+        self.watermark = (
+            gc.watermark_blocks if gc.watermark_blocks is not None
+            else gc.gc_threshold_blocks
+        )
+        self.tprog = cfg.timing.tprog_us
+        self.terase = gc.t_erase_us
+        self.n_dies = cfg.n_dies
+        self.n_channels = cfg.n_channels
+
+        self._lpn = expansion.page_id.tolist()
+        self._ptype = expansion.ptype.tolist()
+
+        self.inflight_erases = [0] * self.n_dies
+        self._stalled: List[List[int]] = [[] for _ in range(self.n_dies)]
+        self._erase_block: Dict[int, Tuple[int, int]] = {}
+        self.injected: List[int] = []
+        self.unstalled: List[int] = []
+        self.write_stalls = 0
+        self.prefill_skips = 0
+        self.host_reads = 0
+        self.bufs = None
+
+    # -- engine protocol -----------------------------------------------------
+
+    def bind(self, bufs) -> None:
+        self.bufs = bufs
+
+    def on_read_admit(self, op: int, tm: float) -> Tuple[int, float]:
+        """Map a host read at admission; lazy pre-fill may consume pages
+        (and thus cross the watermark).  Returns the per-block-resolved
+        (attempt count, per-attempt tR).
+
+        Unlike writes, reads can never stall on the free pool: when an
+        unmapped lpn arrives while the die has no page to pre-fill into
+        (reclaim in flight, pool momentarily dry), the read senses an
+        unwritten page at zero wear without consuming capacity —
+        counted in ``prefill_skips``.
+        """
+        lpn = self._lpn[op]
+        ftl = self.ftl
+        d = lpn % self.n_dies
+        self.host_reads += 1
+        if lpn in ftl.l2p or ftl.can_alloc(d):
+            wear = ftl.host_read(lpn)
+            self._check_watermark(d)
+        else:
+            wear = 0.0
+            self.prefill_skips += 1
+        pt = self._ptype[op]
+        return self.sim._draw_attempts(pt, wear), self.sim._tr_for(pt, wear)
+
+    def on_program_start(self, op: int, tm: float) -> bool:
+        """Allocate the write's physical page at simulated program start.
+
+        Returns False when the die has no free page — the caller parks
+        the op via :meth:`stall` and it re-dispatches after an erase.
+        """
+        d = self.bufs.die[op]
+        if not self.ftl.can_alloc(d):
+            self.write_stalls += 1
+            return False
+        self.ftl.host_write(self._lpn[op])
+        self._check_watermark(d)
+        return True
+
+    def stall(self, op: int) -> None:
+        self._stalled[self.bufs.die[op]].append(op)
+
+    def on_erase_complete(self, op: int, tm: float) -> None:
+        d, blk = self._erase_block.pop(op)
+        self.ftl.erase_complete(d, blk)
+        self.inflight_erases[d] -= 1
+        stalled = self._stalled[d]
+        if stalled:
+            self.unstalled.extend(stalled)
+            stalled.clear()
+
+    def take_injected(self) -> List[int]:
+        out = self.injected
+        self.injected = []
+        return out
+
+    def take_unstalled(self) -> List[int]:
+        out = self.unstalled
+        self.unstalled = []
+        return out
+
+    def assert_drained(self) -> None:
+        parked = sum(len(s) for s in self._stalled)
+        if parked or any(self.inflight_erases) or self.injected:
+            raise RuntimeError(
+                f"online GC wedged at end of run: {parked} stalled writes, "
+                f"{sum(self.inflight_erases)} erases still in flight "
+                f"(device capacity exhausted? raise GCConfig.blocks_per_die "
+                f"or op_ratio)"
+            )
+
+    # -- internals -----------------------------------------------------------
+
+    def _check_watermark(self, d: int) -> None:
+        """Collect victims while the projected free pool sits at/below the
+        watermark.  Projected = free now + erases already in flight — each
+        collection queues one erase, so the loop converges without waiting
+        for reclaim."""
+        ftl = self.ftl
+        wm = self.watermark
+        while len(ftl.free[d]) + self.inflight_erases[d] <= wm:
+            if not ftl._collect(d):
+                break
+            for kind, gd, pt, wear, blk in ftl.drain_events():
+                self._inject(kind, gd, pt, wear, blk)
+
+    def _inject(self, kind: int, d: int, pt: int, wear: float,
+                blk: int) -> None:
+        """Append one GC page-op to the run's op buffers (admitted by the
+        engine at the current sim time)."""
+        b = self.bufs
+        sim = self.sim
+        is_read = kind == OP_GC_READ
+        is_erase = kind == OP_ERASE
+        if is_read:
+            a = sim._draw_attempts(pt, wear)
+            tr = sim._tr_for(pt, wear)
+            dur = 0.0
+        else:
+            a, tr = 1, 0.0
+            dur = self.terase if is_erase else self.tprog
+        b.rid.append(-1)
+        b.die.append(d)
+        b.ch.append(d % self.n_channels)
+        b.read.append(is_read)
+        b.erase.append(is_erase)
+        b.dur.append(dur)
+        b.a.append(a)
+        b.tr.append(tr)
+        b.rem.append(a)
+        b.held.append(0.0)
+        b.end.append(0.0)
+        b.resid.append(0.0)
+        b.susp.append(False)
+        if b.host_read is not None:
+            b.host_read.append(False)
+        o = len(b.rid) - 1
+        if is_erase:
+            self._erase_block[o] = (d, blk)
+            self.inflight_erases[d] += 1
+        self.injected.append(o)
+
+    def stats(self):
+        """FTL summary for SimStats (WA, GC traffic, wear)."""
+        return self.ftl.stats(host_reads=self.host_reads)

@@ -1,0 +1,145 @@
+"""Die-queue scheduling policies for the array event-core.
+
+The event core (:mod:`repro.flashsim.engine`) serves each die through one
+queue object.  This module is the policy layer: it defines the queue
+disciplines and the registry the config/run API validates against.  Three
+policies ship:
+
+``fcfs``
+    Strict arrival order — the pre-refactor behavior, bit-identical to
+    the original monolithic engine (the queue *is* a ``collections.deque``
+    and the event core drives it with the same append/popleft sequence).
+
+``host_prio``
+    Two-class priority: host reads always dequeue before anything else
+    (host programs, GC copy-back reads/programs, erases).  Within a
+    class, order stays FIFO.  This models firmware that reorders the die
+    command queue in favor of latency-critical host reads but never
+    interrupts an operation already on the die.
+
+``preempt``
+    ``host_prio`` ordering *plus* read-suspend firmware semantics: an
+    in-flight GC operation yields the die to a waiting host read —
+    erases and GC programs suspend immediately and later resume with
+    their residual time; GC reads suspend at retry-attempt boundaries
+    and resume with their remaining attempts (completed attempts are
+    never re-executed).  Host operations are never suspended.  Suspended
+    ops re-enter at the *front* of the low-priority class so GC work
+    resumes in service order.
+
+Queue protocol (duck-typed, engine-facing)
+------------------------------------------
+``append(op)``      enqueue a ready op (policy decides the class);
+``pop_next()``      dequeue the next op to serve;
+``resume_push(op)`` re-enqueue a suspended op at the front of its class;
+``has_host()``      True when a host read is waiting (preemption probe);
+truthiness / ``len()``  queue emptiness / total queued ops.
+
+``FCFSQueue`` subclasses ``deque`` so ``append`` / ``__bool__`` stay
+C-speed on the hot path; ``pop_next`` aliases ``deque.popleft``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Dict, List, Sequence, Tuple
+
+#: Registered policy names, in documentation order.
+SCHEDULERS: Tuple[str, ...] = ("fcfs", "host_prio", "preempt")
+
+
+class FCFSQueue(deque):
+    """Strict-FIFO die queue — a ``deque`` with the queue protocol.
+
+    ``append``/``__bool__``/``__len__`` are inherited C implementations,
+    so the fcfs hot path pays nothing for the abstraction.
+    """
+
+    __slots__ = ()
+
+    pop_next = deque.popleft
+    resume_push = deque.appendleft  # unused under fcfs (nothing suspends)
+
+    def has_host(self) -> bool:  # pragma: no cover - preempt-only probe
+        return False
+
+
+class HostPrioQueue:
+    """Two-class die queue: host reads (hi) jump everything else (lo).
+
+    ``host_read`` is the engine's per-op host-read table (a growing list
+    — online GC appends ops mid-run; the reference is shared, so new ops
+    classify correctly).  FIFO within each class.
+    """
+
+    __slots__ = ("hi", "lo", "_host")
+
+    def __init__(self, host_read: Sequence[bool]):
+        self.hi: deque = deque()
+        self.lo: deque = deque()
+        self._host = host_read
+
+    def append(self, op: int) -> None:
+        (self.hi if self._host[op] else self.lo).append(op)
+
+    def pop_next(self) -> int:
+        hi = self.hi
+        return hi.popleft() if hi else self.lo.popleft()
+
+    def resume_push(self, op: int) -> None:
+        # Suspended ops are never host reads: front of the low class.
+        self.lo.appendleft(op)
+
+    def has_host(self) -> bool:
+        return bool(self.hi)
+
+    def __bool__(self) -> bool:
+        return bool(self.hi) or bool(self.lo)
+
+    def __len__(self) -> int:
+        return len(self.hi) + len(self.lo)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerPolicy:
+    """One die-queue scheduling policy (registry entry).
+
+    ``prioritized`` selects the two-class queue; ``preemptive`` addition-
+    ally arms the engine's suspend/resume paths.  The queue factory gets
+    the engine's per-op host-read table (may grow during the run).
+    """
+
+    name: str
+    prioritized: bool
+    preemptive: bool
+    make_queue: Callable[[Sequence[bool]], object]
+
+    def make_queues(self, n_dies: int, host_read: Sequence[bool]) -> List:
+        return [self.make_queue(host_read) for _ in range(n_dies)]
+
+
+_REGISTRY: Dict[str, SchedulerPolicy] = {
+    "fcfs": SchedulerPolicy(
+        "fcfs", prioritized=False, preemptive=False,
+        make_queue=lambda host_read: FCFSQueue(),
+    ),
+    "host_prio": SchedulerPolicy(
+        "host_prio", prioritized=True, preemptive=False,
+        make_queue=HostPrioQueue,
+    ),
+    "preempt": SchedulerPolicy(
+        "preempt", prioritized=True, preemptive=True,
+        make_queue=HostPrioQueue,
+    ),
+}
+
+
+def get_scheduler(name: str) -> SchedulerPolicy:
+    """Resolve a policy by name (raises ``ValueError`` on unknown names)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheduler {name!r} (choose from {SCHEDULERS})"
+        ) from None

@@ -1,9 +1,10 @@
-"""Event-driven multi-queue SSD simulator (MQSim-analogue), array event-core.
+"""Event-driven multi-queue SSD simulator (MQSim-analogue), layered.
 
 A true discrete-event simulation of what matters for read-retry latency at
 the device level:
 
-  * 8 channels x 8 dies; FCFS die queues and FCFS channel arbitration;
+  * 8 channels x 8 dies; per-die queues under a pluggable scheduling
+    policy and FCFS channel arbitration;
   * every retry attempt senses on the die, transfers over the shared
     channel, and decodes on the channel's LDPC engine — retries consume
     channel bandwidth, so heavy retry regresses *other* dies' reads too.
@@ -17,8 +18,9 @@ the device level:
     transfer to finish); one speculative sense is charged to die occupancy
     when a retried sequence terminates;
   * AR² scales every attempt's tR by the characterized safe scale for the
-    simulated operating condition, and samples attempt counts from the
-    reduced-tR retry distribution so its rare extra attempts are charged;
+    operating condition — resolved **per block** when the FTL tracks
+    block wear — and samples attempt counts from the reduced-tR retry
+    distribution so its rare extra attempts are charged;
   * the SOTA baseline [25] starts the retry search at its predicted entry,
     shrinking attempt counts ~70%.
 
@@ -27,53 +29,59 @@ histograms (repro.core.characterize) for the simulated (retention, P/E)
 condition — the same transplant of real-device statistics into MQSim that
 the paper performs.
 
-Engine architecture
--------------------
-The event core is an integer-opcode interpreter over flat arrays:
+Layered architecture
+--------------------
+This module is the orchestration layer of a four-module package:
 
-  * the whole trace is expanded to flat per-page-op NumPy arrays up front
-    (:func:`expand_trace`), and attempt counts for every read page are
-    sampled in one batched pass — the RNG stream is consumed in the same
-    order as the retired per-request sampler, so attempt assignments are
-    bit-identical for a given seed;
-  * heap records are 2-tuples ``(time, seq << 40 | op_id << 2 | opcode)``
-    — no closures, no argument tuples; the serial and PR²-pipelined read
-    state machines, the write path, and block erases are opcode
-    transitions over preallocated per-op state buffers;
-  * admissions never enter the heap: page-ops are pre-sorted by arrival
-    time and merged into the event loop with a moving cursor;
-  * die FCFS state lives in flat ``busy_until``/``busy_total`` buffers
-    with per-die FIFO queues;
-  * channels are single-server FCFS with constant-duration transfers whose
-    requests are always issued at the current sim time, so channel state
-    collapses to a cumulative busy-until scalar: a transfer's grant and
-    completion times are exact at issue, eliminating the per-transfer
-    completion event (and the channel queues) entirely — one heap event
-    per read attempt instead of two.
+  * :mod:`repro.flashsim.engine` — the array event-core: integer-opcode
+    heap records ``(time, seq << 40 | op_id << 2 | opcode)``, the
+    busy-until channel collapse, and op-kind dispatch;
+  * :mod:`repro.flashsim.sched` — die-queue scheduling policies
+    (``fcfs`` / ``host_prio`` / ``preempt``, selected by
+    ``SSDConfig.scheduler`` or the run APIs' ``scheduler=`` knob);
+  * :mod:`repro.flashsim.gc_online` — completion-time-triggered garbage
+    collection (``GCConfig.mode = "online"`` or the ``gc="online"``
+    knob);
+  * **this module** — policy/CDF setup, batched attempt sampling, run
+    orchestration (:class:`SSDSim`), statistics, and the
+    ``simulate`` / ``compare_mechanisms`` / ``simulate_batch`` run APIs.
+
+The whole trace is expanded to flat per-page-op NumPy arrays up front
+(:func:`expand_trace`); attempt counts for every read page are sampled in
+one batched pass (RNG-stream-compatible with the retired per-request
+sampler), and the event core interprets the flat schedule.
 
 FTL / garbage collection (``SSDConfig.gc.enabled``)
 ---------------------------------------------------
 By default writes program in place and the flash never fills.  With the
-page-mapping FTL enabled (:mod:`repro.flashsim.ftl`), a deterministic
-pre-pass maps every host op and interleaves GC copy-back page-ops
-(``OP_GC_READ`` / ``OP_GC_PROG`` / ``OP_ERASE``) into the admission
-stream.  Inside the event loop they are ordinary page-ops scheduled
-through the same heap — GC reads run the policy's read state machine
-(with retry attempts sampled at the victim block's *per-block* wear via
-``OperatingCondition.with_wear``), GC programs transfer over the channel
-and hold the die for tPROG, and erases hold the die for ``t_erase_us`` —
-so GC traffic contends with host reads on the die queues, and SimStats
-gains write-amplification / GC counters plus host-read p99.
+page-mapping FTL enabled (:mod:`repro.flashsim.ftl`):
+
+  * ``gc="prepass"`` (default): a deterministic pre-pass maps every host
+    op and interleaves GC copy-back page-ops into the admission stream —
+    the PR 2 behavior, retained as the compatibility mode the
+    equivalence suite pins;
+  * ``gc="online"``: the FTL advances *inside* the event loop — writes
+    allocate at simulated program start, GC triggers on free-block-pool
+    watermarks, erased blocks return to the pool when their erase
+    completes, and writes stall when the pool runs dry (see
+    :mod:`repro.flashsim.gc_online`).
+
+Either way GC page-ops run through the same heap and contend with host
+reads on the die queues, GC reads sample retry attempts at the victim
+block's *per-block* wear (``OperatingCondition.with_wear``), and — new
+in this layer — AR² resolves its safe tR scale per block as well, so a
+worn block senses at the scale its own characterization bin allows
+rather than the device-level one.
 
 The seed engine (PR 1's closure-based DES) is preserved in
 :mod:`repro.flashsim.engine_ref` (``engine="reference"``); the array core
-reproduces its SimStats bit-for-bit on fixed in-place traces (see
-tests/test_flashsim_equiv.py) at a large wall-clock speedup (tracked in
-``BENCH_sim.json`` by ``benchmarks/microbench_sim.py``).  The reference
-engine predates the FTL and only validates the in-place path.  One
-caveat: die releases are scheduled with issue-time sequence numbers, so
-when two events collide at the *exact same float timestamp* their order
-can differ from the reference engine's; such ties are rare (a handful of
+reproduces its SimStats bit-for-bit on fixed in-place traces under the
+default ``scheduler="fcfs"`` (see tests/test_flashsim_equiv.py and
+tests/test_sched.py) at a large wall-clock speedup (tracked in
+``BENCH_sim.json`` by ``benchmarks/microbench_sim.py``).  One caveat:
+die releases are scheduled with issue-time sequence numbers, so when two
+events collide at the *exact same float timestamp* their order can
+differ from the reference engine's; such ties are rare (a handful of
 requests per hundred thousand) and shift per-request times by at most a
 transfer slot, leaving every distribution statistically unchanged.
 """
@@ -82,8 +90,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import heapq
-from collections import deque
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
 import numpy as np
@@ -91,17 +97,11 @@ import numpy as np
 from repro.core import characterize as CH
 from repro.core.retry import RetryPolicy
 from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
+from repro.flashsim.engine import make_buffers, run_event_core
+from repro.flashsim.sched import get_scheduler
 from repro.flashsim.workloads import RequestTrace, Workload, cached_trace
 
 PAGE_TYPE_ORDER = ("lsb", "csb", "msb")
-
-#: Event opcodes (low 2 bits of a heap record's packed code).
-_EV_NEXT = 0    # serial read: sense done -> issue transfer, schedule next
-_EV_COPY = 1    # pipelined read: copy into cache register -> issue transfer
-_EV_ACQ = 2     # write: transfer landed -> acquire die for programming
-_EV_REL = 3     # die release (read end / program end / erase end)
-
-_INF = float("inf")
 
 
 @dataclasses.dataclass
@@ -112,6 +112,9 @@ class SimStats:
     span.  The GC block (``wa`` onward) is populated only when the run
     went through the FTL (``SSDConfig.gc.enabled``); with the FTL off the
     defaults state the in-place-program facts (WA = 1.0, no GC traffic).
+    ``gc_suspensions`` counts preempt-scheduler suspend events;
+    ``write_stalls`` counts online-GC host-write stalls (both 0 when the
+    feature is off).
     """
 
     mean_us: float            # mean response time over ALL requests (us)
@@ -129,6 +132,8 @@ class SimStats:
     gc_page_reads: int = 0    # pages read back by GC copy-back
     gc_page_progs: int = 0    # pages re-programmed by GC copy-back
     blocks_erased: int = 0    # blocks erased by GC
+    gc_suspensions: int = 0   # preempt: GC ops suspended for host reads
+    write_stalls: int = 0     # online GC: host writes stalled on free pool
 
     def as_row(self) -> str:
         row = (
@@ -238,6 +243,13 @@ class SSDSim:
                 self.tr_scale = float(policy.tr_scale)
         else:
             self.tr_scale = 1.0
+        # Per-block AR² scale memo: snapped effective P/E -> safe scale.
+        self._wear_scales: Dict[float, float] = {}
+        # Unscaled per-page-type tR (scale applied per op: device-level for
+        # unworn blocks, per-block for GC-worn ones).
+        self._tr_base = np.array(
+            [cfg.timing.tr_us[pt] for pt in PAGE_TYPE_ORDER]
+        )
         # Per-page-type attempt-count CDFs under this mechanism (cached
         # across SSDSim instances in repro.core.characterize).
         self._attempt_cdfs = {
@@ -253,19 +265,43 @@ class SSDSim:
 
     # -- attempt sampling ----------------------------------------------------
 
+    def _scale_for(self, wear_pec: float) -> float:
+        """AR² tR scale at a block's effective wear (per-block resolution).
+
+        Zero wear — or a non-adaptive / pinned-scale policy — uses the
+        device-condition scale.  Worn blocks resolve the condition per
+        block (``OperatingCondition.with_wear``), snap the effective P/E
+        count up to the characterization grid, and look up *that* bin's
+        safe scale: a worn block senses at the scale its own
+        characterization allows, not the (faster) device-level one.
+        Memoized per snapped bin, so the set of distinct lookups stays
+        grid-bounded.
+        """
+        if (wear_pec <= 0.0 or not self.policy.adaptive_tr
+                or self.policy.tr_scale != "auto"):
+            return self.tr_scale
+        worn = self.cond.with_wear(wear_pec)
+        key = CH.snap_pec(worn.pec)
+        s = self._wear_scales.get(key)
+        if s is None:
+            s = CH.characterize_condition(
+                self.cond.retention_days, key
+            ).safe_tr_scale
+            self._wear_scales[key] = s
+        return s
+
     def _cdf_for(self, page_type: str, wear_pec: float) -> np.ndarray:
         """Attempt CDF for one page type at a block's effective wear.
 
         ``wear_pec`` is the block-local added P/E count from GC erases.
         Zero wear uses the device-condition table untouched (bit-identical
         to the pre-FTL sampler); worn blocks resolve the condition per
-        block (``OperatingCondition.with_wear``) and snap the effective
-        P/E count up to the characterization grid, so the handful of
-        distinct wear bins stays cache-bounded.  The search still executes
-        at the *device-condition* AR² tR scale — the firmware looks its
-        scale up per condition, not per block (per-block scale resolution
-        is a noted ROADMAP follow-up) — so worn blocks honestly pay extra
-        attempts rather than silently sensing slower.
+        block (``OperatingCondition.with_wear``), snap the effective
+        P/E count up to the characterization grid (so the handful of
+        distinct wear bins stays cache-bounded), and — for adaptive-tR
+        policies — evaluate the search at the *per-block* AR² scale
+        (:meth:`_scale_for`), so the attempt distribution and the sense
+        time of a worn block come from the same characterization bin.
         """
         if wear_pec <= 0.0:
             return self._attempt_cdfs[page_type]
@@ -275,8 +311,23 @@ class SSDSim:
             CH.snap_pec(worn.pec),
             page_type=page_type,
             sota=self.policy.sota_start,
-            tr_scale=self.tr_scale,
+            tr_scale=self._scale_for(wear_pec),
         )
+
+    def _draw_attempts(self, ptype_idx: int, wear_pec: float) -> int:
+        """One attempt count at (page type, block wear), from ``self.rng``.
+
+        The online-GC driver samples reads one at a time as the mapping
+        resolves them (wear is not known until the simulated instant).
+        """
+        pt = PAGE_TYPE_ORDER[ptype_idx]
+        a = int(np.searchsorted(self._cdf_for(pt, wear_pec),
+                                self.rng.random()))
+        return a if a > 1 else 1
+
+    def _tr_for(self, ptype_idx: int, wear_pec: float) -> float:
+        """Per-attempt sense time at (page type, block wear)."""
+        return float(self._tr_base[ptype_idx]) * self._scale_for(wear_pec)
 
     def _sample_attempts(
         self,
@@ -309,35 +360,53 @@ class SSDSim:
                 out[m] = om
         return np.maximum(out, 1)
 
-    # -- array event-core ----------------------------------------------------
+    # -- run orchestration ---------------------------------------------------
+
+    def _tr_scales_for_schedule(self, schedule, read_like: np.ndarray):
+        """Per-op AR² scale over an FTL schedule (per-block resolution)."""
+        P = schedule.n_ops
+        scale = np.full(P, self.tr_scale)
+        if self.policy.adaptive_tr and self.policy.tr_scale == "auto":
+            wear = schedule.wear_pec
+            worn = read_like & (wear > 0.0)
+            if worn.any():
+                for wv in np.unique(wear[worn]):
+                    scale[worn & (wear == wv)] = self._scale_for(float(wv))
+        return scale
 
     def run(
         self,
         trace: RequestTrace,
         expansion: Optional[TraceExpansion] = None,
         schedule=None,
+        validate: bool = False,
     ) -> SimStats:
         """Simulate one trace.
 
-        ``expansion`` (in-place runs) or ``schedule`` (an
-        :class:`repro.flashsim.ftl.FTLSchedule`, FTL/GC runs) may be
+        ``expansion`` (in-place and online-GC runs) or ``schedule`` (an
+        :class:`repro.flashsim.ftl.FTLSchedule`, prepass-GC runs) may be
         shared across the mechanisms of a sweep.  When ``cfg.gc.enabled``
-        and no schedule is supplied, the FTL pre-pass runs here.
+        and no schedule is supplied, the configured GC mode decides:
+        ``prepass`` builds the FTL schedule here; ``online`` attaches a
+        :class:`repro.flashsim.gc_online.OnlineGC` driver to the event
+        core.  ``validate=True`` turns on the engine's work-conservation
+        checks (test instrumentation).
         """
         cfg, t = self.cfg, self.cfg.timing
-        tdma, tecc, tprog = t.tdma_us, t.tecc_us, t.tprog_us
+        tprog = t.tprog_us
         pipelined = self.policy.pipelined
-        tr_by_type = (
-            np.array([t.tr_us[pt] for pt in PAGE_TYPE_ORDER]) * self.tr_scale
-        )
+        sched_policy = get_scheduler(cfg.scheduler)
+        gc_mode = cfg.gc.mode if cfg.gc.enabled else None
 
-        if schedule is None and cfg.gc.enabled:
+        if schedule is None and gc_mode == "prepass":
             from repro.flashsim.ftl import build_ftl_schedule
 
             schedule = build_ftl_schedule(trace, cfg)
 
+        online = None
         if schedule is not None:
-            # FTL path: host + GC page-ops, attempts sampled per block wear.
+            # Prepass FTL path: host + GC page-ops, attempts and AR² tR
+            # scale resolved per block wear.
             from repro.flashsim import ftl as _ftl
 
             P = schedule.n_ops
@@ -350,10 +419,31 @@ class SSDSim:
             )
             total_read_pages = int(host_read_np.sum())
             total_attempts = int(attempts_np[host_read_np].sum())
-            tr_np = tr_by_type[schedule.ptype]
+            tr_np = (self._tr_base[schedule.ptype]
+                     * self._tr_scales_for_schedule(schedule, read_like_np))
             (adm_t, op_rid, op_die, op_ch, op_read,
              op_erase, op_dur) = schedule.admission_lists
             n_requests = schedule.n_requests
+            bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
+                                op_erase, op_dur, attempts_np.tolist(),
+                                tr_np.tolist())
+        elif gc_mode == "online":
+            # Online FTL path: host ops only in the admission stream;
+            # attempt counts / tR resolve at admission, GC injects live.
+            from repro.flashsim.gc_online import OnlineGC
+
+            ex = expansion if expansion is not None else expand_trace(trace, cfg)
+            P = ex.n_ops
+            adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
+            # The buffers grow (GC injection): copy the shared views.
+            bufs = make_buffers(
+                adm_t, list(op_rid), list(op_die), list(op_ch),
+                list(op_read), [False] * P, [tprog] * P,
+                [1] * P, [0.0] * P,
+            )
+            online = OnlineGC(cfg, ex, self)
+            n_requests = ex.n_requests
+            total_read_pages = total_attempts = 0   # engine-accumulated
         else:
             ex = expansion if expansion is not None else expand_trace(trace, cfg)
             P = ex.n_ops
@@ -364,218 +454,31 @@ class SSDSim:
             attempts_np[read_mask] = self._sample_attempts(ex.ptype[read_mask])
             total_read_pages = int(read_mask.sum())
             total_attempts = int(attempts_np[read_mask].sum())
-            tr_np = tr_by_type[ex.ptype]
+            tr_np = (self._tr_base * self.tr_scale)[ex.ptype]
             adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
-            op_erase = [False] * P      # no erase traffic without the FTL
-            op_dur = [tprog] * P        # write-like ops all program-length
             n_requests = ex.n_requests
+            bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
+                                [False] * P,        # no erases without FTL
+                                [tprog] * P,        # write-like ops: tPROG
+                                attempts_np.tolist(), tr_np.tolist())
 
-        # Flat per-op state.  The schedules above are the NumPy source of
-        # truth; the interpreter loop reads them as plain Python buffers —
-        # the mechanism-independent views are converted once per
-        # expansion/schedule and shared across a sweep, only the
-        # policy-dependent attempt and sense-time buffers are built per run.
-        op_a = attempts_np.tolist()
-        op_tr = tr_np.tolist()
+        res = run_event_core(cfg, pipelined, sched_policy, bufs, n_requests,
+                             online=online, validate=validate)
+        self.events_processed = res.n_events
+        self.last_gc_suspensions = res.gc_suspensions
+        self.last_die_busy_us = float(sum(res.die_tot))
 
-        op_rem = op_a[:]            # serial: attempts left; pipelined: copy idx
-        op_held = [0.0] * P         # die-held-since timestamp
+        if online is not None:
+            total_attempts = res.online_attempts
+            total_read_pages = res.online_read_pages
 
-        n_dies, n_ch = cfg.n_dies, cfg.n_channels
-        die_busy = [0.0] * n_dies   # busy_until; inf while held
-        die_tot = [0.0] * n_dies
-        dieq = [deque() for _ in range(n_dies)]
-        # Channels are single-server FCFS with constant-duration jobs whose
-        # requests are always issued at the *current* sim time, so a
-        # cumulative busy-until scalar is an exact queue: a transfer's grant
-        # is max(now, busy_until) and its completion is known at issue time.
-        # That removes the per-transfer completion event (and the queue) —
-        # the dominant heap traffic of the retired engine.
-        ch_busy = [0.0] * n_ch
-        ch_tot = [0.0] * n_ch
-
-        req_done = [0.0] * n_requests
-
-        # Heap records are 2-tuples ``(time, seq << 40 | op << 2 | opcode)``:
-        # the packed int both tie-breaks FIFO (seq in the high bits — same
-        # push-order discipline as the reference engine's seq field) and
-        # carries the whole event, so an event costs one tuple, no closures,
-        # no argument unpacking.  All state transitions are inlined: at one
-        # event per read attempt the interpreter dispatch itself is the hot
-        # path, and a helper call per event would cost more than the
-        # transition it performs.
-        heap: list = []
-        push = heapq.heappush
-        pop = heapq.heappop
-        replace = heapq.heapreplace
-        seqc = 0                      # already-shifted seq (increments 1<<40)
-        _SEQ1 = 1 << 40
-        _OPSHIFT_MASK = (1 << 40) - 1
-        n_events = 0
-
-        read_start_ev = _EV_COPY if pipelined else _EV_NEXT
-
-        # Each event handler schedules AT MOST one successor event, so the
-        # pop+push pair collapses into a single heapreplace sift (pop alone
-        # when nothing is scheduled).  Events are peeked, dispatched, then
-        # replaced — never popped first.
-        ai = 0
-        next_adm = adm_t[0] if P else _INF
-        while True:
-            # Admission cursor merged with the heap (admits never queue).
-            if heap:
-                top = heap[0]
-                tt = top[0]
-            elif next_adm < _INF:
-                top = None
-                tt = _INF
-            else:
-                break
-            if next_adm <= tt:
-                op = ai
-                tm = next_adm
-                ai += 1
-                next_adm = adm_t[ai] if ai < P else _INF
-                # Reads contend for their die; writes go straight to
-                # the channel (program happens after the transfer);
-                # erases hold their die with no channel traffic.
-                if op_read[op]:
-                    d = op_die[op]
-                    if tm >= die_busy[d] and not dieq[d]:
-                        die_busy[d] = _INF
-                        op_held[op] = tm
-                        if pipelined:
-                            op_rem[op] = 0
-                        push(heap, (tm + op_tr[op],
-                                    seqc | op << 2 | read_start_ev))
-                        seqc += _SEQ1
-                    else:
-                        dieq[d].append(op)
-                elif op_erase[op]:
-                    d = op_die[op]
-                    if tm >= die_busy[d] and not dieq[d]:
-                        die_busy[d] = _INF
-                        op_held[op] = tm
-                        push(heap, (tm + op_dur[op],
-                                    seqc | op << 2 | _EV_REL))
-                        seqc += _SEQ1
-                    else:
-                        dieq[d].append(op)
-                else:
-                    c = op_ch[op]
-                    b = ch_busy[c]
-                    done = (b if b > tm else tm) + tdma
-                    ch_busy[c] = done
-                    ch_tot[c] += tdma
-                    push(heap, (done, seqc | op << 2 | _EV_ACQ))
-                    seqc += _SEQ1
-                continue
-
-            tm, code = top
-            ev = code & 3
-            op = (code & _OPSHIFT_MASK) >> 2
-            n_events += 1
-
-            if ev == _EV_COPY:
-                # Pipelined copy into the cache register at tm: the sense is
-                # done and the previous transfer has drained.  Issue the
-                # transfer (completion time exact at issue) and schedule the
-                # next copy at max(sense done, transfer drained) — both
-                # already known — or end the sequence.
-                c = op_ch[op]
-                b = ch_busy[c]
-                done = (b if b > tm else tm) + tdma
-                ch_busy[c] = done
-                ch_tot[c] += tdma
-                i = op_rem[op]
-                a = op_a[op]
-                if i + 1 < a:
-                    op_rem[op] = i + 1
-                    tnext = tm + op_tr[op]
-                    if done > tnext:
-                        tnext = done
-                    replace(heap, (tnext, seqc | op << 2 | _EV_COPY))
-                else:
-                    rid = op_rid[op]
-                    if rid >= 0:            # GC reads complete no request
-                        fin = done + tecc
-                        if fin > req_done[rid]:
-                            req_done[rid] = fin
-                    # Final attempt leaves the die: charge one speculative
-                    # sense when the sequence actually retried.
-                    rel = tm + op_tr[op] if a > 1 else tm
-                    replace(heap, (rel, seqc | op << 2 | _EV_REL))
-                seqc += _SEQ1
-            elif ev == _EV_NEXT:
-                # Serial read: sense done at tm -> transfer -> decode; on
-                # failure the firmware re-senses with the next table entry.
-                c = op_ch[op]
-                b = ch_busy[c]
-                done = (b if b > tm else tm) + tdma
-                ch_busy[c] = done
-                ch_tot[c] += tdma
-                rem = op_rem[op] - 1
-                if rem:
-                    op_rem[op] = rem
-                    replace(heap, (done + tecc + op_tr[op],
-                                   seqc | op << 2 | _EV_NEXT))
-                else:
-                    rid = op_rid[op]
-                    if rid >= 0:            # GC reads complete no request
-                        fin = done + tecc
-                        if fin > req_done[rid]:
-                            req_done[rid] = fin
-                    # Die freed at last transfer; the decode tail is off-die.
-                    replace(heap, (done, seqc | op << 2 | _EV_REL))
-                seqc += _SEQ1
-            elif ev == _EV_REL:
-                # Die release: read end, write program end, or erase end.
-                d = op_die[op]
-                die_tot[d] += tm - op_held[op]
-                die_busy[d] = tm
-                dq = dieq[d]
-                if dq:
-                    op2 = dq.popleft()
-                    die_busy[d] = _INF
-                    op_held[op2] = tm
-                    if op_read[op2]:
-                        if pipelined:
-                            op_rem[op2] = 0
-                        replace(heap, (tm + op_tr[op2],
-                                       seqc | op2 << 2 | read_start_ev))
-                    else:
-                        # Program or erase: hold the die for the op's
-                        # duration (tPROG / t_erase), then release.
-                        replace(heap, (tm + op_dur[op2],
-                                       seqc | op2 << 2 | _EV_REL))
-                    seqc += _SEQ1
-                else:
-                    pop(heap)
-                if not op_read[op]:
-                    rid = op_rid[op]
-                    if rid >= 0 and tm > req_done[rid]:
-                        req_done[rid] = tm
-            else:
-                # _EV_ACQ — write transfer landed: acquire the die.
-                d = op_die[op]
-                if tm >= die_busy[d] and not dieq[d]:
-                    die_busy[d] = _INF
-                    op_held[op] = tm
-                    replace(heap, (tm + op_dur[op], seqc | op << 2 | _EV_REL))
-                    seqc += _SEQ1
-                else:
-                    dieq[d].append(op)
-                    pop(heap)
-
-        self.events_processed = n_events
-
-        req_done_at = np.asarray(req_done)
+        req_done_at = np.asarray(res.req_done)
         self.last_req_done_us = req_done_at
         response = req_done_at - trace.arrival_us + cfg.host_overhead_us
         read_resp = response[trace.is_read]
         span = float(req_done_at.max())
         gc_kw = {}
-        if schedule is not None:
+        if schedule is not None or online is not None:
             # GC traffic can outlive the last host completion (an erase
             # triggered by the final write holds its die past it); extend
             # the utilization span to the last resource release so
@@ -583,15 +486,19 @@ class SSDSim:
             # the loop every die_busy/ch_busy entry is a finite release
             # time.  (In-place runs keep the host-completion span for
             # bit-parity with the reference engine.)
-            span = max(span, max(die_busy), max(ch_busy))
-            fs = schedule.stats
+            span = max(span, max(res.die_busy), max(res.ch_busy))
+            fs = schedule.stats if schedule is not None else online.stats()
             gc_kw = dict(
                 wa=fs.write_amplification,
                 gc_invocations=fs.gc_invocations,
                 gc_page_reads=fs.gc_page_reads,
                 gc_page_progs=fs.gc_page_progs,
                 blocks_erased=fs.blocks_erased,
+                gc_suspensions=res.gc_suspensions,
+                write_stalls=online.write_stalls if online is not None else 0,
             )
+        elif res.gc_suspensions:
+            gc_kw = dict(gc_suspensions=res.gc_suspensions)
         return SimStats(
             mean_us=float(response.mean()),
             p50_us=float(np.percentile(response, 50)),
@@ -602,8 +509,8 @@ class SSDSim:
             mean_read_attempts=(
                 total_attempts / total_read_pages if total_read_pages else 0.0
             ),
-            die_util=sum(die_tot) / (span * n_dies),
-            channel_util=sum(ch_tot) / (span * n_ch),
+            die_util=sum(res.die_tot) / (span * cfg.n_dies),
+            channel_util=sum(res.ch_tot) / (span * cfg.n_channels),
             read_p99_us=(
                 float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
             ),
@@ -614,10 +521,38 @@ class SSDSim:
 # -- run API ---------------------------------------------------------------
 
 
+def _with_knobs(
+    cfg: SSDConfig, scheduler: Optional[str], gc: Optional[str]
+) -> SSDConfig:
+    """Overlay the run-API ``scheduler=`` / ``gc=`` knobs onto a config.
+
+    ``scheduler`` picks the die-queue policy; ``gc`` is ``"off"``,
+    ``"prepass"``, or ``"online"`` (the latter two imply
+    ``gc.enabled=True``).  None leaves the config untouched.
+    """
+    if scheduler is not None:
+        cfg = dataclasses.replace(cfg, scheduler=scheduler)
+    if gc is not None:
+        if gc == "off":
+            gcc = dataclasses.replace(cfg.gc, enabled=False)
+        elif gc in ("prepass", "online"):
+            gcc = dataclasses.replace(cfg.gc, enabled=True, mode=gc)
+        else:
+            raise ValueError(
+                f"gc knob must be 'off', 'prepass' or 'online', got {gc!r}"
+            )
+        cfg = dataclasses.replace(cfg, gc=gcc)
+    return cfg
+
+
 def _shared_views(trace, cfg):
-    """(expansion, schedule) pair shared by every mechanism of a sweep."""
+    """(expansion, schedule) pair shared by every mechanism of a sweep.
+
+    Online GC has no shareable schedule (the FTL advances inside each
+    run), so only the expansion is shared there.
+    """
     expansion = expand_trace(trace, cfg)
-    if not cfg.gc.enabled:
+    if not cfg.gc.enabled or cfg.gc.mode != "prepass":
         return expansion, None
     from repro.flashsim.ftl import build_ftl_schedule
 
@@ -643,16 +578,22 @@ def simulate(
     n_requests: Optional[int] = None,
     trace: Optional[RequestTrace] = None,
     engine: str = "array",
+    scheduler: Optional[str] = None,
+    gc: Optional[str] = None,
 ) -> SimStats:
     """Convenience wrapper: one (workload, condition, mechanism) cell.
 
     Pass ``trace=`` to reuse a pre-generated trace across calls (all
     mechanisms then see the *same* arrivals); otherwise the trace is
-    generated (and memoized) from ``(workload, seed)``.  With
-    ``cfg.gc.enabled`` the trace runs through the page-mapping FTL
-    (:mod:`repro.flashsim.ftl`) and the returned stats carry WA/GC
-    counters; the reference engine predates the FTL and rejects it.
+    generated (and memoized) from ``(workload, seed)``.  ``scheduler=``
+    (``"fcfs"`` / ``"host_prio"`` / ``"preempt"``) and ``gc=`` (``"off"``
+    / ``"prepass"`` / ``"online"``) overlay the config without building
+    an ``SSDConfig`` by hand.  With GC enabled the trace runs through the
+    page-mapping FTL (:mod:`repro.flashsim.ftl`) and the returned stats
+    carry WA/GC counters; the reference engine predates the FTL and the
+    scheduler layer and rejects both.
     """
+    cfg = _with_knobs(cfg, scheduler, gc)
     if trace is None:
         if n_requests is not None:
             workload = dataclasses.replace(workload, n_requests=n_requests)
@@ -669,13 +610,19 @@ def compare_mechanisms(
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
     engine: str = "array",
+    scheduler: Optional[str] = None,
+    gc: Optional[str] = None,
 ) -> Dict[str, SimStats]:
     """All mechanisms over ONE shared trace (generated once, expanded once).
 
-    With ``cfg.gc.enabled`` the FTL pre-pass also runs once and its
-    schedule is shared: every mechanism sees identical GC traffic and
-    per-block wear, so mechanism deltas isolate the retry policy.
+    With prepass GC the FTL pre-pass also runs once and its schedule is
+    shared: every mechanism sees identical GC traffic and per-block wear,
+    so mechanism deltas isolate the retry policy.  (Online GC advances
+    the FTL inside each run — mechanisms still share the trace and
+    expansion, but GC timing legitimately responds to each mechanism's
+    latencies.)
     """
+    cfg = _with_knobs(cfg, scheduler, gc)
     if n_requests is not None:
         workload = dataclasses.replace(workload, n_requests=n_requests)
     trace = cached_trace(workload, seed=seed)
@@ -703,17 +650,20 @@ def simulate_batch(
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
     engine: str = "array",
+    scheduler: Optional[str] = None,
+    gc: Optional[str] = None,
 ) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
     """Sweep (mechanism x condition x seed) cells for one workload.
 
     Throughput-structured: each seed's trace is generated and expanded
-    once — and, with ``cfg.gc.enabled``, run through the FTL pre-pass
-    once — then shared by every (mechanism, condition) cell;
-    characterization tables (AR² safe scales, attempt histograms) are
-    memoized per condition in :mod:`repro.core.characterize`, so the grid
-    pays each JAX characterization exactly once.  Returns
+    once — and, with prepass GC, run through the FTL pre-pass once —
+    then shared by every (mechanism, condition) cell; characterization
+    tables (AR² safe scales, attempt histograms) are memoized per
+    condition in :mod:`repro.core.characterize`, so the grid pays each
+    JAX characterization exactly once.  Returns
     ``{(mechanism, condition, seed): SimStats}``.
     """
+    cfg = _with_knobs(cfg, scheduler, gc)
     conditions = tuple(conditions)
     if n_requests is not None:
         workload = dataclasses.replace(workload, n_requests=n_requests)

@@ -55,15 +55,20 @@ PROFILES = (
 )
 
 #: Write-heavy MMPP profiles for the FTL/GC regime (MSR-Cambridge print/
-#: research-server classes: ~90% writes re-walking a small hot span).
-#: Sustained small-span overwrites are what fill the over-provisioned
-#: capacity and keep the garbage collector busy — the contention regime
-#: the in-place simulator could never reach.
+#: research/source-control server classes: write-dominated traffic
+#: re-walking a small hot span).  Sustained small-span overwrites are
+#: what fill the over-provisioned capacity and keep the garbage
+#: collector busy — the contention regime the in-place simulator could
+#: never reach.  ``src`` mixes in a substantial read fraction so the
+#: scheduler sweep (host-read priority / GC preemption) measures the
+#: read tail on a statistically meaningful read population.
 GC_PROFILES = (
     Workload("prn",   read_ratio=0.11, iops=16000, burstiness=2.0,
              mean_pages=1.6, span_pages=1 << 13),
     Workload("rsrch", read_ratio=0.09, iops=10000, burstiness=3.0,
              mean_pages=1.1, span_pages=1 << 12),
+    Workload("src",   read_ratio=0.30, iops=14000, burstiness=2.0,
+             mean_pages=1.3, span_pages=1 << 13),
 )
 
 
