@@ -18,7 +18,7 @@ batched pass.
 and the aggregate speedup — the perf trajectory of the simulator is
 tracked through this file from PR 1 onward.
 
-Three sweeps ride along:
+Four sweeps ride along:
 
   * **claim cells** (PR 3): the paper's headline reductions (PR²+AR² vs
     baseline @ aged; SOTA+PR²+AR² vs SOTA @ modest) re-measured as
@@ -30,17 +30,25 @@ Three sweeps ride along:
   * **scheduler cells** (PR 3): the GC profiles under online GC across
     the die-queue policies (fcfs / host_prio / preempt) — the
     host-read-priority acceptance: host_prio and preempt must cut the
-    fcfs read-p99 inflation by >= 2x at equal (±10%) WA.
+    fcfs read-p99 inflation by >= 2x at equal (±10%) WA;
+  * **workload (real-trace replay) cells** (PR 4): the checked-in
+    MSR-format excerpts (tests/data) replayed end-to-end through the
+    ingestion -> dense-remap -> FTL-auto-sizing path, baseline vs
+    PR²/AR² with prepass GC.  Seed variation comes from an 0.85
+    Bernoulli subsample per seed (deterministic files have no seed of
+    their own), reported as mean ± 95% CI; the acceptance is that every
+    mechanism produces finite stats and the FTL engages (WA > 1).
 
 Usage: PYTHONPATH=src python -m benchmarks.microbench_sim [--n 8000]
            [--seeds 5] [--quick] [--skip-reference] [--skip-gc]
-           [--out BENCH_sim.json]
+           [--skip-traces] [--out BENCH_sim.json]
 
   --n N             requests per cell (default 8000, the acceptance size)
-  --seeds K         seeds per claim/GC/scheduler cell (default 5)
+  --seeds K         seeds per claim/GC/scheduler/workload cell (default 5)
   --quick           tiny grid (CI smoke; n defaults to 1200, 2 seeds)
   --skip-reference  only measure the array engine (no speedup column)
   --skip-gc         skip the FTL/GC + scheduler sweep cells
+  --skip-traces     skip the real-trace replay cells
   --out PATH        output JSON path (default BENCH_sim.json in cwd)
 """
 
@@ -57,12 +65,21 @@ import numpy as np
 from repro.core.retry import RetryPolicy
 from repro.flashsim.config import GCConfig, SSDConfig
 from repro.flashsim.engine_ref import SSDSimRef
-from repro.flashsim.ssd import SSDSim, expand_trace, simulate, simulate_batch
+from repro.flashsim.ssd import (
+    SSDSim,
+    compare_mechanisms,
+    expand_trace,
+    simulate,
+    simulate_batch,
+)
 from repro.flashsim.workloads import (
     GC_PROFILES,
     PROFILES,
+    Subsample,
     cached_trace,
     generate_trace,
+    get_source,
+    trace_stats,
 )
 
 from benchmarks.e2e_response_time import (
@@ -392,6 +409,87 @@ def bench_sched_cell(w, cond, n_requests, seeds, mech="baseline"):
     return row
 
 
+# -- workload cells: real-trace replay through ingestion + FTL ------------
+
+#: Checked-in MSR-format excerpts (tests/data/) replayed per PR.  The
+#: registry resolves them via the search path (cwd/tests/data when run
+#: from the repo root); dense footprint remap is the file-scheme default,
+#: which is what FTL auto-OP sizing needs for sparse real address spaces.
+TRACE_SPECS = ("msr:web_0", "msr:src1_1")
+TRACE_MECHS = ("baseline", "pr2", "ar2", "pr2ar2")
+
+#: Per-seed Bernoulli keep probability: the seed axis for deterministic
+#: file traces (each seed replays an independent 85% subsample).
+TRACE_SAMPLE = 0.85
+
+
+def bench_trace_cell(spec, cond, seeds):
+    """Replay one checked-in excerpt end-to-end: compare_mechanisms with
+    prepass GC (FTL auto-sized from the remapped dense footprint),
+    baseline vs PR²/AR², mean ± 95% CI over subsample seeds."""
+    src = get_source(spec)
+    src_stats = trace_stats(src.trace(0))
+    # Composable form (not string concatenation) so parameterized specs
+    # in TRACE_SPECS keep working; the chain is identical to ?sample=.
+    sub = src.with_transforms(Subsample(TRACE_SAMPLE))
+    row = {
+        "workload": spec,
+        "condition": cond.label(),
+        "mechanisms": list(TRACE_MECHS),
+        "gc_mode": "prepass",
+        "n_seeds": len(seeds),
+        "sample": TRACE_SAMPLE,
+        "source": {
+            "n_requests": src_stats.n_requests,
+            # iops is inf for a degenerate zero-time-span excerpt
+            "iops": round(src_stats.iops) if math.isfinite(src_stats.iops)
+            else None,
+            "read_ratio": round(src_stats.read_ratio, 3),
+            "mean_pages": round(src_stats.mean_pages, 2),
+            "footprint_pages": src_stats.footprint_pages,
+            "burstiness": round(src_stats.mmpp_burstiness, 2),
+        },
+    }
+    per_mech = {m: {"mean_us": [], "read_p99_us": []} for m in TRACE_MECHS}
+    wa_list, finite = [], True
+    wall = 0.0
+    for s in seeds:
+        t0 = time.perf_counter()
+        grid = compare_mechanisms(sub, cond, mechanisms=TRACE_MECHS,
+                                  seed=s, gc="prepass")
+        wall += time.perf_counter() - t0
+        for m, st in grid.items():
+            for f in ("mean_us", "p50_us", "p99_us", "read_p99_us", "wa"):
+                if not np.isfinite(float(getattr(st, f))):
+                    finite = False
+            per_mech[m]["mean_us"].append(st.mean_us)
+            per_mech[m]["read_p99_us"].append(st.read_p99_us)
+        wa_list.append(grid["baseline"].wa)
+    row["wall_s"] = round(wall, 3)
+    for m in TRACE_MECHS:
+        mm, mh = mean_ci95(per_mech[m]["mean_us"])
+        pm, _ = mean_ci95(per_mech[m]["read_p99_us"])
+        row[m] = {
+            "mean_us": round(mm, 1), "mean_us_ci95": round(mh, 1),
+            "read_p99_us": round(pm, 1),
+        }
+    reds = [
+        1.0 - a / b
+        for a, b in zip(per_mech["pr2ar2"]["mean_us"],
+                        per_mech["baseline"]["mean_us"])
+    ]
+    rm, rh = mean_ci95(reds)
+    wam, wah = mean_ci95(wa_list)
+    row.update(
+        pr2ar2_reduction_mean=round(rm, 4),
+        pr2ar2_reduction_ci95=round(rh, 4),
+        wa_mean=round(wam, 3), wa_ci95=round(wah, 3),
+    )
+    row["ok_finite"] = bool(finite)
+    row["ok_wa_gt_1"] = bool(min(wa_list) > 1.0)
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=None,
@@ -403,6 +501,7 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-reference", action="store_true")
     ap.add_argument("--skip-gc", action="store_true")
+    ap.add_argument("--skip-traces", action="store_true")
     ap.add_argument("--out", default="BENCH_sim.json")
     args = ap.parse_args()
     n = args.n if args.n is not None else (1200 if args.quick else 8000)
@@ -478,6 +577,31 @@ def main():
                 f"wa_eq={row['ok_wa_equal']} ok={row['ok_p99_cut_2x']}"
             )
 
+    trace_rows = []
+    trace_carried = False
+    if args.skip_traces:
+        try:
+            with open(args.out) as f:
+                prev = json.load(f)
+            trace_rows = prev.get("trace_cells", [])
+            trace_carried = bool(trace_rows)
+        except (OSError, ValueError):
+            pass
+    else:
+        specs = TRACE_SPECS[:1] if args.quick else TRACE_SPECS
+        for spec in specs:
+            row = bench_trace_cell(spec, AGED, seeds)
+            trace_rows.append(row)
+            print(
+                f"TRACE {spec:12s} ({row['source']['n_requests']} reqs, "
+                f"rd={row['source']['read_ratio']:.2f}): "
+                f"baseline {row['baseline']['mean_us']:.0f}us -> pr2ar2 "
+                f"{row['pr2ar2']['mean_us']:.0f}us "
+                f"(-{100 * row['pr2ar2_reduction_mean']:.1f}%"
+                f"±{100 * row['pr2ar2_reduction_ci95']:.1f}) "
+                f"WA={row['wa_mean']:.2f} ok={row['ok_finite']}"
+            )
+
     total_array = sum(r["wall_array_s"] for r in rows)
     summary = {
         "n_requests": n,
@@ -509,10 +633,22 @@ def main():
             min(r["inflation_cut_host_prio"], r["inflation_cut_preempt"])
             for r in sched_rows
         )
+    if trace_rows:
+        summary["trace_replay_ok"] = all(
+            r["ok_finite"] and r["ok_wa_gt_1"] for r in trace_rows
+        )
+        summary["trace_cells_n"] = len(trace_rows)
+        summary["trace_pr2ar2_reduction_mean"] = round(
+            float(np.mean([r["pr2ar2_reduction_mean"] for r in trace_rows])),
+            4,
+        )
+        if trace_carried:
+            summary["trace_cells_carried"] = True  # from a previous run
 
     out = {"benchmark": "flashsim-des-engine", "summary": summary,
            "cells_detail": rows, "claim_cells": claim_rows,
-           "gc_cells": gc_rows, "sched_cells": sched_rows}
+           "gc_cells": gc_rows, "sched_cells": sched_rows,
+           "trace_cells": trace_rows}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

@@ -99,8 +99,11 @@ class SSDConfig:
     gc: GCConfig = GCConfig()
     #: Die-queue scheduling policy (:mod:`repro.flashsim.sched`):
     #: ``"fcfs"`` (strict arrival order — bit-identical to the original
-    #: engine), ``"host_prio"`` (host reads jump GC/program ops), or
-    #: ``"preempt"`` (host_prio + read-suspend of in-flight GC ops).
+    #: engine), ``"host_prio"`` (host reads jump GC/program ops),
+    #: ``"host_prio_aged"`` (host_prio with a starvation bound — GC and
+    #: program ops age to the front after ``:N`` bypassing host reads,
+    #: e.g. ``"host_prio_aged:8"``), or ``"preempt"`` (host_prio +
+    #: read-suspend of in-flight GC ops).
     scheduler: str = "fcfs"
 
     def __post_init__(self):
@@ -109,13 +112,9 @@ class SSDConfig:
                 f"SSDConfig needs >=1 channel and >=1 die per channel, got "
                 f"{self.n_channels}x{self.dies_per_channel}"
             )
-        from repro.flashsim.sched import SCHEDULERS
+        from repro.flashsim.sched import get_scheduler
 
-        if self.scheduler not in SCHEDULERS:
-            raise ValueError(
-                f"unknown scheduler {self.scheduler!r} "
-                f"(choose from {SCHEDULERS})"
-            )
+        get_scheduler(self.scheduler)   # raises ValueError on unknown names
 
     @property
     def n_dies(self) -> int:

@@ -11,8 +11,15 @@ latency scaling matter most.  This module adds the missing subsystem:
     page of its die's *active block* and invalidates the previous mapping;
   * configurable **over-provisioning** (:class:`~repro.flashsim.config.
     GCConfig.op_ratio`): physical capacity is auto-sized from the trace's
-    logical footprint so utilization = 1 − OP at full pre-fill, or pinned
-    explicitly with ``blocks_per_die``;
+    logical **footprint** — the count of *distinct* pages each die's
+    stripe touches, never the raw LBA span — so utilization = 1 − OP at
+    full pre-fill, or pinned explicitly with ``blocks_per_die``.  Real
+    ingested traces scatter their footprint across volume-sized sparse
+    spans; sizing stays footprint-proportional regardless, but run them
+    through the dense-footprint remap (:class:`repro.flashsim.workloads.
+    DenseRemap`, the registry default for file sources) so the
+    ``lpn % n_dies`` stripe also spreads evenly instead of following the
+    trace's offset stride;
   * **greedy victim selection**: when a die's free-block count falls to
     the GC threshold, the sealed block with the fewest valid pages is
     compacted — its valid pages are read (``OP_GC_READ``), re-programmed

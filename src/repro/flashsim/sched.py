@@ -17,6 +17,18 @@ policies ship:
     command queue in favor of latency-critical host reads but never
     interrupts an operation already on the die.
 
+``host_prio_aged``
+    ``host_prio`` with a **starvation bound**: under a sustained
+    100%-read phase plain host_prio can park a queued GC program or
+    erase forever (free blocks never reclaim, and with online GC the
+    device eventually wedges on writes).  Here a waiting low-priority op
+    *ages*: once ``age_bound`` host reads have dequeued past a waiting
+    GC/program op, the next dispatch serves the low class first.  The
+    head-of-line low op is therefore bypassed at most ``age_bound``
+    times — bounded staleness for GC work, near-host_prio read latency
+    otherwise.  The bound is configurable through the registry name:
+    ``"host_prio_aged:8"`` (default 16).
+
 ``preempt``
     ``host_prio`` ordering *plus* read-suspend firmware semantics: an
     in-flight GC operation yields the die to a waiting host read —
@@ -45,8 +57,15 @@ import dataclasses
 from collections import deque
 from typing import Callable, Dict, List, Sequence, Tuple
 
-#: Registered policy names, in documentation order.
-SCHEDULERS: Tuple[str, ...] = ("fcfs", "host_prio", "preempt")
+#: Registered policy names, in documentation order.  ``host_prio_aged``
+#: also accepts a bound suffix (``"host_prio_aged:8"``).
+SCHEDULERS: Tuple[str, ...] = (
+    "fcfs", "host_prio", "host_prio_aged", "preempt"
+)
+
+#: Host reads that dequeue past a waiting low-priority op before it ages
+#: to the front (``host_prio_aged`` default).
+DEFAULT_AGE_BOUND = 16
 
 
 class FCFSQueue(deque):
@@ -101,6 +120,39 @@ class HostPrioQueue:
         return len(self.hi) + len(self.lo)
 
 
+class AgedHostPrioQueue(HostPrioQueue):
+    """Host-priority die queue with a starvation bound (GC aging).
+
+    Counts how many high-priority (host-read) dispatches have bypassed
+    the waiting low class; at ``age_bound`` the next dispatch serves the
+    low class and the counter resets.  The counter also resets whenever
+    the low class drains or is served naturally, so the bound is per
+    head-of-line wait, not cumulative.
+    """
+
+    __slots__ = ("age_bound", "_bypassed")
+
+    def __init__(self, host_read: Sequence[bool],
+                 age_bound: int = DEFAULT_AGE_BOUND):
+        super().__init__(host_read)
+        if age_bound < 1:
+            raise ValueError(f"age_bound must be >= 1, got {age_bound}")
+        self.age_bound = age_bound
+        self._bypassed = 0
+
+    def pop_next(self) -> int:
+        hi, lo = self.hi, self.lo
+        if hi and lo and self._bypassed >= self.age_bound:
+            self._bypassed = 0
+            return lo.popleft()       # aged: GC/program jumps the reads
+        if hi:
+            if lo:
+                self._bypassed += 1
+            return hi.popleft()
+        self._bypassed = 0
+        return lo.popleft()
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerPolicy:
     """One die-queue scheduling policy (registry entry).
@@ -128,6 +180,10 @@ _REGISTRY: Dict[str, SchedulerPolicy] = {
         "host_prio", prioritized=True, preemptive=False,
         make_queue=HostPrioQueue,
     ),
+    "host_prio_aged": SchedulerPolicy(
+        "host_prio_aged", prioritized=True, preemptive=False,
+        make_queue=AgedHostPrioQueue,
+    ),
     "preempt": SchedulerPolicy(
         "preempt", prioritized=True, preemptive=True,
         make_queue=HostPrioQueue,
@@ -136,10 +192,32 @@ _REGISTRY: Dict[str, SchedulerPolicy] = {
 
 
 def get_scheduler(name: str) -> SchedulerPolicy:
-    """Resolve a policy by name (raises ``ValueError`` on unknown names)."""
-    try:
-        return _REGISTRY[name]
-    except KeyError:
+    """Resolve a policy by name (raises ``ValueError`` on unknown names).
+
+    ``host_prio_aged`` accepts an optional starvation bound suffix —
+    ``"host_prio_aged:8"`` ages a waiting GC/program op to the front
+    after 8 bypassing host reads (default ``DEFAULT_AGE_BOUND``).
+    """
+    base, sep, arg = name.partition(":")
+    policy = _REGISTRY.get(base)
+    if policy is None or (sep and (base != "host_prio_aged" or not arg)):
         raise ValueError(
-            f"unknown scheduler {name!r} (choose from {SCHEDULERS})"
-        ) from None
+            f"unknown scheduler {name!r} (choose from {SCHEDULERS}; "
+            f"only host_prio_aged takes a ':bound' suffix)"
+        )
+    if arg:
+        try:
+            bound = int(arg)
+        except ValueError:
+            raise ValueError(
+                f"scheduler {name!r}: age bound must be an integer"
+            ) from None
+        if bound < 1:
+            raise ValueError(
+                f"scheduler {name!r}: age bound must be >= 1"
+            )
+        return dataclasses.replace(
+            policy, name=name,
+            make_queue=lambda host_read: AgedHostPrioQueue(host_read, bound),
+        )
+    return policy

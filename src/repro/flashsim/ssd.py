@@ -90,7 +90,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Iterable, Optional, Sequence, Tuple
+from typing import Dict, Iterable, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -99,9 +99,62 @@ from repro.core.retry import RetryPolicy
 from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
 from repro.flashsim.engine import make_buffers, run_event_core
 from repro.flashsim.sched import get_scheduler
-from repro.flashsim.workloads import RequestTrace, Workload, cached_trace
+from repro.flashsim.workloads import (
+    RequestTrace,
+    SyntheticSource,
+    TraceSource,
+    Truncate,
+    Workload,
+    cached_trace,
+    get_source,
+)
 
 PAGE_TYPE_ORDER = ("lsb", "csb", "msb")
+
+#: What the run APIs accept as a workload: a synthetic profile, a
+#: registry spec string ("websearch", "msr:web_0?rescale=0.5", ...), or
+#: any TraceSource.
+WorkloadLike = Union[Workload, str, TraceSource]
+
+
+def resolve_trace(
+    workload: WorkloadLike, seed: int = 0, n_requests: Optional[int] = None
+) -> RequestTrace:
+    """Resolve a workload-like argument to a (cached, frozen) trace.
+
+    :class:`Workload` profiles take the exact legacy path —
+    ``dataclasses.replace(n_requests=...)`` + :func:`cached_trace` — so
+    synthetic runs stay bit-identical to the pre-package module.  Spec
+    strings resolve through :func:`repro.flashsim.workloads.registry.
+    get_source`; for sources, ``n_requests`` adds a ``Truncate``
+    transform (first N requests in arrival order), slotted *before* any
+    dense footprint remap so the registry's canonical order — and the
+    dense ``[0, footprint)`` guarantee — hold exactly as they would for
+    ``?limit=N``.
+    """
+    if isinstance(workload, Workload):
+        if n_requests is not None:
+            workload = dataclasses.replace(workload, n_requests=n_requests)
+        return cached_trace(workload, seed=seed)
+    src = workload if isinstance(workload, TraceSource) else \
+        get_source(workload)
+    if n_requests is not None:
+        if isinstance(src, SyntheticSource) and not src.transforms:
+            # A bare profile spelled as a string regenerates at length N
+            # exactly like the Workload-object call — the two spellings
+            # must never diverge (truncating the full default-length
+            # trace would give different arrays AND cost a 40x build).
+            w = dataclasses.replace(src.workload, n_requests=n_requests)
+            return cached_trace(w, seed=seed)
+        from repro.flashsim.workloads.registry import POST_LIMIT_TRANSFORMS
+
+        tfs = list(src.transforms)
+        # Canonical ?limit=N position (defined by the registry order).
+        at = next((i for i, t in enumerate(tfs)
+                   if isinstance(t, POST_LIMIT_TRANSFORMS)), len(tfs))
+        tfs.insert(at, Truncate(n_requests))
+        src = dataclasses.replace(src, transforms=tuple(tfs))
+    return src.trace(seed)
 
 
 @dataclasses.dataclass
@@ -570,7 +623,7 @@ def _make_sim(cfg, condition, mechanism, seed, engine):
 
 
 def simulate(
-    workload: Workload,
+    workload: WorkloadLike,
     condition: OperatingCondition,
     mechanism: str,
     seed: int = 0,
@@ -583,27 +636,29 @@ def simulate(
 ) -> SimStats:
     """Convenience wrapper: one (workload, condition, mechanism) cell.
 
-    Pass ``trace=`` to reuse a pre-generated trace across calls (all
-    mechanisms then see the *same* arrivals); otherwise the trace is
-    generated (and memoized) from ``(workload, seed)``.  ``scheduler=``
-    (``"fcfs"`` / ``"host_prio"`` / ``"preempt"``) and ``gc=`` (``"off"``
-    / ``"prepass"`` / ``"online"``) overlay the config without building
-    an ``SSDConfig`` by hand.  With GC enabled the trace runs through the
-    page-mapping FTL (:mod:`repro.flashsim.ftl`) and the returned stats
-    carry WA/GC counters; the reference engine predates the FTL and the
-    scheduler layer and rejects both.
+    ``workload`` is a synthetic :class:`Workload` profile, a trace-source
+    spec string (``"websearch"``, ``"msr:web_0?rescale=0.5"`` — see
+    :mod:`repro.flashsim.workloads.registry`), or any
+    :class:`~repro.flashsim.workloads.TraceSource`.  Pass ``trace=`` to
+    reuse a pre-generated trace across calls (all mechanisms then see
+    the *same* arrivals); otherwise the trace is resolved (and memoized)
+    from ``(workload, seed)``.  ``scheduler=`` (``"fcfs"`` /
+    ``"host_prio"`` / ``"host_prio_aged"`` / ``"preempt"``) and ``gc=``
+    (``"off"`` / ``"prepass"`` / ``"online"``) overlay the config without
+    building an ``SSDConfig`` by hand.  With GC enabled the trace runs
+    through the page-mapping FTL (:mod:`repro.flashsim.ftl`) and the
+    returned stats carry WA/GC counters; the reference engine predates
+    the FTL and the scheduler layer and rejects both.
     """
     cfg = _with_knobs(cfg, scheduler, gc)
     if trace is None:
-        if n_requests is not None:
-            workload = dataclasses.replace(workload, n_requests=n_requests)
-        trace = cached_trace(workload, seed=seed)
+        trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
     return sim.run(trace)
 
 
 def compare_mechanisms(
-    workload: Workload,
+    workload: WorkloadLike,
     condition: OperatingCondition,
     mechanisms=("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2"),
     seed: int = 0,
@@ -613,9 +668,12 @@ def compare_mechanisms(
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
 ) -> Dict[str, SimStats]:
-    """All mechanisms over ONE shared trace (generated once, expanded once).
+    """All mechanisms over ONE shared trace (resolved once, expanded once).
 
-    With prepass GC the FTL pre-pass also runs once and its schedule is
+    ``workload`` accepts profiles, registry spec strings, and
+    :class:`TraceSource`\\ s (see :func:`resolve_trace`) — real ingested
+    traces replay through the identical shared-trace machinery.  With
+    prepass GC the FTL pre-pass also runs once and its schedule is
     shared: every mechanism sees identical GC traffic and per-block wear,
     so mechanism deltas isolate the retry policy.  (Online GC advances
     the FTL inside each run — mechanisms still share the trace and
@@ -623,9 +681,7 @@ def compare_mechanisms(
     latencies.)
     """
     cfg = _with_knobs(cfg, scheduler, gc)
-    if n_requests is not None:
-        workload = dataclasses.replace(workload, n_requests=n_requests)
-    trace = cached_trace(workload, seed=seed)
+    trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     if engine != "array":
         return {
             m: simulate(workload, condition, m, seed, cfg, trace=trace,
@@ -641,7 +697,7 @@ def compare_mechanisms(
 
 
 def simulate_batch(
-    workload: Workload,
+    workload: WorkloadLike,
     conditions: Iterable[OperatingCondition],
     mechanisms: Sequence[str] = (
         "baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2",
@@ -660,16 +716,18 @@ def simulate_batch(
     then shared by every (mechanism, condition) cell; characterization
     tables (AR² safe scales, attempt histograms) are memoized per
     condition in :mod:`repro.core.characterize`, so the grid pays each
-    JAX characterization exactly once.  Returns
-    ``{(mechanism, condition, seed): SimStats}``.
+    JAX characterization exactly once.  ``workload`` accepts profiles,
+    registry spec strings, and :class:`TraceSource`\\ s; for
+    deterministic file traces, seed variation comes from seeded
+    transforms (e.g. ``?sample=0.9``) — without one, every seed replays
+    the same trace (only attempt sampling varies, via ``seed + 7``).
+    Returns ``{(mechanism, condition, seed): SimStats}``.
     """
     cfg = _with_knobs(cfg, scheduler, gc)
     conditions = tuple(conditions)
-    if n_requests is not None:
-        workload = dataclasses.replace(workload, n_requests=n_requests)
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
     for s in seeds:
-        trace = cached_trace(workload, seed=s)
+        trace = resolve_trace(workload, seed=s, n_requests=n_requests)
         if engine == "array":
             expansion, schedule = _shared_views(trace, cfg)
         else:

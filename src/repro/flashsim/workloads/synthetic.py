@@ -1,6 +1,6 @@
-"""Workload profiles with distinct I/O characteristics.
+"""Synthetic MMPP workload profiles with distinct I/O characteristics.
 
-The paper evaluates on six real-world block traces.  Traces are not
+The paper evaluates on twelve real-world block traces.  Traces are not
 redistributable, so we generate statistically-shaped equivalents covering
 the same axes the paper varies: read ratio (read-dominant vs mixed),
 request size, arrival burstiness, and intensity — plus a logical-span
@@ -11,6 +11,13 @@ MSR-Cambridge / enterprise classes they emulate.
 Arrivals are a Markov-modulated Poisson process (bursty <-> idle phases);
 sizes are drawn from a small-page-biased geometric mixture, matching the
 4-64 KiB concentration of the original traces.
+
+**Stability contract**: :func:`generate_trace` / :func:`cached_trace`
+are deterministic per ``(profile, seed)`` and pinned bit-for-bit by
+``tests/test_workloads.py`` against checksums recorded before the
+workloads package refactor — the generator here is the pre-refactor
+module's, moved verbatim.  Real ingested traces validate the generator's
+*shapes* through :func:`~repro.flashsim.workloads.stats.trace_stats`.
 """
 
 from __future__ import annotations
@@ -18,31 +25,16 @@ from __future__ import annotations
 import dataclasses
 import functools
 import zlib
-from typing import Dict
+from typing import Dict, Tuple
 
 import numpy as np
 
-
-@dataclasses.dataclass(frozen=True)
-class Workload:
-    """One synthetic trace profile (the generator's six statistical axes)."""
-
-    name: str
-    read_ratio: float          # fraction of requests that are reads [0, 1]
-    iops: float                # mean arrival rate (requests/s)
-    burstiness: float          # >1: bursty MMPP; 1: plain Poisson
-    mean_pages: float          # mean request size (16 KiB pages)
-    n_requests: int = 20000    # trace length (requests)
-    #: Logical address-space footprint (pages).  The paper's read-dominant
-    #: profiles roam a large cold span; write-heavy FTL/GC profiles use a
-    #: small span so sustained writes overwrite hot data, fill the
-    #: over-provisioned capacity, and force garbage collection.
-    span_pages: int = 1 << 22
-
-    @property
-    def read_dominant(self) -> bool:
-        return self.read_ratio >= 0.90
-
+from repro.flashsim.workloads.base import (
+    RequestTrace,
+    TraceSource,
+    Workload,
+    freeze_trace,
+)
 
 #: The six profiles (read ratio / intensity / size / burstiness all vary).
 PROFILES = (
@@ -75,20 +67,6 @@ GC_PROFILES = (
 def make_workloads() -> Dict[str, Workload]:
     """Name -> profile map over the paper's six profiles + GC profiles."""
     return {w.name: w for w in PROFILES + GC_PROFILES}
-
-
-@dataclasses.dataclass
-class RequestTrace:
-    """Flat arrays describing one trace (generated or externally loaded).
-
-    Requests touch ``n_pages`` consecutive logical pages starting at
-    ``start_page``; the simulator stripes logical pages across dies.
-    """
-
-    arrival_us: np.ndarray     # (N,) arrival times (us; need not be sorted)
-    is_read: np.ndarray        # (N,) bool: True = read, False = write
-    n_pages: np.ndarray        # (N,) request length (16 KiB pages)
-    start_page: np.ndarray     # (N,) first logical page number
 
 
 def generate_trace(w: Workload, seed: int = 0) -> RequestTrace:
@@ -141,7 +119,34 @@ def cached_trace(w: Workload, seed: int = 0) -> RequestTrace:
     trace.  The arrays are marked read-only: treat the result as immutable
     (call :func:`generate_trace` for a private copy).
     """
-    t = generate_trace(w, seed=seed)
-    for arr in (t.arrival_us, t.is_read, t.n_pages, t.start_page):
-        arr.setflags(write=False)
-    return t
+    return freeze_trace(generate_trace(w, seed=seed))
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticSource(TraceSource):
+    """A :class:`TraceSource` over one synthetic :class:`Workload` profile.
+
+    With an empty transform chain, ``trace(seed)`` delegates straight to
+    :func:`cached_trace` — byte-identical arrays, same memoization — so
+    wrapping a profile in a source costs nothing and changes nothing.
+    Transforms route through the shared :class:`TraceSource` machinery.
+    """
+
+    workload: Workload
+    transforms: Tuple = ()
+
+    @property
+    def name(self) -> str:
+        return self.workload.name
+
+    def _build(self, seed: int) -> RequestTrace:
+        return cached_trace(self.workload, seed=seed)
+
+    def cache_key(self, seed: int) -> tuple:
+        return ("synthetic", dataclasses.astuple(self.workload),
+                tuple(t.key for t in self.transforms), seed)
+
+    def trace(self, seed: int = 0) -> RequestTrace:
+        if not self.transforms:           # exact legacy path, exact cache
+            return cached_trace(self.workload, seed=seed)
+        return super().trace(seed)

@@ -1,0 +1,138 @@
+"""Regenerate the checked-in trace excerpts under tests/data/.
+
+The MSR-Cambridge traces themselves are not redistributable, so the
+repo checks in two small **MSR-format** excerpts (plus one blkparse-text
+sample) with the statistical shapes of their namesakes — the same
+stand-in policy the synthetic MMPP profiles follow, but exercising the
+*real ingestion path*: FILETIME timestamps, byte offsets/sizes over a
+sparse volume-sized LBA span, gzip framing, and blkparse field layout.
+
+  * ``web_0.csv.gz``   — read-dominant web server class (~90% reads,
+    bursty arrivals, ~96 GiB span with hot regions);
+  * ``src1_1.csv.gz``  — write-dominated source-control class (~25%
+    reads re-walking a ~16 MiB hot set: the GC-churn regime);
+  * ``blk_sample.txt`` — blkparse default text output (Q/C/G events,
+    noise lines, trailing summary) for the blktrace parser.
+
+Deterministic (fixed seeds): re-running this script reproduces the
+checked-in bytes.  Run from the repo root:
+
+    python tests/data/make_trace_excerpts.py
+"""
+
+from __future__ import annotations
+
+import gzip
+import pathlib
+
+import numpy as np
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+#: 2007-03-01-ish in Windows FILETIME (100 ns ticks since 1601) — the
+#: MSR-Cambridge collection era.
+FILETIME_BASE = 128_166_372_000_000_000
+
+SECTOR = 512
+
+
+def mmpp_gaps_us(rng, n, iops, burstiness, run=64):
+    """Bursty inter-arrival gaps (us), mean rate ``iops`` (MMPP-like)."""
+    if burstiness <= 1.0:
+        return rng.exponential(1e6 / iops, n)
+    r_burst = burstiness * iops
+    r_idle = 0.5 * iops / (1.0 - 0.5 / burstiness)
+    idx = np.arange(n) // run
+    burst = rng.random(idx.max() + 1) < 0.5
+    return np.where(burst[idx],
+                    rng.exponential(1e6 / r_burst, n),
+                    rng.exponential(1e6 / r_idle, n))
+
+
+def sizes_bytes(rng, n, mean_kib=12.0):
+    """4 KiB-granular sizes, small-biased geometric, 4-64 KiB."""
+    k = rng.geometric(4.0 / mean_kib, n).clip(1, 16)   # units of 4 KiB
+    return k * 4096
+
+
+def write_msr_csv(path, host, ts_us, is_read, offset, size):
+    rows = []
+    for t, r, o, s in zip(ts_us, is_read, offset, size):
+        ft = FILETIME_BASE + int(round(t * 10.0))      # us -> 100 ns ticks
+        typ = "Read" if r else "Write"
+        resp = 100 + (o % 9000)                        # cosmetic field
+        rows.append(f"{ft},{host},0,{typ},{o},{s},{resp}")
+    data = ("\n".join(rows) + "\n").encode()
+    with gzip.GzipFile(path, "wb", compresslevel=9, mtime=0) as f:
+        f.write(data)
+    print(f"wrote {path} ({len(rows)} rows)")
+
+
+def make_web_0():
+    """Read-dominant, sparse: hot regions scattered across ~96 GiB."""
+    rng = np.random.default_rng(20260801)
+    n = 2600
+    ts = np.cumsum(mmpp_gaps_us(rng, n, iops=11000, burstiness=2.5))
+    is_read = rng.random(n) < 0.90
+    # 24 hot regions of 4 MiB each across a 96 GiB volume + cold tail.
+    region = rng.integers(0, 24, n)
+    region_base = rng.integers(0, 96 * 2**30 // (4096 * 4096), 24) \
+        * (4 * 2**20)
+    off = region_base[region] + rng.integers(0, 4 * 2**20 // 4096, n) * 4096
+    cold = rng.random(n) < 0.15
+    off[cold] = rng.integers(0, 96 * 2**30 // 4096, cold.sum()) * 4096
+    write_msr_csv(HERE / "web_0.csv.gz", "web", ts, is_read, off,
+                  sizes_bytes(rng, n, mean_kib=14.0))
+
+
+def make_src1_1():
+    """Write-dominated, hot: ~16 MiB working set overwritten repeatedly."""
+    rng = np.random.default_rng(19530)
+    n = 2600
+    ts = np.cumsum(mmpp_gaps_us(rng, n, iops=9000, burstiness=2.0))
+    is_read = rng.random(n) < 0.25
+    hot_bytes = 16 * 2**20
+    # Zipf-ish hotness inside the working set: square a uniform so low
+    # offsets are overwritten far more often (GC victims stay skewed).
+    u = rng.random(n) ** 2
+    off = (u * (hot_bytes // 4096 - 16)).astype(np.int64) * 4096
+    write_msr_csv(HERE / "src1_1.csv.gz", "src1", ts, is_read, off,
+                  sizes_bytes(rng, n, mean_kib=10.0))
+
+
+def make_blk_sample():
+    """blkparse default text output: Q events + non-Q noise + summary."""
+    rng = np.random.default_rng(777)
+    n = 420
+    ts = np.cumsum(rng.exponential(1e6 / 8000, n)) / 1e6   # seconds
+    is_read = rng.random(n) < 0.6
+    sector = rng.integers(0, 40 * 2**30 // SECTOR // 8, n) * 8
+    nsect = rng.geometric(0.35, n).clip(1, 64) * 8
+    lines = []
+    for i in range(n):
+        t = ts[i]
+        rwbs = "R" if is_read[i] else "WS"
+        lines.append(
+            f"  8,0   {i % 4}  {i + 1:6d} {t:12.9f} {1000 + i % 7:5d}  Q "
+            f"{rwbs} {sector[i]} + {nsect[i]} [repro-gen]"
+        )
+        if i % 7 == 0:     # completion events the parser must skip
+            lines.append(
+                f"  8,0   {i % 4}  {i + 1:6d} {t + 0.0001:12.9f} "
+                f"{1000 + i % 7:5d}  C {rwbs} {sector[i]} + {nsect[i]} [0]"
+            )
+        if i % 50 == 0:    # plug lines: no '+ nsectors' payload
+            lines.append(
+                f"  8,0   {i % 4}  {i + 1:6d} {t:12.9f} "
+                f"{1000 + i % 7:5d}  P   N [repro-gen]"
+            )
+    lines += ["", "CPU0 (8,0):", " Reads Queued:         252,       1008KiB",
+              " Writes Queued:        168,        672KiB"]
+    (HERE / "blk_sample.txt").write_text("\n".join(lines) + "\n")
+    print(f"wrote {HERE / 'blk_sample.txt'} ({n} Q events)")
+
+
+if __name__ == "__main__":
+    make_web_0()
+    make_src1_1()
+    make_blk_sample()

@@ -162,3 +162,94 @@ def test_corpus_batches_reproducible(batch, seq, index):
     np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
     assert b1["tokens"].shape == (batch, seq)
     assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 128).all()
+
+
+# -- workload-transform properties (ISSUE 4 satellite) ---------------------
+
+
+def _random_trace(seed: int, n: int):
+    from repro.flashsim.workloads import RequestTrace
+
+    rng = np.random.default_rng(seed)
+    # occasionally-unsorted arrivals, multi-page requests, sparse pages
+    arrival = np.cumsum(rng.exponential(50.0, n))
+    if rng.random() < 0.3:
+        arrival = arrival[rng.permutation(n)]
+    return RequestTrace(
+        arrival_us=arrival,
+        is_read=rng.random(n) < rng.uniform(0.1, 0.95),
+        n_pages=rng.geometric(0.5, n).clip(1, 32).astype(np.int64),
+        start_page=(rng.integers(0, 1 << 30, n) * rng.integers(1, 9)),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(2, 300))
+def test_dense_remap_bijection_property(seed, n):
+    """DenseRemap is a bijection touched -> [0, footprint) that preserves
+    request order, sizes, kinds, and intra-request page contiguity for
+    ANY well-formed trace (sparse, strided, unsorted, multi-page)."""
+    from repro.flashsim.workloads import DenseRemap, touched_pages
+
+    t = _random_trace(seed, n)
+    d = DenseRemap().apply(t)
+    before = touched_pages(t)
+    after = touched_pages(d)
+    np.testing.assert_array_equal(after, np.arange(before.size))
+    np.testing.assert_array_equal(d.arrival_us, t.arrival_us)
+    np.testing.assert_array_equal(d.is_read, t.is_read)
+    np.testing.assert_array_equal(d.n_pages, t.n_pages)
+    # order-preserving page bijection: relative order of any two start
+    # pages is unchanged
+    order = np.argsort(t.start_page, kind="stable")
+    assert (np.diff(d.start_page[order]) >= 0).all()
+    # contiguity: request end pages map to start + n - 1
+    np.testing.assert_array_equal(
+        np.searchsorted(before, t.start_page + t.n_pages - 1),
+        d.start_page + d.n_pages - 1,
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(3, 300),
+       st.floats(0.05, 20.0))
+def test_time_rescale_property(seed, n, factor):
+    """TimeRescale preserves request count, read ratio, sizes and pages;
+    the measured IOPS scales by exactly the factor."""
+    from repro.flashsim.workloads import TimeRescale, trace_stats
+
+    t = _random_trace(seed, n)
+    r = TimeRescale(factor=factor).apply(t)
+    assert len(r) == len(t)
+    np.testing.assert_array_equal(r.is_read, t.is_read)
+    np.testing.assert_array_equal(r.n_pages, t.n_pages)
+    np.testing.assert_array_equal(r.start_page, t.start_page)
+    s_t, s_r = trace_stats(t), trace_stats(r)
+    assert s_r.read_ratio == s_t.read_ratio
+    if np.isfinite(s_t.iops):
+        assert s_r.iops == pytest.approx(s_t.iops * factor, rel=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(10, 300),
+       st.floats(0.2, 0.9), st.integers(0, 2**16))
+def test_transform_chain_deterministic_property(seed, n, frac, chain_seed):
+    """A (Subsample -> DenseRemap) chain replays bit-identically under a
+    fixed seed and preserves the sub-trace's request order."""
+    from repro.flashsim.workloads import DenseRemap, Subsample
+
+    t = _random_trace(seed, n)
+    chain = (Subsample(frac), DenseRemap())
+
+    def run():
+        out = t
+        for i, tf in enumerate(chain):
+            out = tf.apply(out, seed=chain_seed + i)
+        return out
+
+    a, b = run(), run()
+    np.testing.assert_array_equal(a.arrival_us, b.arrival_us)
+    np.testing.assert_array_equal(a.start_page, b.start_page)
+    np.testing.assert_array_equal(a.is_read, b.is_read)
+    # subsample kept a subsequence: arrivals are a subset in order
+    assert np.isin(a.arrival_us, t.arrival_us).all()

@@ -1,0 +1,584 @@
+"""Workload-subsystem tests: synthetic bit-parity, schema validation,
+transforms, ingestion, the registry, and generator-shape validation.
+
+The refactor contract (ISSUE 4): moving the synthetic generator into the
+``workloads`` package must be invisible — ``generate_trace`` /
+``cached_trace`` arrays are pinned bit-for-bit against checksums
+recorded from the pre-refactor module (``tests/data/
+golden_workloads.json``), and a pinned ``compare_mechanisms`` cell must
+reproduce its pre-refactor stats exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import hashlib
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.flashsim import (
+    GCConfig,
+    OperatingCondition,
+    SSDConfig,
+    compare_mechanisms,
+    resolve_trace,
+    simulate,
+)
+from repro.flashsim.ftl import build_ftl_schedule
+from repro.flashsim.workloads import (
+    GC_PROFILES,
+    PROFILES,
+    DenseRemap,
+    FileSource,
+    RequestTrace,
+    RWFilter,
+    Subsample,
+    SyntheticSource,
+    TimeRescale,
+    Truncate,
+    Window,
+    cached_trace,
+    generate_trace,
+    get_source,
+    load_blktrace_txt,
+    load_msr_csv,
+    make_workloads,
+    register_source,
+    touched_pages,
+    trace_stats,
+)
+
+DATA = pathlib.Path(__file__).resolve().parent / "data"
+GOLDEN = json.loads((DATA / "golden_workloads.json").read_text())
+AGED = OperatingCondition(365.0, 1000.0)
+
+
+def _trace_sha(t: RequestTrace) -> str:
+    h = hashlib.sha256()
+    for a in (t.arrival_us, t.is_read, t.n_pages, t.start_page):
+        a = np.ascontiguousarray(a)
+        h.update(str(a.dtype).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()[:16]
+
+
+def _valid_trace(n=8, **over):
+    kw = dict(
+        arrival_us=np.linspace(0.0, 700.0, n),
+        is_read=np.arange(n) % 2 == 0,
+        n_pages=np.full(n, 2, np.int64),
+        start_page=np.arange(n, dtype=np.int64) * 10,
+    )
+    kw.update(over)
+    return RequestTrace(**kw)
+
+
+class TestSyntheticBitParity:
+    """Acceptance: the package generator is the pre-refactor generator."""
+
+    @pytest.mark.parametrize("w", PROFILES + GC_PROFILES,
+                             ids=lambda w: w.name)
+    def test_generate_trace_matches_pre_refactor_checksums(self, w):
+        for seed in range(5):
+            got = _trace_sha(generate_trace(w, seed=seed))
+            assert got == GOLDEN["trace_sha"][f"{w.name}:{seed}"], (
+                f"{w.name} seed {seed}: synthetic trace drifted from the "
+                f"pre-refactor module"
+            )
+
+    def test_cached_trace_matches_generate_trace(self):
+        w = make_workloads()["oltp"]
+        assert _trace_sha(cached_trace(w, seed=2)) == \
+            _trace_sha(generate_trace(w, seed=2))
+
+    def test_source_with_no_transforms_is_the_cached_trace(self):
+        w = make_workloads()["websearch"]
+        assert SyntheticSource(w).trace(1) is cached_trace(w, seed=1)
+
+    def test_pinned_compare_mechanisms_cell(self):
+        """The pre-refactor stats of one plain cell, bit-for-bit."""
+        w = dataclasses.replace(make_workloads()["websearch"],
+                                n_requests=400)
+        grid = compare_mechanisms(w, AGED, mechanisms=("baseline", "pr2ar2"),
+                                  seed=3)
+        for mech, want in GOLDEN["compare_plain"].items():
+            got = dataclasses.asdict(grid[mech])
+            assert got == want, f"{mech}: stats drifted from pre-refactor"
+
+    def test_pinned_compare_mechanisms_gc_cell(self):
+        """Same contract through the FTL prepass (WA/GC counters too)."""
+        w = dataclasses.replace(make_workloads()["prn"], n_requests=1200)
+        grid = compare_mechanisms(w, AGED, mechanisms=("baseline", "pr2ar2"),
+                                  seed=1, gc="prepass")
+        for mech, want in GOLDEN["compare_gc_prepass"].items():
+            got = dataclasses.asdict(grid[mech])
+            assert got == want, f"{mech}: GC-cell stats drifted"
+
+
+class TestRequestTraceValidation:
+    def test_valid_trace_passes(self):
+        _valid_trace()
+
+    def test_length_mismatch(self):
+        with pytest.raises(ValueError, match="equal lengths"):
+            _valid_trace(is_read=np.zeros(3, bool))
+
+    def test_negative_arrival(self):
+        arr = np.linspace(0.0, 700.0, 8)
+        arr[3] = -1.0
+        with pytest.raises(ValueError, match="non-negative"):
+            _valid_trace(arrival_us=arr)
+
+    def test_nan_arrival(self):
+        arr = np.linspace(0.0, 700.0, 8)
+        arr[0] = np.nan
+        with pytest.raises(ValueError, match="non-finite"):
+            _valid_trace(arrival_us=arr)
+
+    def test_zero_pages(self):
+        with pytest.raises(ValueError, match="n_pages must be >= 1"):
+            _valid_trace(n_pages=np.zeros(8, np.int64))
+
+    def test_float_pages_rejected(self):
+        with pytest.raises(ValueError, match="integer dtype"):
+            _valid_trace(n_pages=np.full(8, 2.0))
+
+    def test_non_bool_is_read_rejected(self):
+        with pytest.raises(ValueError, match="must be bool"):
+            _valid_trace(is_read=np.ones(8, np.int64))
+
+    def test_non_array_rejected(self):
+        with pytest.raises(ValueError, match="numpy array"):
+            _valid_trace(start_page=[0] * 8)
+
+    def test_empty_rejected(self):
+        with pytest.raises(ValueError, match="at least one"):
+            _valid_trace(
+                arrival_us=np.zeros(0), is_read=np.zeros(0, bool),
+                n_pages=np.zeros(0, np.int64),
+                start_page=np.zeros(0, np.int64),
+            )
+
+
+class TestTransforms:
+    def test_dense_remap_bijection_on_touched_pages(self):
+        """Acceptance: the remap is a bijection touched -> [0, footprint)
+        preserving request order and intra-request page contiguity."""
+        t = cached_trace(make_workloads()["usr"], seed=0)
+        d = DenseRemap().apply(t)
+        before = touched_pages(t)
+        after = touched_pages(d)
+        # bijection onto the dense range
+        np.testing.assert_array_equal(after,
+                                      np.arange(before.size, dtype=np.int64))
+        # order-preserving page map: start pages map through searchsorted
+        np.testing.assert_array_equal(
+            d.start_page, np.searchsorted(before, t.start_page))
+        # request order/sizes/kinds untouched
+        np.testing.assert_array_equal(d.arrival_us, t.arrival_us)
+        np.testing.assert_array_equal(d.is_read, t.is_read)
+        np.testing.assert_array_equal(d.n_pages, t.n_pages)
+        # intra-request contiguity: every request's last page maps to
+        # start + n - 1 (the interval stays an interval)
+        last_before = t.start_page + t.n_pages - 1
+        last_after = np.searchsorted(before, last_before)
+        np.testing.assert_array_equal(last_after,
+                                      d.start_page + d.n_pages - 1)
+
+    def test_dense_remap_idempotent(self):
+        t = cached_trace(make_workloads()["prn"], seed=1)
+        d1 = DenseRemap().apply(t)
+        d2 = DenseRemap().apply(d1)
+        np.testing.assert_array_equal(d1.start_page, d2.start_page)
+
+    def test_time_rescale_preserves_counts_and_read_ratio(self):
+        t = cached_trace(make_workloads()["oltp"], seed=0)
+        for tf in (TimeRescale(factor=2.0), TimeRescale(target_iops=5000.0)):
+            r = tf.apply(t)
+            assert len(r) == len(t)
+            np.testing.assert_array_equal(r.is_read, t.is_read)
+            np.testing.assert_array_equal(r.n_pages, t.n_pages)
+        # factor=2 -> gaps halve -> measured IOPS doubles
+        fast = TimeRescale(factor=2.0).apply(t)
+        assert trace_stats(fast).iops == pytest.approx(
+            2.0 * trace_stats(t).iops, rel=1e-9)
+        # target_iops hits the target exactly (measured over the span)
+        to = TimeRescale(target_iops=5000.0).apply(t)
+        assert trace_stats(to).iops == pytest.approx(5000.0, rel=1e-9)
+
+    def test_time_rescale_knob_validation(self):
+        with pytest.raises(ValueError, match="exactly one"):
+            TimeRescale()
+        with pytest.raises(ValueError, match="exactly one"):
+            TimeRescale(factor=2.0, target_iops=100.0)
+
+    def test_rw_filter(self):
+        t = cached_trace(make_workloads()["prxy"], seed=0)
+        r = RWFilter("read").apply(t)
+        w = RWFilter("write").apply(t)
+        assert r.is_read.all() and not w.is_read.any()
+        assert len(r) + len(w) == len(t)
+
+    def test_window_rebases_time(self):
+        t = _valid_trace()
+        win = Window(start_us=200.0, end_us=600.0).apply(t)
+        assert float(win.arrival_us.min()) == 0.0
+        assert len(win) == int(((t.arrival_us >= 200.0)
+                                & (t.arrival_us < 600.0)).sum())
+
+    def test_truncate(self):
+        t = cached_trace(make_workloads()["graph"], seed=0)
+        assert len(Truncate(100).apply(t)) == 100
+        assert len(Truncate(10 ** 9).apply(t)) == len(t)
+
+    def test_subsample_deterministic_and_order_preserving(self):
+        t = cached_trace(make_workloads()["websearch"], seed=0)
+        a = Subsample(0.5).apply(t, seed=11)
+        b = Subsample(0.5).apply(t, seed=11)
+        c = Subsample(0.5).apply(t, seed=12)
+        np.testing.assert_array_equal(a.arrival_us, b.arrival_us)
+        assert len(a) != len(c) or not np.array_equal(a.arrival_us,
+                                                      c.arrival_us)
+        assert (np.diff(a.arrival_us) >= 0).all()   # order preserved
+        assert 0.4 < len(a) / len(t) < 0.6
+
+    def test_chain_deterministic_under_fixed_seed(self):
+        """Acceptance: transform chains replay identically per seed."""
+        src = get_source("websearch?sample=0.7&limit=3000")
+        t1, t2 = src.trace(5), src.trace(5)
+        assert t1 is t2    # cache hit on identical key
+        fresh = get_source("websearch?sample=0.7&limit=3000").trace(5)
+        np.testing.assert_array_equal(t1.arrival_us, fresh.arrival_us)
+        other = src.trace(6)
+        assert len(other) != len(t1) or not np.array_equal(
+            t1.arrival_us, other.arrival_us)
+
+    def test_empty_selection_raises(self):
+        t = _valid_trace()
+        with pytest.raises(ValueError, match="zero requests"):
+            Window(start_us=10_000.0, end_us=20_000.0).apply(t)
+
+
+class TestIngest:
+    def test_msr_round_trip_stats(self):
+        """Acceptance: parse -> stats lands on the excerpt's generation
+        parameters (web_0: ~11k IOPS, 90% reads; src1_1: ~9k IOPS, 25%
+        reads) within tolerance."""
+        st = trace_stats(load_msr_csv(DATA / "web_0.csv.gz"))
+        assert st.n_requests == 2600
+        assert st.iops == pytest.approx(11000, rel=0.15)
+        assert st.read_ratio == pytest.approx(0.90, abs=0.03)
+        st2 = trace_stats(load_msr_csv(DATA / "src1_1.csv.gz"))
+        assert st2.n_requests == 2600
+        assert st2.iops == pytest.approx(9000, rel=0.15)
+        assert st2.read_ratio == pytest.approx(0.25, abs=0.03)
+        # src1_1 is the hot-span GC excerpt: small footprint, overwrites
+        assert st2.footprint_pages < 1100
+
+    def test_gzip_and_plain_files_parse_identically(self, tmp_path):
+        plain = tmp_path / "web_0.csv"
+        plain.write_bytes(gzip.decompress((DATA / "web_0.csv.gz").read_bytes()))
+        a = load_msr_csv(DATA / "web_0.csv.gz")
+        b = load_msr_csv(plain)
+        np.testing.assert_array_equal(a.arrival_us, b.arrival_us)
+        np.testing.assert_array_equal(a.start_page, b.start_page)
+
+    def test_msr_pages_and_timestamps(self, tmp_path):
+        p = tmp_path / "mini.csv"
+        base = 128_166_372_000_000_000
+        p.write_text(
+            f"{base},h,0,Read,16384,16384,100\n"          # page 1, 1 page
+            f"{base + 10_000},h,0,Write,16000,1000,100\n"  # straddles 0-1
+            f"{base + 20_000},h,0,Read,0,65536,100\n"      # pages 0-3
+        )
+        t = load_msr_csv(p)
+        np.testing.assert_array_equal(t.start_page, [1, 0, 0])
+        np.testing.assert_array_equal(t.n_pages, [1, 2, 4])
+        np.testing.assert_allclose(t.arrival_us, [0.0, 1000.0, 2000.0])
+        np.testing.assert_array_equal(t.is_read, [True, False, True])
+
+    def test_msr_filetime_rebased_in_integer_domain(self, tmp_path):
+        """FILETIME ticks exceed float64's 2^53 exact range (ulp = 1.6us);
+        gaps must come out exact, not quantized to the float grid."""
+        p = tmp_path / "prec.csv"
+        base = 128_166_372_000_000_065
+        p.write_text(
+            f"{base},h,0,Read,0,4096,1\n"
+            f"{base + 77},h,0,Read,4096,4096,1\n"     # 77 ticks = 7.7 us
+            f"{base + 191},h,0,Write,8192,4096,1\n"   # 191 ticks = 19.1 us
+        )
+        t = load_msr_csv(p)
+        np.testing.assert_array_equal(t.arrival_us, [0.0, 7.7, 19.1])
+
+    def test_msr_seconds_timestamps_accepted(self, tmp_path):
+        p = tmp_path / "sec.csv"
+        p.write_text("0.5,h,0,Read,0,4096,1\n1.5,h,0,Write,4096,4096,1\n")
+        t = load_msr_csv(p)
+        np.testing.assert_allclose(t.arrival_us, [0.0, 1e6])
+
+    def test_msr_malformed_rows_raise(self, tmp_path):
+        bad_fields = tmp_path / "bad1.csv"
+        bad_fields.write_text("1,2,3\n")
+        with pytest.raises(ValueError, match="7 CSV fields"):
+            load_msr_csv(bad_fields)
+        bad_type = tmp_path / "bad2.csv"
+        bad_type.write_text(
+            "128166372000000000,h,0,Read,0,4096,1\n"
+            "128166372000010000,h,0,Flush,0,4096,1\n"
+        )
+        with pytest.raises(ValueError, match="unknown Type"):
+            load_msr_csv(bad_type)
+        bad_num = tmp_path / "bad3.csv"
+        bad_num.write_text("128166372000000000,h,0,Read,xyz,4096,1\n")
+        with pytest.raises(ValueError, match="non-numeric"):
+            load_msr_csv(bad_num)
+        empty = tmp_path / "empty.csv"
+        empty.write_text("\n")
+        with pytest.raises(ValueError, match="no parsable"):
+            load_msr_csv(empty)
+
+    def test_msr_header_skipped_but_malformed_first_row_raises(self, tmp_path):
+        """Only a genuinely non-numeric line 1 reads as a header; a
+        malformed first *record* fails like any other row."""
+        hdr = tmp_path / "hdr.csv"
+        hdr.write_text(
+            "Timestamp,Hostname,DiskNumber,Type,Offset,Size,ResponseTime\n"
+            "128166372000000000,h,0,Read,0,4096,1\n"
+        )
+        assert len(load_msr_csv(hdr)) == 1
+        bad = tmp_path / "bad_first.csv"
+        bad.write_text("128166372000000000,h,0,Flush,0,4096,1\n"
+                       "128166372000010000,h,0,Read,0,4096,1\n")
+        with pytest.raises(ValueError, match="unknown Type"):
+            load_msr_csv(bad)
+
+    def test_blktrace_parses_q_events_only(self):
+        t = load_blktrace_txt(DATA / "blk_sample.txt")
+        assert len(t) == 420                    # C/P/summary lines skipped
+        assert 0.5 < float(t.is_read.mean()) < 0.7
+        # sectors were 8-aligned 512B units -> 4 KiB aligned bytes
+        assert int(t.n_pages.min()) >= 1
+
+    def test_file_source_cache_keyed_by_content(self, tmp_path):
+        p = tmp_path / "t.csv"
+        p.write_text("128166372000000000,h,0,Read,0,4096,1\n"
+                     "128166372000010000,h,0,Write,4096,8192,1\n")
+        s = FileSource(path=str(p), fmt="msr")
+        t1 = s.trace(0)
+        assert s.trace(0) is t1                 # memoized
+        # different seeds share the build when no seeded transform exists
+        assert s.trace(3) is t1
+        import os
+        p.write_text("128166372000000000,h,0,Read,0,4096,1\n")
+        os.utime(p, ns=(1, 1))                  # force mtime change
+        t2 = FileSource(path=str(p), fmt="msr").trace(0)
+        assert len(t2) == 1 and len(t1) == 2    # content change re-parses
+
+
+class TestRegistry:
+    def test_synthetic_specs(self):
+        assert get_source("websearch").trace(0) is \
+            cached_trace(make_workloads()["websearch"], seed=0)
+        assert len(get_source("synthetic:oltp?limit=50").trace(0)) == 50
+
+    def test_unknown_names_and_params(self):
+        with pytest.raises(KeyError, match="unknown trace source"):
+            get_source("nope")
+        with pytest.raises(ValueError, match="unknown trace scheme"):
+            get_source("ftp:web_0")
+        with pytest.raises(ValueError, match="unknown param"):
+            get_source("websearch?bogus=1")
+        with pytest.raises(ValueError, match="both rescale= and iops="):
+            get_source("msr:web_0?rescale=0.5&iops=1000")
+        with pytest.raises(ValueError, match="malformed param"):
+            get_source("websearch?limit")
+        with pytest.raises(FileNotFoundError, match="not found"):
+            get_source("msr:no_such_volume")
+        with pytest.raises(ValueError, match="dense= must be"):
+            get_source("msr:web_0?dense=maybe")   # garbage never coerces
+        with pytest.raises(ValueError, match="unknown param"):
+            get_source("msr:web_0?action=Z")      # blktrace-only knob
+        # boolean spellings resolve, not silently enable
+        off = trace_stats(get_source("msr:web_0?dense=False").trace(0))
+        assert off.span_pages > off.footprint_pages   # remap disabled
+
+    def test_trace_cache_is_bounded(self, tmp_path):
+        """The source-trace cache is LRU-bounded like cached_trace's
+        lru_cache(128) — unbounded seeded sweeps cannot grow memory."""
+        from repro.flashsim.workloads import Truncate, clear_trace_cache
+        from repro.flashsim.workloads.base import (_TRACE_CACHE,
+                                                   _TRACE_CACHE_MAX)
+
+        clear_trace_cache()
+        src = SyntheticSource(
+            dataclasses.replace(make_workloads()["oltp"], n_requests=400))
+        for n in range(2, _TRACE_CACHE_MAX + 40):
+            src.with_transforms(Truncate(n)).trace(0)
+        assert len(_TRACE_CACHE) <= _TRACE_CACHE_MAX
+        clear_trace_cache()
+
+    def test_file_spec_dense_by_default(self):
+        dense = get_source("msr:web_0").trace(0)
+        sparse = get_source("msr:web_0?dense=0").trace(0)
+        st_d, st_s = trace_stats(dense), trace_stats(sparse)
+        assert st_d.footprint_pages == st_s.footprint_pages
+        assert st_d.span_pages == st_d.footprint_pages    # dense
+        assert st_s.span_pages > 100 * st_s.footprint_pages  # raw LBAs
+
+    def test_rescale_param(self):
+        base = trace_stats(get_source("msr:web_0").trace(0))
+        half = trace_stats(get_source("msr:web_0?rescale=0.5").trace(0))
+        assert half.iops == pytest.approx(base.iops * 0.5, rel=1e-6)
+
+    def test_registered_source(self):
+        register_source("pinned-oltp",
+                        SyntheticSource(make_workloads()["oltp"]))
+        t = get_source("pinned-oltp?limit=20").trace(0)
+        assert len(t) == 20
+
+    def test_file_parsed_once_across_seeds(self, monkeypatch):
+        """The raw file build is seed-independent: deterministic chains
+        serve every seed from one trace object, and seeded chains
+        re-run only the transforms — the CSV parse happens once."""
+        import repro.flashsim.workloads.ingest as ing
+        from repro.flashsim.workloads import clear_trace_cache
+
+        clear_trace_cache()
+        calls = []
+        orig = ing.load_msr_csv
+        monkeypatch.setattr(ing, "load_msr_csv",
+                            lambda *a, **k: calls.append(1) or orig(*a, **k))
+        det = get_source("msr:web_0")              # DenseRemap only
+        assert all(det.trace(s) is det.trace(0) for s in range(4))
+        sub = get_source("msr:web_0?sample=0.9")   # seeded chain
+        a, b = sub.trace(0), sub.trace(1)
+        assert len(a) != len(b) or not np.array_equal(a.arrival_us,
+                                                      b.arrival_us)
+        assert len(calls) == 1, f"{len(calls)} parses for one file"
+
+
+class TestGeneratorShapeValidation:
+    """Acceptance: trace_stats recovers each profile's Workload spec.
+
+    Documented tolerances (20k-request traces, fixed seed 0): IOPS within
+    10%, read ratio within 0.02 absolute, mean request size within 5%,
+    MMPP burstiness within max(0.25, 15% of spec) — the SCV inversion is
+    a moment estimator, looser than the direct rate/ratio measurements.
+    """
+
+    @pytest.mark.parametrize("w", PROFILES + GC_PROFILES,
+                             ids=lambda w: w.name)
+    def test_profile_stats_match_spec(self, w):
+        st = trace_stats(cached_trace(w, seed=0))
+        assert st.iops == pytest.approx(w.iops, rel=0.10)
+        assert st.read_ratio == pytest.approx(w.read_ratio, abs=0.02)
+        assert st.mean_pages == pytest.approx(w.mean_pages, rel=0.05)
+        tol = max(0.25, 0.15 * w.burstiness)
+        assert abs(st.mmpp_burstiness - w.burstiness) <= tol, (
+            f"{w.name}: measured burstiness {st.mmpp_burstiness:.2f} "
+            f"outside {w.burstiness} +- {tol:.2f}"
+        )
+        assert st.footprint_pages <= w.span_pages
+
+
+class TestRunAPIIntegration:
+    def test_spec_string_equals_workload_object(self):
+        """The two spellings of a synthetic profile never diverge: a bare
+        spec string with n_requests takes the same regenerate path as the
+        Workload-object call — bit-identical SimStats."""
+        w = make_workloads()["websearch"]
+        a = simulate(w, AGED, "pr2ar2", seed=2, n_requests=300)
+        b = simulate("websearch", AGED, "pr2ar2", seed=2, n_requests=300)
+        assert dataclasses.asdict(a) == dataclasses.asdict(b)
+        # a registered source of the pre-shortened profile agrees too
+        w300 = dataclasses.replace(w, n_requests=300)
+        register_source("websearch-300", SyntheticSource(w300))
+        c = simulate("websearch-300", AGED, "pr2ar2", seed=2)
+        assert dataclasses.asdict(a) == dataclasses.asdict(c)
+
+    def test_resolve_trace_forms(self):
+        w = make_workloads()["oltp"]
+        assert resolve_trace(w, seed=1) is cached_trace(w, seed=1)
+        # bare profile string + n_requests == the regenerate path
+        w64 = dataclasses.replace(w, n_requests=64)
+        assert resolve_trace("oltp", seed=1, n_requests=64) is \
+            cached_trace(w64, seed=1)
+        src = SyntheticSource(w)
+        assert resolve_trace(src, seed=1) is cached_trace(w, seed=1)
+        # a transformed synthetic source truncates instead (chain applies)
+        t = resolve_trace("oltp?rw=read", seed=1, n_requests=64)
+        assert len(t) == 64 and t.is_read.all()
+        with pytest.raises(TypeError, match="trace spec"):
+            resolve_trace(123)
+
+    def test_real_trace_replay_end_to_end(self):
+        """Acceptance: compare_mechanisms over both checked-in MSR
+        excerpts (dense remap + FTL auto-sizing) yields finite stats for
+        baseline / PR2 / AR2."""
+        for spec in ("msr:web_0", "msr:src1_1"):
+            grid = compare_mechanisms(
+                spec, AGED, mechanisms=("baseline", "pr2", "ar2", "pr2ar2"),
+                seed=0, gc="prepass",
+            )
+            for mech, st in grid.items():
+                for f in ("mean_us", "p99_us", "read_p99_us", "wa"):
+                    v = float(getattr(st, f))
+                    assert np.isfinite(v) and v >= 0, (spec, mech, f, v)
+            assert grid["baseline"].wa > 1.0          # the FTL engaged
+            assert grid["pr2ar2"].mean_us < grid["baseline"].mean_us
+
+    def test_ftl_auto_sizes_from_dense_footprint_not_span(self):
+        """Acceptance: auto-OP sizing tracks the remapped dense footprint.
+        web_0's raw span is ~1900x its footprint; sizing must stay
+        footprint-proportional for both the raw and the remapped trace —
+        never span-proportional."""
+        cfg = SSDConfig(gc=GCConfig(enabled=True))
+        sparse = get_source("msr:web_0?dense=0").trace(0)
+        dense = get_source("msr:web_0").trace(0)
+        st_sp = build_ftl_schedule(sparse, cfg).stats
+        st_dn = build_ftl_schedule(dense, cfg).stats
+        assert st_sp.footprint_pages == st_dn.footprint_pages
+        span = trace_stats(sparse).span_pages
+        span_blocks_per_die = span / (cfg.n_dies * st_dn.pages_per_block)
+        for st in (st_sp, st_dn):
+            # footprint-proportional (small constant over the per-die
+            # demand + OP + frontier floor), orders below span scale
+            assert st.blocks_per_die < 0.01 * span_blocks_per_die
+        # once remapped, striping is balanced: capacity within a small
+        # factor of the ideal footprint/(1-OP) packing
+        ideal = st_dn.footprint_pages / (1 - cfg.gc.op_ratio)
+        physical = cfg.n_dies * st_dn.blocks_per_die * st_dn.pages_per_block
+        assert physical < 2.0 * ideal
+
+    def test_simulate_accepts_file_source_with_overrides(self):
+        """n_requests slots into the canonical chain position (before
+        dense/sample), so it behaves exactly like ?limit=N."""
+        st = simulate("msr:src1_1?sample=0.8", AGED, "baseline", seed=1,
+                      n_requests=1000)
+        ref = simulate("msr:src1_1?limit=1000&sample=0.8", AGED, "baseline",
+                       seed=1)
+        assert st.n_requests == ref.n_requests
+        assert 700 <= st.n_requests <= 900     # ~0.8 * 1000 kept
+        assert np.isfinite(st.mean_us)
+        # the ?limit=N equivalence holds for every transform mix
+        for spec in ("websearch?sample=0.5", "msr:web_0?dense=0&iops=5000",
+                     "msr:web_0?rw=read"):
+            kw = resolve_trace(spec, seed=0, n_requests=500)
+            lim = get_source(f"{spec}&limit=500").trace(0)
+            np.testing.assert_array_equal(kw.arrival_us, lim.arrival_us)
+            np.testing.assert_array_equal(kw.start_page, lim.start_page)
+
+    def test_n_requests_truncates_before_dense_remap(self):
+        """The run-API n_requests knob slots its Truncate before the
+        file-scheme's default DenseRemap, so it matches ?limit=N and the
+        dense [0, footprint) guarantee survives truncation."""
+        via_kw = resolve_trace("msr:web_0", seed=0, n_requests=1500)
+        via_limit = get_source("msr:web_0?limit=1500").trace(0)
+        np.testing.assert_array_equal(via_kw.start_page,
+                                      via_limit.start_page)
+        st = trace_stats(via_kw)
+        assert st.span_pages == st.footprint_pages   # still dense
