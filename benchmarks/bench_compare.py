@@ -1,0 +1,122 @@
+"""Compare the deterministic payload of two BENCH_sim.json files.
+
+The sweep runtime's contract is that worker count changes *when* cells
+run, never *what* they compute: a ``microbench_sim --workers 2`` run
+must produce exactly the per-cell numbers of a ``--workers 1`` run.
+This tool strips the timing-derived fields (wall clocks, events/sec,
+speedups, host fingerprint) from both files and diffs the rest — the CI
+bench-smoke lane runs it to block any divergence.
+
+Usage: python -m benchmarks.bench_compare A.json B.json
+
+Exit status 0 when the deterministic payloads are byte-identical after
+canonicalization; 1 with a diff summary otherwise.  If either file's
+``summary.parallel`` block is present, its ``cells_equal`` flag (the
+in-run workers=1 vs workers=N equality check) must be true as well.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+#: Keys whose values are timing-derived (machine/run-dependent) and
+#: therefore excluded from the determinism contract.  Everything else —
+#: cell statistics, event counts, CIs, acceptance flags — must match.
+#: Anchored prefixes, NOT substrings: deterministic payloads like
+#: ``sched_cells[*].host_prio`` and ``inflation_cut_host_prio`` must
+#: stay inside the comparison.
+_TIMING_KEY = re.compile(
+    r"^(wall|speedup|events_per_sec|rel_throughput|host_factor"
+    r"|characterization_warm|parallel$)"
+)
+
+#: Top-level sections that are wholly machine-dependent.
+_TIMING_SECTIONS = ("host",)
+
+
+def strip_timing(node):
+    """Recursively drop timing-derived dict keys (see _TIMING_KEY)."""
+    if isinstance(node, dict):
+        return {
+            k: strip_timing(v)
+            for k, v in node.items()
+            if not _TIMING_KEY.search(k)
+        }
+    if isinstance(node, list):
+        return [strip_timing(v) for v in node]
+    return node
+
+
+def deterministic_payload(doc: dict) -> dict:
+    out = {k: v for k, v in doc.items() if k not in _TIMING_SECTIONS}
+    return strip_timing(out)
+
+
+def _diff_paths(a, b, path="$", out=None, limit=20):
+    """Collect up to ``limit`` paths where two payloads differ."""
+    if out is None:
+        out = []
+    if len(out) >= limit:
+        return out
+    if type(a) is not type(b):
+        out.append(f"{path}: type {type(a).__name__} != {type(b).__name__}")
+    elif isinstance(a, dict):
+        for k in sorted(set(a) | set(b)):
+            if k not in a:
+                out.append(f"{path}.{k}: only in B")
+            elif k not in b:
+                out.append(f"{path}.{k}: only in A")
+            else:
+                _diff_paths(a[k], b[k], f"{path}.{k}", out, limit)
+    elif isinstance(a, list):
+        if len(a) != len(b):
+            out.append(f"{path}: length {len(a)} != {len(b)}")
+        for i, (x, y) in enumerate(zip(a, b)):
+            _diff_paths(x, y, f"{path}[{i}]", out, limit)
+    elif a != b:
+        out.append(f"{path}: {a!r} != {b!r}")
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="assert two BENCH_sim.json runs agree on every "
+                    "deterministic (non-timing) field"
+    )
+    ap.add_argument("file_a")
+    ap.add_argument("file_b")
+    args = ap.parse_args(argv)
+
+    with open(args.file_a) as f:
+        doc_a = json.load(f)
+    with open(args.file_b) as f:
+        doc_b = json.load(f)
+
+    ok = True
+    for name, doc in ((args.file_a, doc_a), (args.file_b, doc_b)):
+        par = doc.get("summary", {}).get("parallel")
+        if par is not None and not par.get("cells_equal", False):
+            print(f"FAIL: {name} summary.parallel.cells_equal is false "
+                  f"(in-run workers=1 vs workers=N results diverged)")
+            ok = False
+
+    pa = deterministic_payload(doc_a)
+    pb = deterministic_payload(doc_b)
+    if pa != pb:
+        print(f"FAIL: deterministic payloads differ between "
+              f"{args.file_a} and {args.file_b}:")
+        for line in _diff_paths(pa, pb):
+            print(f"  {line}")
+        ok = False
+
+    if ok:
+        print(f"OK: deterministic payloads identical "
+              f"({args.file_a} vs {args.file_b})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

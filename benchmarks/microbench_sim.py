@@ -16,7 +16,20 @@ batched pass.
 
 ``BENCH_sim.json`` records per-cell wall times, event counts, events/sec,
 and the aggregate speedup — the perf trajectory of the simulator is
-tracked through this file from PR 1 onward.
+tracked through this file from PR 1 onward.  Because those absolute
+numbers are machine-dependent, every file also records (PR 5):
+
+  * a **host fingerprint** (CPU model, core count, python/numpy
+    versions) — a BENCH_sim.json measured on a different machine class
+    is visibly a different machine, not a regression;
+  * a **pinned reference cell** re-measured in the same run: the first
+    e2e cell's events/sec divided into every other cell
+    (``rel_throughput``) cancels the machine entirely, and
+    ``host_factor`` (measured / pinned reference throughput at the
+    acceptance size) quantifies how the current host compares to the
+    machine class that set the in-repo pin.  Cross-machine comparisons
+    should use ``rel_throughput`` and ``host_factor``-normalized
+    numbers, never raw wall times.
 
 Four sweeps ride along:
 
@@ -39,13 +52,25 @@ Four sweeps ride along:
     their own), reported as mean ± 95% CI; the acceptance is that every
     mechanism produces finite stats and the FTL engages (WA > 1).
 
+The claim/GC/scheduler/trace sweeps all execute through the parallel
+sweep runtime (:mod:`repro.flashsim.runtime`); ``--workers N`` fans
+their cells across a process pool.  With ``N > 1`` the paper-claim grid
+is additionally re-run at ``workers=1`` and the file records the
+measured ``speedup`` plus a ``cells_equal`` flag (per-cell results must
+be identical for every worker count — the CI bench-smoke lane asserts
+byte-equality of the deterministic payload between a workers=1 and a
+workers=2 run via ``benchmarks/bench_compare.py``).
+
 Usage: PYTHONPATH=src python -m benchmarks.microbench_sim [--n 8000]
-           [--seeds 5] [--quick] [--skip-reference] [--skip-gc]
-           [--skip-traces] [--out BENCH_sim.json]
+           [--seeds 5] [--quick] [--workers 4] [--skip-reference]
+           [--skip-gc] [--skip-traces] [--out BENCH_sim.json]
 
   --n N             requests per cell (default 8000, the acceptance size)
   --seeds K         seeds per claim/GC/scheduler/workload cell (default 5)
   --quick           tiny grid (CI smoke; n defaults to 1200, 2 seeds)
+  --workers N       process-pool workers for the sweep cells (default 4;
+                    1 in --quick); N > 1 also records the parallel-sweep
+                    speedup block
   --skip-reference  only measure the array engine (no speedup column)
   --skip-gc         skip the FTL/GC + scheduler sweep cells
   --skip-traces     skip the real-trace replay cells
@@ -63,13 +88,12 @@ import time
 import numpy as np
 
 from repro.core.retry import RetryPolicy
-from repro.flashsim.config import GCConfig, SSDConfig
+from repro.flashsim.config import DEFAULT_SSD, GCConfig, SSDConfig
 from repro.flashsim.engine_ref import SSDSimRef
+from repro.flashsim.runtime import Cell, host_fingerprint, run_cells
 from repro.flashsim.ssd import (
     SSDSim,
-    compare_mechanisms,
     expand_trace,
-    simulate,
     simulate_batch,
 )
 from repro.flashsim.workloads import (
@@ -94,6 +118,16 @@ from benchmarks.e2e_response_time import (
 
 ALL_MECHS = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
 SCHED_POLICIES = ("fcfs", "host_prio", "preempt")
+
+#: The pinned reference cell: the FIRST e2e cell (websearch @ aged x all
+#: six mechanisms) at the acceptance size REFERENCE_N, re-measured in
+#: every run.  REFERENCE_EVENTS_PER_SEC is its array-engine throughput
+#: on the machine class that set the pin (PR 5); host_factor =
+#: measured / pinned tells every later reader how fast the current host
+#: is relative to that class, and per-cell ``rel_throughput`` (cell
+#: ev/s / reference-cell ev/s, same run) is machine-independent.
+REFERENCE_N = 8000
+REFERENCE_EVENTS_PER_SEC = 395_000
 
 #: Requests per GC cell in --quick mode.  GC intensity is non-monotonic
 #: in trace length (capacity auto-sizes with the footprint, which grows
@@ -209,7 +243,7 @@ def bench_cell(w, cond, mechs, n_requests, seed, skip_reference):
 # -- paper-claim cells: mean ± 95% CI over seeds --------------------------
 
 
-def bench_claim_cells(n_requests, seeds, quick=False):
+def bench_claim_cells(n_requests, seeds, quick=False, workers=1):
     """Re-measure the paper's headline reductions across >= 2 seeds.
 
     Per seed: the PR²+AR²-vs-baseline reduction averaged over the six
@@ -226,7 +260,7 @@ def bench_claim_cells(n_requests, seeds, quick=False):
     for w in profiles:
         grid = simulate_batch(
             w, (AGED,), mechanisms=("baseline", "pr2ar2"),
-            seeds=seeds, n_requests=n_requests,
+            seeds=seeds, n_requests=n_requests, workers=workers,
         )
         rs = [
             1.0 - grid[("pr2ar2", AGED, s)].mean_us
@@ -245,7 +279,7 @@ def bench_claim_cells(n_requests, seeds, quick=False):
     for w in (w for w in profiles if w.read_dominant):
         grid = simulate_batch(
             w, modest, mechanisms=("sota", "sota+pr2ar2"),
-            seeds=seeds, n_requests=n_requests,
+            seeds=seeds, n_requests=n_requests, workers=workers,
         )
         for cond in modest:
             rs = [
@@ -295,13 +329,14 @@ def bench_claim_cells(n_requests, seeds, quick=False):
 # -- GC cells: FTL off/on, mean ± CI over seeds ---------------------------
 
 
-def bench_gc_cell(w, cond, n_requests, seeds):
+def bench_gc_cell(w, cond, n_requests, seeds, workers=1):
     """FTL off vs on for one write-heavy profile: WA + read-tail impact,
     mean ± 95% CI over seeds.
 
     Runs baseline and pr2ar2 under both configurations so the row also
     records how much of the GC-induced read tail the paper's combined
-    mechanism claws back.
+    mechanism claws back.  The (mechanism x seed x FTL-on/off) runs are
+    independent cells scheduled through the sweep runtime (``workers``).
     """
     w = dataclasses.replace(w, n_requests=n_requests)
     cfg_gc = SSDConfig(gc=GCConfig(enabled=True))
@@ -312,14 +347,22 @@ def bench_gc_cell(w, cond, n_requests, seeds):
         "span_pages": w.span_pages,
         "n_seeds": len(seeds),
     }
+    mechs = ("baseline", "pr2ar2")
+    cells = [
+        Cell("simulate", w, (cond,), (mech,), s, cfg)
+        for mech in mechs
+        for s in seeds
+        for cfg in (DEFAULT_SSD, cfg_gc)
+    ]
+    t0 = time.perf_counter()
+    results = iter(run_cells(cells, workers=workers))
+    row["wall_s"] = None    # filled after the drain below
     wa_list, gc_inv = [], []
-    for mech in ("baseline", "pr2ar2"):
-        p99_off, p99_on, infl, mean_on, wall = [], [], [], [], 0.0
+    for mech in mechs:
+        p99_off, p99_on, infl, mean_on = [], [], [], []
         for s in seeds:
-            t0 = time.perf_counter()
-            off = simulate(w, cond, mech, seed=s)
-            on = simulate(w, cond, mech, seed=s, cfg=cfg_gc)
-            wall += time.perf_counter() - t0
+            off = next(results)
+            on = next(results)
             p99_off.append(off.read_p99_us)
             p99_on.append(on.read_p99_us)
             infl.append(on.read_p99_us / off.read_p99_us)
@@ -329,13 +372,13 @@ def bench_gc_cell(w, cond, n_requests, seeds):
                 gc_inv.append(on.gc_invocations)
         mi, hi_ = mean_ci95(infl)
         row[mech] = {
-            "wall_s": round(wall, 3),
             "read_p99_off_us": round(float(np.mean(p99_off)), 1),
             "read_p99_on_us": round(float(np.mean(p99_on)), 1),
             "read_p99_inflation_mean": round(mi, 2),
             "read_p99_inflation_ci95": round(hi_, 2),
             "mean_on_us": round(float(np.mean(mean_on)), 1),
         }
+    row["wall_s"] = round(time.perf_counter() - t0, 3)
     wm, wh = mean_ci95(wa_list)
     row.update(
         wa_mean=round(wm, 3), wa_ci95=round(wh, 3),
@@ -353,12 +396,15 @@ def bench_gc_cell(w, cond, n_requests, seeds):
 # -- scheduler cells: online GC x die-queue policy ------------------------
 
 
-def bench_sched_cell(w, cond, n_requests, seeds, mech="baseline"):
+def bench_sched_cell(w, cond, n_requests, seeds, mech="baseline",
+                     workers=1):
     """Online GC under fcfs / host_prio / preempt for one GC profile.
 
     Inflation is host-read p99 with GC on over GC off (same seed, same
     scheduler-independent off-run).  The acceptance: host_prio and
-    preempt cut fcfs inflation >= 2x at equal (±10%) WA.
+    preempt cut fcfs inflation >= 2x at equal (±10%) WA.  The off-runs
+    and every (policy x seed) on-run are independent cells scheduled
+    through the sweep runtime (``workers``).
     """
     w = dataclasses.replace(w, n_requests=n_requests)
     row = {
@@ -369,15 +415,24 @@ def bench_sched_cell(w, cond, n_requests, seeds, mech="baseline"):
         "n_seeds": len(seeds),
         "gc_mode": "online",
     }
-    off_p99 = {s: simulate(w, cond, mech, seed=s).read_p99_us for s in seeds}
+    cells = [Cell("simulate", w, (cond,), (mech,), s) for s in seeds]
+    cells += [
+        Cell("simulate", w, (cond,), (mech,), s, scheduler=sched,
+             gc="online")
+        for sched in SCHED_POLICIES
+        for s in seeds
+    ]
+    t0 = time.perf_counter()
+    results = run_cells(cells, workers=workers)
+    wall = time.perf_counter() - t0
+    off_p99 = {s: st.read_p99_us for s, st in zip(seeds, results)}
+    on_runs = iter(results[len(seeds):])
+    row["wall_s"] = round(wall, 3)
     wa_by_policy = {}
     for sched in SCHED_POLICIES:
-        infl, wa, stalls, susp, wall = [], [], [], [], 0.0
+        infl, wa, stalls, susp = [], [], [], []
         for s in seeds:
-            t0 = time.perf_counter()
-            on = simulate(w, cond, mech, seed=s, scheduler=sched,
-                          gc="online")
-            wall += time.perf_counter() - t0
+            on = next(on_runs)
             infl.append(on.read_p99_us / off_p99[s])
             wa.append(on.wa)
             stalls.append(on.write_stalls)
@@ -386,7 +441,6 @@ def bench_sched_cell(w, cond, n_requests, seeds, mech="baseline"):
         wam, wah = mean_ci95(wa)
         wa_by_policy[sched] = wam
         row[sched] = {
-            "wall_s": round(wall, 3),
             "read_p99_inflation_mean": round(mi, 2),
             "read_p99_inflation_ci95": round(hi_, 2),
             "wa_mean": round(wam, 3),
@@ -423,10 +477,11 @@ TRACE_MECHS = ("baseline", "pr2", "ar2", "pr2ar2")
 TRACE_SAMPLE = 0.85
 
 
-def bench_trace_cell(spec, cond, seeds):
+def bench_trace_cell(spec, cond, seeds, workers=1):
     """Replay one checked-in excerpt end-to-end: compare_mechanisms with
     prepass GC (FTL auto-sized from the remapped dense footprint),
-    baseline vs PR²/AR², mean ± 95% CI over subsample seeds."""
+    baseline vs PR²/AR², mean ± 95% CI over subsample seeds.  One
+    compare cell per seed, scheduled through the sweep runtime."""
     src = get_source(spec)
     src_stats = trace_stats(src.trace(0))
     # Composable form (not string concatenation) so parameterized specs
@@ -452,12 +507,14 @@ def bench_trace_cell(spec, cond, seeds):
     }
     per_mech = {m: {"mean_us": [], "read_p99_us": []} for m in TRACE_MECHS}
     wa_list, finite = [], True
-    wall = 0.0
-    for s in seeds:
-        t0 = time.perf_counter()
-        grid = compare_mechanisms(sub, cond, mechanisms=TRACE_MECHS,
-                                  seed=s, gc="prepass")
-        wall += time.perf_counter() - t0
+    cells = [
+        Cell("compare", sub, (cond,), TRACE_MECHS, s, gc="prepass")
+        for s in seeds
+    ]
+    t0 = time.perf_counter()
+    grids = run_cells(cells, workers=workers)
+    wall = time.perf_counter() - t0
+    for grid in grids:
         for m, st in grid.items():
             for f in ("mean_us", "p50_us", "p99_us", "read_p99_us", "wa"):
                 if not np.isfinite(float(getattr(st, f))):
@@ -490,6 +547,43 @@ def bench_trace_cell(spec, cond, seeds):
     return row
 
 
+# -- parallel-sweep cells: the runtime's workers speedup ------------------
+
+
+def bench_parallel_sweep(n_requests, seeds, quick, workers):
+    """Measure the sweep executor: the paper-claim grid at workers=1 vs
+    workers=N on the same host, same run.
+
+    The acceptance contract has two halves: per-cell results must be
+    *identical* (``cells_equal`` — SimStats dataclass equality over the
+    whole grid), and the wall-clock ``speedup`` is recorded alongside
+    the host fingerprint (a 2-core/CPU-quota'd host cannot show the
+    >= 2x a 4-core host does; the fingerprint makes that legible).
+    """
+    profiles = PROFILES[:2] if quick else PROFILES
+    mechs = ("baseline", "pr2ar2")
+    grids, walls = {}, {}
+    for wk in (1, workers):
+        t0 = time.perf_counter()
+        grids[wk] = {
+            w.name: simulate_batch(
+                w, (AGED,), mechanisms=mechs, seeds=seeds,
+                n_requests=n_requests, workers=wk,
+            )
+            for w in profiles
+        }
+        walls[wk] = time.perf_counter() - t0
+    return {
+        "workers": workers,
+        "sweep_cells": len(profiles) * len(mechs) * len(seeds),
+        "n_requests": n_requests,
+        "wall_workers1_s": round(walls[1], 3),
+        "wall_workersN_s": round(walls[workers], 3),
+        "speedup": round(walls[1] / walls[workers], 2),
+        "cells_equal": bool(grids[1] == grids[workers]),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=None,
@@ -499,6 +593,9 @@ def main():
                     help="seeds per claim/GC/scheduler cell "
                          "(default 5; 2 in --quick)")
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool workers for the sweep cells "
+                         "(default 4; 1 in --quick)")
     ap.add_argument("--skip-reference", action="store_true")
     ap.add_argument("--skip-gc", action="store_true")
     ap.add_argument("--skip-traces", action="store_true")
@@ -508,6 +605,10 @@ def main():
     n_seeds = args.seeds if args.seeds is not None else (2 if args.quick else 5)
     if n_seeds < 1:
         ap.error("--seeds must be >= 1")
+    workers = args.workers if args.workers is not None else \
+        (1 if args.quick else 4)
+    if workers < 1:
+        ap.error("--workers must be >= 1")
     seeds = tuple(range(args.seed, args.seed + n_seeds))
 
     cells = e2e_cells(args.quick)
@@ -526,7 +627,8 @@ def main():
         )
 
     t0 = time.perf_counter()
-    claim_rows, claim_summary = bench_claim_cells(n, seeds, args.quick)
+    claim_rows, claim_summary = bench_claim_cells(n, seeds, args.quick,
+                                                  workers=workers)
     print(
         f"# claim CI ({len(seeds)} seeds, {time.perf_counter() - t0:.1f}s): "
         f"vs baseline -{100 * claim_summary['avg_vs_baseline']['mean']:.1f}%"
@@ -554,7 +656,7 @@ def main():
         n_gc = GC_QUICK_N if args.quick else n
         gc_profiles = GC_PROFILES[:1] if args.quick else GC_PROFILES
         for w in gc_profiles:
-            row = bench_gc_cell(w, AGED, n_gc, seeds)
+            row = bench_gc_cell(w, AGED, n_gc, seeds, workers=workers)
             gc_rows.append(row)
             print(
                 f"GC {w.name:8s} @ {row['condition']:>10s}: "
@@ -565,7 +667,7 @@ def main():
                 f"ok={row['ok_wa_gt_1'] and row['ok_read_p99_higher']}"
             )
         for w in gc_profiles:
-            row = bench_sched_cell(w, AGED, n_gc, seeds)
+            row = bench_sched_cell(w, AGED, n_gc, seeds, workers=workers)
             sched_rows.append(row)
             print(
                 f"SCHED {w.name:8s} online-GC inflation: "
@@ -590,7 +692,7 @@ def main():
     else:
         specs = TRACE_SPECS[:1] if args.quick else TRACE_SPECS
         for spec in specs:
-            row = bench_trace_cell(spec, AGED, seeds)
+            row = bench_trace_cell(spec, AGED, seeds, workers=workers)
             trace_rows.append(row)
             print(
                 f"TRACE {spec:12s} ({row['source']['n_requests']} reqs, "
@@ -602,7 +704,41 @@ def main():
                 f"WA={row['wa_mean']:.2f} ok={row['ok_finite']}"
             )
 
+    parallel_row = None
+    if workers > 1:
+        t0 = time.perf_counter()
+        parallel_row = bench_parallel_sweep(n, seeds, args.quick, workers)
+        print(
+            f"# parallel sweep ({parallel_row['sweep_cells']} cells, "
+            f"{time.perf_counter() - t0:.1f}s): workers=1 "
+            f"{parallel_row['wall_workers1_s']:.2f}s -> workers={workers} "
+            f"{parallel_row['wall_workersN_s']:.2f}s "
+            f"(speedup {parallel_row['speedup']:.2f}x, "
+            f"equal={parallel_row['cells_equal']})"
+        )
+
     total_array = sum(r["wall_array_s"] for r in rows)
+    # Reference-cell normalization: cells_detail[0] is the pinned cell
+    # (first e2e cell, websearch @ aged x all mechanisms); dividing each
+    # cell's throughput by it cancels the machine.
+    ref_eps = rows[0]["events_per_sec_array"]
+    for r in rows:
+        r["rel_throughput"] = round(r["events_per_sec_array"] / ref_eps, 3)
+    reference_cell = {
+        "workload": rows[0]["workload"],
+        "condition": rows[0]["condition"],
+        "n_requests": n,
+        "events_per_sec_array": ref_eps,
+        "pinned_events_per_sec": (
+            REFERENCE_EVENTS_PER_SEC if n == REFERENCE_N else None
+        ),
+        # host_factor > 1: this host is faster than the machine class
+        # that set the pin; None off the acceptance size (not comparable).
+        "host_factor": (
+            round(ref_eps / REFERENCE_EVENTS_PER_SEC, 3)
+            if n == REFERENCE_N else None
+        ),
+    }
     summary = {
         "n_requests": n,
         "cells": len(rows),
@@ -611,8 +747,11 @@ def main():
             sum(r["events_array"] for r in rows) / total_array
         ),
         "characterization_warm_s": round(warm_s, 2),
+        "reference_cell": reference_cell,
         "claim": claim_summary,
     }
+    if parallel_row is not None:
+        summary["parallel"] = parallel_row
     if not args.skip_reference:
         total_ref = sum(r["wall_seed_s"] for r in rows)
         summary["wall_seed_total_s"] = round(total_ref, 3)
@@ -645,7 +784,9 @@ def main():
         if trace_carried:
             summary["trace_cells_carried"] = True  # from a previous run
 
-    out = {"benchmark": "flashsim-des-engine", "summary": summary,
+    out = {"benchmark": "flashsim-des-engine",
+           "host": host_fingerprint(),
+           "summary": summary,
            "cells_detail": rows, "claim_cells": claim_rows,
            "gc_cells": gc_rows, "sched_cells": sched_rows,
            "trace_cells": trace_rows}

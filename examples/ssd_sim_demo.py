@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 
 from repro.flashsim.config import GCConfig, OperatingCondition, SSDConfig
+from repro.flashsim.runtime import sweep_to_json
 from repro.flashsim.ssd import compare_mechanisms, simulate, simulate_batch
 from repro.flashsim.workloads import get_source, make_workloads, trace_stats
 
@@ -137,6 +138,23 @@ def main():
         for mech, s in grid.items():
             delta = f"{100 * (1 - s.mean_us / base.mean_us):+5.1f}%"
             print(f"    {mech:9s} {s.as_row()}  vs_base={delta}")
+
+    # Sharded runtime: per-channel shard loops are bit-identical to the
+    # monolithic engine (shard=True), and the parallel sweep executor
+    # returns byte-identical grids for any worker count (workers=N).
+    print("== sharded runtime: shard equivalence + parallel sweep ==")
+    mono = simulate(w, aged, "pr2ar2", n_requests=n_gc, gc="online")
+    shrd = simulate(w, aged, "pr2ar2", n_requests=n_gc, gc="online",
+                    shard=True)
+    print(f"  shard=True bit-identical: {mono == shrd}")
+    blobs = {
+        wk: sweep_to_json(simulate_batch(
+            w, (aged,), mechanisms=("baseline", "pr2ar2"), seeds=(0, 1),
+            n_requests=1000, workers=wk,
+        ))
+        for wk in (1, 2)
+    }
+    print(f"  workers 1 vs 2 byte-identical: {blobs[1] == blobs[2]}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,333 @@
+#!/usr/bin/env python
+"""Fetch the SNIA MSR-Cambridge block-I/O traces into a trace directory.
+
+The paper's evaluation replays the MSR-Cambridge production volumes
+(Narayanan et al., FAST'08; SNIA IOTTA trace set 388).  Those traces are
+*not redistributable*, so this repo checks in only two tiny MSR-format
+excerpts for tests (``tests/data/*.csv.gz``).  This script downloads any
+of the 36 real volumes into a local trace directory, after which the
+workload registry resolves them with **no repo changes**:
+
+    # one-time: fetch two volumes into $REPRO_TRACE_DIR (or ./traces)
+    python scripts/fetch_msr_traces.py web_0 src1_1
+
+    # then anywhere in the run APIs:
+    simulate("msr:web_0", AGED, "pr2ar2", gc="prepass")
+
+Trace-dir convention
+--------------------
+File-scheme workload specs (``msr:NAME``, ``blktrace:NAME``) resolve
+``NAME`` against, in order: ``$REPRO_TRACE_DIR``, ``./traces``,
+``./tests/data``, and the checkout's ``tests/data``
+(:func:`repro.flashsim.workloads.registry.trace_search_paths`).  This
+script writes to ``--dest``, else ``$REPRO_TRACE_DIR``, else
+``./traces`` — i.e. wherever it downloads, the registry already looks.
+
+Integrity
+---------
+SNIA distributes the volumes through a click-through portal, so the
+exact bytes can vary by mirror (some serve ``.csv``, some ``.csv.gz``).
+Integrity is therefore manifest-based: after each download the file's
+SHA-256 is recorded in ``msr_manifest.json`` next to the traces
+(trust-on-first-use), and any later re-download of the same volume is
+verified against the pinned digest.  A site-wide pin set can be
+supplied up front with ``--checksum-file`` (JSON:
+``{"web_0.csv.gz": "<sha256>", ...}``); mismatches abort before the
+file is moved into place.  Every completed file is also sanity-parsed
+with the repo's MSR loader before being accepted.
+
+The default ``--base-url`` points at the SNIA IOTTA MSR-Cambridge
+directory; pass your mirror if you have one (the portal may require a
+free SNIA account — download there manually and drop the files into the
+trace dir if so; the manifest/verify path works the same for files this
+script did not download via ``--verify-only``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import gzip
+import hashlib
+import json
+import os
+import shutil
+import sys
+import tempfile
+import urllib.error
+import urllib.request
+from pathlib import Path
+
+#: The 36 MSR-Cambridge per-volume traces (13 servers), as named by the
+#: SNIA IOTTA repository (``<volume>.csv.gz``).
+MSR_VOLUMES = (
+    "hm_0", "hm_1",
+    "mds_0", "mds_1",
+    "prn_0", "prn_1",
+    "proj_0", "proj_1", "proj_2", "proj_3", "proj_4",
+    "prxy_0", "prxy_1",
+    "rsrch_0", "rsrch_1", "rsrch_2",
+    "src1_0", "src1_1", "src1_2",
+    "src2_0", "src2_1", "src2_2",
+    "stg_0", "stg_1",
+    "ts_0",
+    "usr_0", "usr_1", "usr_2",
+    "wdev_0", "wdev_1", "wdev_2", "wdev_3",
+    "web_0", "web_1", "web_2", "web_3",
+)
+
+DEFAULT_BASE_URL = (
+    "https://iotta.snia.org/traces/block-io/388/download/MSR-Cambridge"
+)
+
+MANIFEST_NAME = "msr_manifest.json"
+
+
+def default_dest() -> Path:
+    """--dest > $REPRO_TRACE_DIR > ./traces (the registry search order)."""
+    env = os.environ.get("REPRO_TRACE_DIR")
+    return Path(env) if env else Path.cwd() / "traces"
+
+
+def sha256_file(path: Path, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
+
+
+def load_manifest(dest: Path) -> dict:
+    path = dest / MANIFEST_NAME
+    if path.exists():
+        with open(path) as f:
+            return json.load(f)
+    return {}
+
+
+def save_manifest(dest: Path, manifest: dict) -> None:
+    path = dest / MANIFEST_NAME
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def verify_pin(name: str, digest: str, pins: dict) -> None:
+    """Raise if ``digest`` contradicts a pinned checksum for ``name``."""
+    pinned = pins.get(name)
+    if pinned is not None and pinned.lower() != digest.lower():
+        raise RuntimeError(
+            f"{name}: SHA-256 mismatch — expected {pinned}, got {digest} "
+            f"(corrupt download or a different mirror revision; delete "
+            f"the pin to re-trust)"
+        )
+
+
+def sanity_parse(path: Path, max_rows: int = 1000) -> int:
+    """Parse the head of a downloaded volume with the repo's MSR loader.
+
+    Real volumes run to gigabytes, so only the first ``max_rows`` lines
+    are extracted (gzip-aware) into a temp file and run through
+    :func:`repro.flashsim.workloads.load_msr_csv`.  Returns the number
+    of requests parsed; raises on malformed files (wrong column count,
+    non-FILETIME timestamps, truncated gzip).
+    """
+    from repro.flashsim.workloads import load_msr_csv
+
+    opener = gzip.open if is_gzip(path) else open
+    with opener(path, "rt") as f:
+        head = []
+        for i, line in enumerate(f):
+            if i >= max_rows:
+                break
+            head.append(line)
+    if not head:
+        raise RuntimeError(f"{path.name}: empty trace file")
+    with tempfile.NamedTemporaryFile(
+        "wt", suffix=".csv", delete=False
+    ) as tmp:
+        tmp.writelines(head)
+        tmp_path = Path(tmp.name)
+    try:
+        trace = load_msr_csv(tmp_path)
+    finally:
+        tmp_path.unlink()
+    if len(trace.arrival_us) == 0:
+        raise RuntimeError(f"{path.name}: no parseable MSR rows")
+    return len(trace.arrival_us)
+
+
+def download(url: str, out_path: Path, timeout: float = 60.0) -> None:
+    req = urllib.request.Request(
+        url, headers={"User-Agent": "repro-flashsim-trace-fetch/1.0"}
+    )
+    with urllib.request.urlopen(req, timeout=timeout) as resp, \
+            open(out_path, "wb") as out:
+        shutil.copyfileobj(resp, out)
+
+
+def is_gzip(path: Path) -> bool:
+    with open(path, "rb") as f:
+        return f.read(2) == b"\x1f\x8b"
+
+
+def recompress_csv(path: Path) -> None:
+    """Gzip a plain-CSV download in place, reproducibly.
+
+    Streamed (volumes run to GiB, never loaded whole) and with mtime=0 /
+    no name in the gzip header, so recompressing identical CSV bytes
+    always yields identical archive bytes — the manifest/pin SHA-256
+    stays stable across re-downloads.  Raises if the content does not
+    look like MSR CSV (e.g. a portal login page).
+    """
+    with open(path, "rb") as f:
+        head = f.read(64)
+    if not head.lstrip()[:1].isdigit():
+        raise RuntimeError(
+            f"{path.name}: response is neither gzip nor MSR CSV "
+            f"(portal login page? use --base-url with a direct "
+            f"mirror, or download manually)"
+        )
+    gz_tmp = Path(str(path) + ".gz")
+    try:
+        with open(path, "rb") as src, open(gz_tmp, "wb") as dst:
+            # filename="" keeps the temp file's (random) name out of
+            # the header; mtime=0 pins the timestamp field.
+            with gzip.GzipFile(filename="", fileobj=dst, mode="wb",
+                               mtime=0) as zf:
+                shutil.copyfileobj(src, zf)
+        gz_tmp.replace(path)
+    finally:
+        if gz_tmp.exists():
+            gz_tmp.unlink()
+
+
+def fetch_volume(name: str, dest: Path, base_url: str, pins: dict,
+                 manifest: dict, force: bool = False,
+                 skip_parse: bool = False) -> Path:
+    """Download one volume (TOFU-verified), returning the final path."""
+    fname = f"{name}.csv.gz"
+    final = dest / fname
+    if final.exists() and not force:
+        digest = sha256_file(final)
+        verify_pin(fname, digest, pins)
+        verify_pin(fname, digest, manifest)
+        manifest[fname] = digest
+        print(f"  {fname}: already present ({digest[:12]}…), verified")
+        return final
+    url = f"{base_url.rstrip('/')}/{fname}"
+    tmp_fd, tmp_name = tempfile.mkstemp(prefix=f".{fname}.", dir=dest)
+    os.close(tmp_fd)
+    tmp = Path(tmp_name)
+    try:
+        print(f"  {fname}: downloading {url}")
+        download(url, tmp)
+        if not is_gzip(tmp):
+            # Mirror served the uncompressed CSV: gzip it (reproducibly)
+            # so the name matches what the registry's loaders expect.
+            recompress_csv(tmp)
+        digest = sha256_file(tmp)
+        verify_pin(fname, digest, pins)
+        verify_pin(fname, digest, manifest)
+        if not skip_parse:
+            n = sanity_parse(tmp)
+            print(f"  {fname}: parsed {n} head requests OK")
+        tmp.replace(final)
+        manifest[fname] = digest
+        print(f"  {fname}: done (sha256 {digest[:12]}…)")
+        return final
+    finally:
+        if tmp.exists():
+            tmp.unlink()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="download SNIA MSR-Cambridge volumes into the trace "
+                    "directory the workload registry searches"
+    )
+    ap.add_argument("volumes", nargs="*",
+                    help="volume names (e.g. web_0 src1_1); default: "
+                         "the two volumes the benchmark replays")
+    ap.add_argument("--all", action="store_true",
+                    help="fetch all 36 volumes (several GiB)")
+    ap.add_argument("--list", action="store_true",
+                    help="list known volume names and exit")
+    ap.add_argument("--dest", type=Path, default=None,
+                    help="target directory (default: $REPRO_TRACE_DIR "
+                         "or ./traces)")
+    ap.add_argument("--base-url", default=DEFAULT_BASE_URL,
+                    help="mirror base URL serving <volume>.csv[.gz]")
+    ap.add_argument("--checksum-file", type=Path, default=None,
+                    help="JSON of {filename: sha256} pins to verify "
+                         "against (in addition to the local manifest)")
+    ap.add_argument("--verify-only", action="store_true",
+                    help="no network: hash + sanity-parse files already "
+                         "in the trace dir and update the manifest")
+    ap.add_argument("--force", action="store_true",
+                    help="re-download even if the file exists")
+    ap.add_argument("--skip-parse", action="store_true",
+                    help="skip the MSR-loader sanity parse")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        print("\n".join(MSR_VOLUMES))
+        return 0
+
+    volumes = list(args.volumes)
+    if args.all:
+        volumes = list(MSR_VOLUMES)
+    elif not volumes:
+        volumes = ["web_0", "src1_1"]   # the benchmark's replay cells
+    unknown = [v for v in volumes if v not in MSR_VOLUMES]
+    if unknown:
+        ap.error(f"unknown volume(s): {', '.join(unknown)} "
+                 f"(--list shows the 36 MSR-Cambridge names)")
+
+    dest = args.dest if args.dest is not None else default_dest()
+    dest.mkdir(parents=True, exist_ok=True)
+    pins = {}
+    if args.checksum_file is not None:
+        with open(args.checksum_file) as f:
+            pins = json.load(f)
+    manifest = load_manifest(dest)
+
+    print(f"trace dir: {dest}  (registry search order: $REPRO_TRACE_DIR, "
+          f"./traces, ./tests/data)")
+    failures = 0
+    for name in volumes:
+        try:
+            if args.verify_only:
+                fname = f"{name}.csv.gz"
+                path = dest / fname
+                if not path.exists():
+                    raise FileNotFoundError(f"{fname} not in {dest}")
+                digest = sha256_file(path)
+                verify_pin(fname, digest, pins)
+                verify_pin(fname, digest, manifest)
+                if not args.skip_parse:
+                    sanity_parse(path)
+                manifest[fname] = digest
+                print(f"  {fname}: verified ({digest[:12]}…)")
+            else:
+                fetch_volume(name, dest, args.base_url, pins, manifest,
+                             force=args.force, skip_parse=args.skip_parse)
+        except (RuntimeError, OSError, urllib.error.URLError) as e:
+            failures += 1
+            print(f"  {name}: FAILED — {e}", file=sys.stderr)
+    save_manifest(dest, manifest)
+    if failures:
+        print(f"{failures} volume(s) failed; manifest saved for the rest",
+              file=sys.stderr)
+        return 1
+    print(f"manifest: {dest / MANIFEST_NAME}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(
+        0, str(Path(__file__).resolve().parents[1] / "src")
+    )
+    sys.exit(main())

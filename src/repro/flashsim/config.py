@@ -102,8 +102,10 @@ class SSDConfig:
     #: engine), ``"host_prio"`` (host reads jump GC/program ops),
     #: ``"host_prio_aged"`` (host_prio with a starvation bound — GC and
     #: program ops age to the front after ``:N`` bypassing host reads,
-    #: e.g. ``"host_prio_aged:8"``), or ``"preempt"`` (host_prio +
-    #: read-suspend of in-flight GC ops).
+    #: e.g. ``"host_prio_aged:8"``), ``"tokens"`` (per-die read/write
+    #: token budgets — up to ``r`` host reads then up to ``w`` other ops
+    #: per contended round, e.g. ``"tokens:6,2"``), or ``"preempt"``
+    #: (host_prio + read-suspend of in-flight GC ops).
     scheduler: str = "fcfs"
 
     def __post_init__(self):

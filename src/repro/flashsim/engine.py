@@ -41,6 +41,33 @@ additionally arms two suspend paths:
 
 Host operations are never suspended.
 
+Per-channel sharding (``shard=True``)
+-------------------------------------
+The loop is parallel by construction: an op's die and channel are bound
+by the static stripe (``die % n_channels == channel``), so ops of
+different channels never share a die queue, a channel busy-until scalar,
+or a scheduler instance.  ``run_event_core(..., shard=True)`` exploits
+this by running one *shard loop* per channel — the same interpreter
+(:func:`_run_shard`) over the admission substream of that channel's ops,
+owning that channel's dies, queues, busy-until scalar, and (online mode)
+its slice of the per-die GC state — and then combining the per-shard
+completion streams with a thin deterministic merge
+(:func:`merge_shard_results`): ``req_done`` is an elementwise max (a
+request's pages may span channels), die/channel vectors take each
+shard's owned entries, counters add.
+
+The sharded run is **bit-identical** to the monolithic run: within one
+shard, events are pushed in the same relative order as the monolithic
+loop's events restricted to that channel (push-order tie-breaking is a
+per-shard property), and cross-shard state is limited to the commutative
+``req_done`` max and additive counters.  Online GC keeps this exact
+because the FTL is die-partitioned (see :mod:`repro.flashsim.ftl`) and
+its attempt draws come from per-die RNG substreams
+(:mod:`repro.flashsim.gc_online`), so the draw sequence of a die does
+not depend on how loops interleave across channels.  The shard loops
+run sequentially in-process; cross-*run* parallelism lives a layer up in
+:mod:`repro.flashsim.runtime`.
+
 Online-GC integration
 ---------------------
 With an :class:`repro.flashsim.gc_online.OnlineGC` driver attached, the
@@ -133,12 +160,74 @@ def run_event_core(
     n_requests: int,
     online=None,
     validate: bool = False,
+    shard: bool = False,
 ) -> EngineResult:
     """Run the interpreter loop over one admission stream.
 
-    ``validate=True`` asserts work conservation (no die left idle while
-    its queue holds a runnable op) after every step — test instrumentation,
-    off on the hot path.
+    ``shard=False`` (default) runs the monolithic loop — one heap over
+    every channel, the pre-refactor behavior.  ``shard=True`` decomposes
+    the run into one loop per channel and merges the per-shard results
+    (bit-identical; see the module docstring).  ``validate=True`` asserts
+    work conservation (no die left idle while its queue holds a runnable
+    op) after every step — test instrumentation, off on the hot path.
+    """
+    P = len(bufs.arrival)
+    host_read = None
+    if policy.prioritized:
+        op_read, op_rid = bufs.read, bufs.rid
+        host_read = [op_read[i] and op_rid[i] >= 0 for i in range(P)]
+    bufs.host_read = host_read
+    if online is not None:
+        online.bind(bufs)
+
+    if not shard or cfg.n_channels == 1:
+        res = _run_shard(cfg, pipelined, policy, bufs, n_requests,
+                         host_read, online, validate, None)
+        if online is not None:
+            online.assert_drained()
+        return res
+
+    # Per-channel decomposition: partition the admission stream by the
+    # static die -> channel stripe.  Online injections never enter these
+    # lists (they are admitted mid-loop at the current sim time) and are
+    # die-local by the gc_online shard-scope contract, so the partition
+    # computed up front stays exhaustive.
+    n_ch = cfg.n_channels
+    shard_ops: List[List[int]] = [[] for _ in range(n_ch)]
+    for i, c in enumerate(bufs.ch[:P]):
+        shard_ops[c].append(i)
+    results = []
+    for c in range(n_ch):
+        if online is not None:
+            online.set_shard_scope(range(c, cfg.n_dies, n_ch))
+        results.append(
+            _run_shard(cfg, pipelined, policy, bufs, n_requests,
+                       host_read, online, validate, shard_ops[c])
+        )
+    if online is not None:
+        online.set_shard_scope(None)
+        online.assert_drained()
+    return merge_shard_results(cfg, results)
+
+
+def _run_shard(
+    cfg,
+    pipelined: bool,
+    policy: SchedulerPolicy,
+    bufs: OpBuffers,
+    n_requests: int,
+    host_read: Optional[List[bool]],
+    online,
+    validate: bool,
+    shard_ops: Optional[List[int]],
+) -> EngineResult:
+    """One interpreter loop over an admission (sub)stream.
+
+    ``shard_ops=None`` runs the whole stream (the monolithic loop);
+    otherwise it is the list of op ids this shard admits, and the loop
+    touches only those ops' dies and channel.  State vectors are
+    allocated full-size either way — a shard writes only its owned
+    entries, which is what :func:`merge_shard_results` reads back out.
     """
     t = cfg.timing
     tdma, tecc = t.tdma_us, t.tecc_us
@@ -152,12 +241,7 @@ def run_event_core(
     )
     P = len(adm_t)
 
-    prio = policy.prioritized
     preempt = policy.preemptive
-    host_read = None
-    if prio:
-        host_read = [op_read[i] and op_rid[i] >= 0 for i in range(P)]
-    bufs.host_read = host_read
 
     n_dies, n_ch = cfg.n_dies, cfg.n_channels
     die_busy = [0.0] * n_dies   # busy_until; inf while held
@@ -180,9 +264,6 @@ def run_event_core(
     online_read_pages = 0
 
     read_start_ev = _EV_COPY if pipelined else _EV_NEXT
-
-    if online is not None:
-        online.bind(bufs)
 
     def admit_gc(o: int, tm: float) -> None:
         """Admit an online-injected GC page-op at the current instant."""
@@ -226,8 +307,16 @@ def run_event_core(
 
     # Admission cursor merged with the heap (admits never enter it).  The
     # event sequence under fcfs is byte-for-byte the pre-refactor loop's.
+    # A shard admits only its own ops (``shard_ops``); the monolithic
+    # loop admits positionally (op == ai).
+    n_adm = P if shard_ops is None else len(shard_ops)
     ai = 0
-    next_adm = adm_t[0] if P else _INF
+    if not n_adm:
+        next_adm = _INF
+    elif shard_ops is None:
+        next_adm = adm_t[0]
+    else:
+        next_adm = adm_t[shard_ops[0]]
     while True:
         if heap:
             top = heap[0]
@@ -238,10 +327,15 @@ def run_event_core(
         else:
             break
         if next_adm <= tt:
-            op = ai
+            op = ai if shard_ops is None else shard_ops[ai]
             tm = next_adm
             ai += 1
-            next_adm = adm_t[ai] if ai < P else _INF
+            if ai >= n_adm:
+                next_adm = _INF
+            elif shard_ops is None:
+                next_adm = adm_t[ai]
+            else:
+                next_adm = adm_t[shard_ops[ai]]
             # Reads contend for their die; writes go straight to
             # the channel (program happens after the transfer);
             # erases hold their die with no channel traffic.
@@ -525,9 +619,6 @@ def run_event_core(
         if validate:
             _check_work_conserving(die_busy, dieq)
 
-    if online is not None:
-        online.assert_drained()
-
     return EngineResult(
         req_done=req_done,
         die_tot=die_tot,
@@ -538,6 +629,64 @@ def run_event_core(
         gc_suspensions=gc_susp,
         online_attempts=online_attempts,
         online_read_pages=online_read_pages,
+    )
+
+
+def merge_shard_results(cfg, results: List[EngineResult]) -> EngineResult:
+    """Deterministically combine per-channel shard results into one.
+
+    ``results[c]`` is channel ``c``'s shard.  Cross-shard state is, by
+    construction, limited to commutative/additive quantities:
+
+      * ``req_done`` — elementwise max across shards (a request's pages
+        may stripe over several channels; each shard recorded the last
+        completion among *its* pages);
+      * die vectors — each die is owned by exactly one shard
+        (``die % n_channels == channel``), so the merge selects the
+        owner's entries;
+      * channel vectors — shard ``c`` owns exactly channel ``c``;
+      * event/suspension/attempt counters — sums.
+
+    The merge is independent of shard execution order, which is what
+    makes the decomposition safe to parallelize at a higher layer.
+    """
+    n_ch = cfg.n_channels
+    n_dies = cfg.n_dies
+    if len(results) != n_ch:
+        raise ValueError(
+            f"expected one shard result per channel ({n_ch}), "
+            f"got {len(results)}"
+        )
+    n_req = len(results[0].req_done)
+    req_done = [0.0] * n_req
+    die_tot = [0.0] * n_dies
+    die_busy = [0.0] * n_dies
+    ch_tot = [0.0] * n_ch
+    ch_busy = [0.0] * n_ch
+    n_events = gc_susp = attempts = read_pages = 0
+    for c, r in enumerate(results):
+        for i, v in enumerate(r.req_done):
+            if v > req_done[i]:
+                req_done[i] = v
+        for d in range(c, n_dies, n_ch):
+            die_tot[d] = r.die_tot[d]
+            die_busy[d] = r.die_busy[d]
+        ch_tot[c] = r.ch_tot[c]
+        ch_busy[c] = r.ch_busy[c]
+        n_events += r.n_events
+        gc_susp += r.gc_suspensions
+        attempts += r.online_attempts
+        read_pages += r.online_read_pages
+    return EngineResult(
+        req_done=req_done,
+        die_tot=die_tot,
+        ch_tot=ch_tot,
+        die_busy=die_busy,
+        ch_busy=ch_busy,
+        n_events=n_events,
+        gc_suspensions=gc_susp,
+        online_attempts=attempts,
+        online_read_pages=read_pages,
     )
 
 

@@ -43,6 +43,32 @@ over the channel and hold the die for tPROG; erases hold the die for
 FCFS queues and channel busy-until state — the contention the paper's
 MQSim evaluation bakes in.
 
+Die-partitioned state (the sharding contract)
+---------------------------------------------
+Every piece of FTL state that simulation-time code paths touch is
+partitioned by die, keyed by the same static stripe the simulator uses
+(``lpn % n_dies``):
+
+  * allocation — free pools (``free[die]``), frontiers (``active`` /
+    ``gc_active``), and sealed sets are per-die lists/sets; ``_alloc``,
+    :meth:`PageMapFTL.can_alloc`, and :meth:`PageMapFTL.erase_complete`
+    take the die explicitly and touch no other die's entries;
+  * mapping — an lpn lives on exactly one die, and block-indexed arrays
+    (``valid`` / ``wp`` / ``erases`` / ``p2l``) are partitioned into
+    per-die block ranges (``[die*blocks_per_die, (die+1)*blocks_per_die)``);
+  * victim selection / collection — :meth:`_collect` reads and writes
+    only its die's structures.
+
+Only *statistics* (page/invocation counters, ``gc_log``) are shared, and
+those are additive.  This is what makes the per-channel sharded event
+core (:mod:`repro.flashsim.engine` ``shard=True``) exact: a channel
+shard owns its dies' FTL slice outright, and the two cross-shard-looking
+couplings — page allocation and host-write stalls — are in fact die-local
+(the stall lists in :mod:`repro.flashsim.gc_online` are per-die too).
+Code extending the FTL must preserve this partitioning or the sharded
+engine's bit-equality contract breaks; the online driver's
+``set_shard_scope`` guard fails fast on violations.
+
 Approximation notes (documented, deliberate):
 
   * GC is triggered by write *admission order*, not by simulated write

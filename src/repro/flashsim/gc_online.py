@@ -34,14 +34,37 @@ FTL at *simulated* instants:
 Mapping state machine and victim policy are shared with the prepass
 (:class:`repro.flashsim.ftl.PageMapFTL` with ``auto_gc=False`` +
 ``defer_free=True``); only the trigger and free-pool dynamics differ.
-GC-read attempt counts are drawn from the owning run's RNG at injection
-time (there is no bit-parity contract with the prepass stream), at the
-victim block's wear and per-block AR² scale.
+
+RNG discipline: shard-invariant per-die substreams
+--------------------------------------------------
+Attempt counts for online-mode reads (host reads at admission, GC reads
+at injection) are drawn from **per-die RNG substreams** seeded as
+``(run seed, die)``, not from one run-global stream.  A die's draw
+sequence then depends only on that die's own event order — which is
+identical whether the event core runs one monolithic loop or one loop
+per channel (:mod:`repro.flashsim.engine` ``shard=True``) — so sharded
+and monolithic online runs are bit-identical.  (There is no bit-parity
+contract with the prepass stream; online mode has always sampled on its
+own schedule.)
+
+Cross-shard coupling contract
+-----------------------------
+The only state online GC touches that *could* couple shards is FTL
+allocation and host-write stalls — and both are die-partitioned by
+construction (see the "Die-partitioned state" section of
+:mod:`repro.flashsim.ftl`): free pools, frontiers, sealed sets, and the
+stall lists are all per-die, and a die is owned by exactly one channel
+shard.  The engine makes the contract explicit through
+:meth:`OnlineGC.set_shard_scope`: while a shard's loop runs, the driver
+fails fast if any allocation, stall, injection, or erase completion
+touches a die outside the shard.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
 
 from repro.flashsim.config import SSDConfig
 from repro.flashsim.ftl import OP_ERASE, OP_GC_READ, PageMapFTL
@@ -61,6 +84,8 @@ class OnlineGC:
     ``on_erase_complete(op, tm)``  return the erased block to the pool;
     ``take_injected()``            drain newly-emitted GC ops to admit;
     ``take_unstalled()``           drain writes made runnable by an erase;
+    ``set_shard_scope(dies)``      restrict to one shard's dies (None
+                                   clears; sharded engine runs only);
     ``assert_drained()``           end-of-run wedge check.
     """
 
@@ -81,6 +106,14 @@ class OnlineGC:
 
         self._lpn = expansion.page_id.tolist()
         self._ptype = expansion.ptype.tolist()
+
+        # Per-die attempt-sampling substreams, seeded (run seed, die):
+        # a die's draw order is a die-local property, so sharded and
+        # monolithic loops consume identical streams (module docstring).
+        self._rngs = [
+            np.random.default_rng((sim.seed, d)) for d in range(self.n_dies)
+        ]
+        self._scope: Optional[frozenset] = None
 
         self.inflight_erases = [0] * self.n_dies
         self._stalled: List[List[int]] = [[] for _ in range(self.n_dies)]
@@ -119,7 +152,8 @@ class OnlineGC:
             wear = 0.0
             self.prefill_skips += 1
         pt = self._ptype[op]
-        return self.sim._draw_attempts(pt, wear), self.sim._tr_for(pt, wear)
+        return (self.sim._draw_attempts(pt, wear, rng=self._rngs[d]),
+                self.sim._tr_for(pt, wear))
 
     def on_program_start(self, op: int, tm: float) -> bool:
         """Allocate the write's physical page at simulated program start.
@@ -128,6 +162,11 @@ class OnlineGC:
         the op via :meth:`stall` and it re-dispatches after an erase.
         """
         d = self.bufs.die[op]
+        if self._scope is not None and d not in self._scope:
+            raise AssertionError(
+                f"online GC shard-scope violation: program start on die "
+                f"{d} outside the active shard"
+            )
         if not self.ftl.can_alloc(d):
             self.write_stalls += 1
             return False
@@ -136,10 +175,21 @@ class OnlineGC:
         return True
 
     def stall(self, op: int) -> None:
-        self._stalled[self.bufs.die[op]].append(op)
+        d = self.bufs.die[op]
+        if self._scope is not None and d not in self._scope:
+            raise AssertionError(
+                f"online GC shard-scope violation: write stall on die "
+                f"{d} outside the active shard"
+            )
+        self._stalled[d].append(op)
 
     def on_erase_complete(self, op: int, tm: float) -> None:
         d, blk = self._erase_block.pop(op)
+        if self._scope is not None and d not in self._scope:
+            raise AssertionError(
+                f"online GC shard-scope violation: erase completion on "
+                f"die {d} outside the active shard"
+            )
         self.ftl.erase_complete(d, blk)
         self.inflight_erases[d] -= 1
         stalled = self._stalled[d]
@@ -156,6 +206,17 @@ class OnlineGC:
         out = self.unstalled
         self.unstalled = []
         return out
+
+    def set_shard_scope(self, dies) -> None:
+        """Restrict the driver to one shard's dies (engine sharding).
+
+        While a scope is set, any FTL allocation, write stall, GC
+        injection, or erase completion on a die outside it raises — the
+        fail-fast form of the cross-shard coupling contract (module
+        docstring).  ``None`` clears the scope (monolithic runs never
+        set one).
+        """
+        self._scope = None if dies is None else frozenset(dies)
 
     def assert_drained(self) -> None:
         parked = sum(len(s) for s in self._stalled)
@@ -188,10 +249,15 @@ class OnlineGC:
         engine at the current sim time)."""
         b = self.bufs
         sim = self.sim
+        if self._scope is not None and d not in self._scope:
+            raise AssertionError(
+                f"online GC shard-scope violation: GC op injected on die "
+                f"{d} outside the active shard"
+            )
         is_read = kind == OP_GC_READ
         is_erase = kind == OP_ERASE
         if is_read:
-            a = sim._draw_attempts(pt, wear)
+            a = sim._draw_attempts(pt, wear, rng=self._rngs[d])
             tr = sim._tr_for(pt, wear)
             dur = 0.0
         else:

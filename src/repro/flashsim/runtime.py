@@ -1,0 +1,416 @@
+"""Parallel sweep runtime: grid cells scheduled across a process pool.
+
+This is the middle layer of the sharded simulation runtime (ISSUE 5):
+
+  * :mod:`repro.flashsim.engine` — *intra-run* decomposition: one event
+    loop per channel behind ``shard=True``, bit-identical to the
+    monolithic loop;
+  * **this module** — *inter-cell* parallelism: a sweep's
+    (mechanism x condition x seed x trace) grid cells are scheduled
+    across a process pool with deterministic assembly, so a
+    ``workers=4`` sweep returns exactly what ``workers=1`` returns —
+    byte-identical once serialized (:func:`sweep_to_json`) — only
+    faster;
+  * :mod:`repro.flashsim.ssd` — the run APIs' ``workers=`` / ``shard=``
+    knobs, which delegate here.
+
+Scheduling unit
+---------------
+A :class:`Cell` is one schedulable unit.  ``kind="batch"`` cells are the
+sweet spot: one *seed group* of a ``simulate_batch`` grid, which keeps
+the single-seed trace generation, page-op expansion, and FTL pre-pass
+shared across that group's (mechanism x condition) cells inside one
+worker — the same sharing ``simulate_batch`` does inline.  ``simulate``
+and ``compare`` cells wrap the corresponding run APIs for benchmark
+harnesses that sweep per-seed cells directly.
+
+Cache reuse across workers
+--------------------------
+Workers are forked when the platform allows (``fork`` start method, the
+Linux default): a forked worker inherits the parent's process-wide
+caches copy-on-write — the content-hash trace cache
+(:func:`repro.flashsim.workloads.cached_trace`) and the in-process
+characterization memos — so :func:`run_cells` pre-warms every
+(condition, mechanism) characterization table in the parent *before*
+creating the pool and no worker ever re-enters JAX.  Under ``spawn``
+(or any cold worker) the on-disk characterization cache
+(``~/.cache/repro_flashsim``, see :mod:`repro.core.characterize`) fills
+the same role at a one-read-per-table cost.  Force a start method with
+``REPRO_SWEEP_START_METHOD``; force inline execution (no pool, e.g. in
+sandboxes without working semaphores) with ``REPRO_SWEEP_INLINE=1``.
+
+Determinism
+-----------
+Cell *results* never depend on the worker count — each cell runs the
+identical code path a ``workers=1`` run executes — and cell *ordering*
+is fixed by the caller's input order (:func:`run_cells` returns results
+positionally; :func:`run_sweep` assembles its dict in canonical
+seed -> condition -> mechanism order).  :func:`sweep_to_json` is the
+canonical serialization used by the determinism tests and the CI
+bench-smoke lane: byte-identical output for any ``workers``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing
+import os
+import platform
+import threading
+from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
+
+__all__ = [
+    "Cell",
+    "host_fingerprint",
+    "prewarm_characterization",
+    "run_cells",
+    "run_compare",
+    "run_sweep",
+    "sweep_cell_key",
+    "sweep_to_json",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Cell:
+    """One schedulable unit of a sweep.
+
+    ``kind`` selects the run API the worker executes:
+
+      * ``"simulate"`` — one (mechanism, condition, seed) run; returns
+        a :class:`repro.flashsim.ssd.SimStats`;
+      * ``"compare"`` — all ``mechanisms`` over one shared trace
+        (:func:`repro.flashsim.ssd.compare_mechanisms`); returns
+        ``{mechanism: SimStats}``;
+      * ``"batch"`` — one full single-seed ``simulate_batch`` group
+        (shares trace/expansion/FTL pre-pass across
+        mechanisms x conditions); returns the batch dict.
+
+    Cells must be picklable: ``workload`` is a
+    :class:`~repro.flashsim.workloads.Workload`, a registry spec string,
+    or a picklable :class:`~repro.flashsim.workloads.TraceSource`.
+    """
+
+    kind: str
+    workload: object
+    conditions: Tuple[OperatingCondition, ...]
+    mechanisms: Tuple[str, ...]
+    seed: int
+    cfg: SSDConfig = DEFAULT_SSD
+    n_requests: Optional[int] = None
+    engine: str = "array"
+    scheduler: Optional[str] = None
+    gc: Optional[str] = None
+    shard: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("simulate", "compare", "batch"):
+            raise ValueError(
+                f"Cell.kind must be 'simulate', 'compare' or 'batch', "
+                f"got {self.kind!r}"
+            )
+        if self.kind == "simulate" and len(self.mechanisms) != 1:
+            raise ValueError(
+                "a 'simulate' cell takes exactly one mechanism, got "
+                f"{self.mechanisms!r}"
+            )
+        if self.kind != "batch" and len(self.conditions) != 1:
+            raise ValueError(
+                f"a {self.kind!r} cell takes exactly one condition, got "
+                f"{len(self.conditions)}"
+            )
+
+
+def _run_cell(cell: Cell):
+    """Execute one cell (in a worker or inline) — pure in its argument."""
+    from repro.flashsim.ssd import (
+        compare_mechanisms,
+        simulate,
+        simulate_batch,
+    )
+
+    if cell.kind == "simulate":
+        return simulate(
+            cell.workload, cell.conditions[0], cell.mechanisms[0],
+            seed=cell.seed, cfg=cell.cfg, n_requests=cell.n_requests,
+            engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
+            shard=cell.shard,
+        )
+    if cell.kind == "compare":
+        return compare_mechanisms(
+            cell.workload, cell.conditions[0], mechanisms=cell.mechanisms,
+            seed=cell.seed, cfg=cell.cfg, n_requests=cell.n_requests,
+            engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
+            shard=cell.shard,
+        )
+    return simulate_batch(
+        cell.workload, cell.conditions, mechanisms=cell.mechanisms,
+        seeds=(cell.seed,), cfg=cell.cfg, n_requests=cell.n_requests,
+        engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
+        shard=cell.shard,
+    )
+
+
+def prewarm_characterization(cells: Iterable[Cell]) -> int:
+    """Build every (condition, mechanism) table the cells will touch.
+
+    Called in the parent before the pool is created so forked workers
+    inherit warm in-process memos (and never call into JAX themselves);
+    under spawn the work instead lands once in the on-disk cache.
+    Returns the number of distinct tables touched.
+    """
+    from repro.core.retry import RetryPolicy
+    from repro.flashsim.ssd import SSDSim
+
+    seen = set()
+    for cell in cells:
+        for cond in cell.conditions:
+            for mech in cell.mechanisms:
+                key = (cond, mech)
+                if key in seen:
+                    continue
+                seen.add(key)
+                SSDSim(cell.cfg, cond, RetryPolicy(mech))
+    return len(seen)
+
+
+def _mp_context():
+    method = os.environ.get("REPRO_SWEEP_START_METHOD")
+    if not method:
+        methods = multiprocessing.get_all_start_methods()
+        method = "fork" if "fork" in methods else None
+    return multiprocessing.get_context(method)
+
+
+def _inline_forced() -> bool:
+    return os.environ.get("REPRO_SWEEP_INLINE", "0") == "1"
+
+
+def run_cells(cells: Sequence[Cell], workers: int = 1,
+              prewarm: bool = True) -> List:
+    """Execute ``cells``; results are returned in input order.
+
+    ``workers <= 1`` runs inline (no pool, no pickling — the exact
+    ``workers=1`` code path).  Larger counts fan cells out over a
+    process pool; results are still assembled positionally, so the
+    output is independent of completion order.  Pool-*infrastructure*
+    failures (no semaphores at construction, workers dying —
+    ``BrokenExecutor``) fall back to inline execution; an exception
+    raised *by a cell itself* propagates unchanged — it would fail
+    inline too, so re-running the sweep would only duplicate the work.
+    """
+    cells = list(cells)
+    workers = min(int(workers), len(cells))
+    if workers <= 1 or _inline_forced():
+        return [_run_cell(c) for c in cells]
+    if prewarm:
+        prewarm_characterization(cells)
+    try:
+        pool = ProcessPoolExecutor(max_workers=workers,
+                                   mp_context=_mp_context())
+    except (OSError, PermissionError):
+        # Sandboxed semaphores / fork unavailable: no pool, run inline.
+        return [_run_cell(c) for c in cells]
+    try:
+        with pool:
+            futures = [pool.submit(_run_cell, c) for c in cells]
+            return [f.result() for f in futures]
+    except BrokenExecutor:
+        # Workers died underneath us (fork breakage, OOM-killed child):
+        # re-run everything inline — identical results, no parallelism.
+        return [_run_cell(c) for c in cells]
+
+
+def run_sweep(
+    workload,
+    conditions: Iterable[OperatingCondition],
+    mechanisms: Sequence[str],
+    seeds: Sequence[int],
+    cfg: SSDConfig = DEFAULT_SSD,
+    n_requests: Optional[int] = None,
+    engine: str = "array",
+    scheduler: Optional[str] = None,
+    gc: Optional[str] = None,
+    shard: bool = False,
+    workers: int = 1,
+) -> Dict[Tuple[str, OperatingCondition, int], "object"]:
+    """``simulate_batch`` semantics with seed groups fanned over workers.
+
+    One :class:`Cell` per seed keeps each group's trace / expansion /
+    FTL pre-pass shared inside its worker, exactly like the inline
+    sweep.  The result dict is assembled in the canonical
+    seed -> condition -> mechanism order regardless of worker count, so
+    iteration order — and :func:`sweep_to_json` output — is byte-stable.
+    """
+    conditions = tuple(conditions)
+    mechanisms = tuple(mechanisms)
+    seeds = tuple(seeds)
+    cells = [
+        Cell("batch", workload, conditions, mechanisms, s, cfg, n_requests,
+             engine, scheduler, gc, shard)
+        for s in seeds
+    ]
+    groups = run_cells(cells, workers=workers)
+    out: Dict[Tuple[str, OperatingCondition, int], object] = {}
+    for s, group in zip(seeds, groups):
+        for cond in conditions:
+            for mech in mechanisms:
+                out[(mech, cond, s)] = group[(mech, cond, s)]
+    return out
+
+
+# -- compare_mechanisms fan-out -------------------------------------------
+#
+# Mechanisms of one compare share the trace, the expansion, and (prepass
+# GC) the FTL schedule.  Shipping those to workers by pickle would cost
+# more than it saves, so the parallel path relies on fork inheritance:
+# the parent materializes the shared views in _COMPARE_PAYLOAD, forks the
+# pool, and each task reads them back copy-on-write.  Without fork the
+# call simply runs inline — correctness never depends on the pool.
+# _COMPARE_LOCK serializes the payload's lifetime so concurrent
+# compare_mechanisms(..., workers>1) calls from different threads cannot
+# fork a pool against each other's views.
+
+_COMPARE_PAYLOAD = None
+_COMPARE_LOCK = threading.Lock()
+
+
+def _run_compare_mech(mechanism: str):
+    from repro.core.retry import RetryPolicy
+    from repro.flashsim.ssd import SSDSim
+
+    trace, expansion, schedule, cfg, condition, seed, shard = \
+        _COMPARE_PAYLOAD
+    sim = SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed + 7)
+    return sim.run(trace, expansion=expansion, schedule=schedule,
+                   shard=shard)
+
+
+def run_compare(
+    workload,
+    condition: OperatingCondition,
+    mechanisms: Sequence[str],
+    seed: int,
+    cfg: SSDConfig,
+    n_requests: Optional[int],
+    scheduler: Optional[str],
+    gc: Optional[str],
+    shard: bool,
+    workers: int,
+) -> Dict[str, "object"]:
+    """Parallel ``compare_mechanisms``: one worker per mechanism.
+
+    Requires the ``fork`` start method (shared views are inherited, not
+    pickled); otherwise — or on pool failure — falls back to the inline
+    run API.  Results match ``compare_mechanisms(..., workers=1)``
+    exactly, in the caller's mechanism order.
+    """
+    global _COMPARE_PAYLOAD
+    from repro.flashsim import ssd
+
+    mechanisms = tuple(mechanisms)
+    ctx = _mp_context()
+    if (workers <= 1 or len(mechanisms) <= 1 or _inline_forced()
+            or ctx.get_start_method() != "fork"):
+        return ssd.compare_mechanisms(
+            workload, condition, mechanisms=mechanisms, seed=seed, cfg=cfg,
+            n_requests=n_requests, scheduler=scheduler, gc=gc, shard=shard,
+        )
+    cfg = ssd._with_knobs(cfg, scheduler, gc)
+    trace = ssd.resolve_trace(workload, seed=seed, n_requests=n_requests)
+    expansion, schedule = ssd._shared_views(trace, cfg)
+    # Materialize the lazy list views now so forked children share them.
+    expansion.admission_lists
+    if schedule is not None:
+        schedule.admission_lists
+    prewarm_characterization(
+        [Cell("compare", workload, (condition,), mechanisms, seed, cfg)]
+    )
+    with _COMPARE_LOCK:
+        _COMPARE_PAYLOAD = (trace, expansion, schedule, cfg, condition,
+                            seed, shard)
+        try:
+            try:
+                pool = ProcessPoolExecutor(
+                    max_workers=min(workers, len(mechanisms)),
+                    mp_context=ctx,
+                )
+            except (OSError, PermissionError):
+                pool = None
+            if pool is None:
+                stats = [_run_compare_mech(m) for m in mechanisms]
+            else:
+                try:
+                    with pool:
+                        futures = [pool.submit(_run_compare_mech, m)
+                                   for m in mechanisms]
+                        stats = [f.result() for f in futures]
+                except BrokenExecutor:
+                    stats = [_run_compare_mech(m) for m in mechanisms]
+        finally:
+            _COMPARE_PAYLOAD = None
+    return dict(zip(mechanisms, stats))
+
+
+# -- canonical serialization ----------------------------------------------
+
+
+def sweep_cell_key(mechanism: str, condition: OperatingCondition,
+                   seed: int) -> str:
+    """Collision-free string key for one sweep cell (JSON dict key).
+
+    Condition floats are rendered with ``repr`` (exact round-trip), so
+    two distinct conditions can never collapse to one key.
+    """
+    return (f"{mechanism}|ret{condition.retention_days!r}"
+            f"|pec{condition.pec!r}|seed{seed}")
+
+
+def sweep_to_json(results: Dict) -> str:
+    """Canonical, byte-stable serialization of a sweep result dict.
+
+    Keys sort lexicographically and floats serialize via ``repr`` (exact
+    round-trip), so two sweeps are byte-identical iff every cell's
+    SimStats match exactly — the contract the worker-count determinism
+    tests and the CI bench-smoke lane assert.
+    """
+    payload = {
+        sweep_cell_key(m, cond, s): dataclasses.asdict(stats)
+        for (m, cond, s), stats in results.items()
+    }
+    return json.dumps(payload, sort_keys=True, indent=1) + "\n"
+
+
+# -- host fingerprint ------------------------------------------------------
+
+
+def host_fingerprint() -> Dict[str, object]:
+    """CPU model, core count, and interpreter/library versions.
+
+    Recorded alongside every absolute timing in ``BENCH_sim.json`` so a
+    number measured on one machine class can no longer masquerade as a
+    regression when re-measured on another (the PR 4 incident: a slower
+    session machine read as a ~35% engine slowdown).
+    """
+    cpu_model = None
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    cpu_model = line.split(":", 1)[1].strip()
+                    break
+    except OSError:
+        pass
+    return {
+        "cpu_model": cpu_model or platform.processor() or None,
+        "cpu_count": os.cpu_count(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+    }

@@ -29,6 +29,19 @@ policies ship:
     otherwise.  The bound is configurable through the registry name:
     ``"host_prio_aged:8"`` (default 16).
 
+``tokens``
+    Per-die **read/write token budgets** (deficit-round-robin style):
+    while both classes are backlogged, each dispatch round serves up to
+    ``r`` host reads and then up to ``w`` low-priority ops (host
+    programs, GC copy-back, erases), so reads keep priority but writes
+    are guaranteed ``w`` slots per ``r + w`` dispatches — a smoother
+    bandwidth split than ``host_prio_aged``'s all-or-nothing aging.
+    Budgets only meter *contention*: when one class is empty the other
+    is served immediately (work conservation) and the round resets, so
+    an uncontended die behaves exactly like FIFO-within-class.
+    Configured through the registry name: ``"tokens:6,2"``
+    (default ``tokens`` = 8 reads / 2 writes).
+
 ``preempt``
     ``host_prio`` ordering *plus* read-suspend firmware semantics: an
     in-flight GC operation yields the die to a waiting host read —
@@ -58,14 +71,18 @@ from collections import deque
 from typing import Callable, Dict, List, Sequence, Tuple
 
 #: Registered policy names, in documentation order.  ``host_prio_aged``
-#: also accepts a bound suffix (``"host_prio_aged:8"``).
+#: also accepts a bound suffix (``"host_prio_aged:8"``); ``tokens`` a
+#: budget suffix (``"tokens:6,2"``).
 SCHEDULERS: Tuple[str, ...] = (
-    "fcfs", "host_prio", "host_prio_aged", "preempt"
+    "fcfs", "host_prio", "host_prio_aged", "tokens", "preempt"
 )
 
 #: Host reads that dequeue past a waiting low-priority op before it ages
 #: to the front (``host_prio_aged`` default).
 DEFAULT_AGE_BOUND = 16
+
+#: Default per-round (read, write) dispatch budgets for ``tokens``.
+DEFAULT_TOKEN_BUDGETS = (8, 2)
 
 
 class FCFSQueue(deque):
@@ -153,6 +170,60 @@ class AgedHostPrioQueue(HostPrioQueue):
         return lo.popleft()
 
 
+class TokenBudgetQueue(HostPrioQueue):
+    """Two-class die queue metered by per-round read/write token budgets.
+
+    Deficit-round-robin over the two classes of :class:`HostPrioQueue`:
+    while **both** classes are backlogged, a round spends up to
+    ``r_budget`` read tokens (host reads, served first) and then up to
+    ``w_budget`` write tokens (everything else); when the write tokens
+    exhaust, the round resets.  Budgets meter contention only — a
+    dispatch finding one class empty serves the other immediately *and*
+    resets the round, so the budget bound is per contention interval:
+    once both classes are backlogged, at most ``r_budget`` reads dequeue
+    before a write does, and writes can never take more than
+    ``w_budget`` consecutive slots from waiting reads.
+
+    Work conservation is structural: ``pop_next`` always dispatches when
+    the queue is non-empty, tokens decide only *which class* goes first.
+    """
+
+    __slots__ = ("r_budget", "w_budget", "r_tok", "w_tok")
+
+    def __init__(self, host_read: Sequence[bool],
+                 r_budget: int = DEFAULT_TOKEN_BUDGETS[0],
+                 w_budget: int = DEFAULT_TOKEN_BUDGETS[1]):
+        super().__init__(host_read)
+        if r_budget < 1 or w_budget < 1:
+            raise ValueError(
+                f"token budgets must be >= 1, got ({r_budget}, {w_budget})"
+            )
+        self.r_budget = r_budget
+        self.w_budget = w_budget
+        self.r_tok = r_budget
+        self.w_tok = w_budget
+
+    def pop_next(self) -> int:
+        hi, lo = self.hi, self.lo
+        if not lo:                       # uncontended: serve, reset round
+            self.r_tok = self.r_budget
+            self.w_tok = self.w_budget
+            return hi.popleft()
+        if not hi:
+            self.r_tok = self.r_budget
+            self.w_tok = self.w_budget
+            return lo.popleft()
+        if self.r_tok > 0:               # contended: reads spend first
+            self.r_tok -= 1
+            return hi.popleft()
+        self.w_tok -= 1
+        op = lo.popleft()
+        if self.w_tok <= 0:              # write tokens spent: new round
+            self.r_tok = self.r_budget
+            self.w_tok = self.w_budget
+        return op
+
+
 @dataclasses.dataclass(frozen=True)
 class SchedulerPolicy:
     """One die-queue scheduling policy (registry entry).
@@ -184,11 +255,18 @@ _REGISTRY: Dict[str, SchedulerPolicy] = {
         "host_prio_aged", prioritized=True, preemptive=False,
         make_queue=AgedHostPrioQueue,
     ),
+    "tokens": SchedulerPolicy(
+        "tokens", prioritized=True, preemptive=False,
+        make_queue=TokenBudgetQueue,
+    ),
     "preempt": SchedulerPolicy(
         "preempt", prioritized=True, preemptive=True,
         make_queue=HostPrioQueue,
     ),
 }
+
+#: Policies that accept a ``:arg`` suffix (and what the arg means).
+_SUFFIXED = ("host_prio_aged", "tokens")
 
 
 def get_scheduler(name: str) -> SchedulerPolicy:
@@ -197,15 +275,21 @@ def get_scheduler(name: str) -> SchedulerPolicy:
     ``host_prio_aged`` accepts an optional starvation bound suffix —
     ``"host_prio_aged:8"`` ages a waiting GC/program op to the front
     after 8 bypassing host reads (default ``DEFAULT_AGE_BOUND``).
+    ``tokens`` accepts a ``:reads,writes`` budget suffix —
+    ``"tokens:6,2"`` serves up to 6 host reads then up to 2 low-priority
+    ops per contended round (default ``DEFAULT_TOKEN_BUDGETS``).
     """
     base, sep, arg = name.partition(":")
     policy = _REGISTRY.get(base)
-    if policy is None or (sep and (base != "host_prio_aged" or not arg)):
+    if policy is None or (sep and (base not in _SUFFIXED or not arg)):
         raise ValueError(
-            f"unknown scheduler {name!r} (choose from {SCHEDULERS}; "
-            f"only host_prio_aged takes a ':bound' suffix)"
+            f"unknown scheduler {name!r} (choose from {SCHEDULERS}; only "
+            f"host_prio_aged takes a ':bound' suffix and tokens a "
+            f"':reads,writes' suffix)"
         )
-    if arg:
+    if not arg:
+        return policy
+    if base == "host_prio_aged":
         try:
             bound = int(arg)
         except ValueError:
@@ -220,4 +304,25 @@ def get_scheduler(name: str) -> SchedulerPolicy:
             policy, name=name,
             make_queue=lambda host_read: AgedHostPrioQueue(host_read, bound),
         )
-    return policy
+    parts = arg.split(",")
+    try:
+        budgets = tuple(int(p) for p in parts)
+    except ValueError:
+        raise ValueError(
+            f"scheduler {name!r}: token budgets must be integers "
+            f"(expected 'tokens:reads,writes')"
+        ) from None
+    if len(budgets) != 2:
+        raise ValueError(
+            f"scheduler {name!r}: token budgets must be 'reads,writes' "
+            f"(two comma-separated integers)"
+        )
+    r, w = budgets
+    if r < 1 or w < 1:
+        raise ValueError(
+            f"scheduler {name!r}: token budgets must be >= 1"
+        )
+    return dataclasses.replace(
+        policy, name=name,
+        make_queue=lambda host_read: TokenBudgetQueue(host_read, r, w),
+    )

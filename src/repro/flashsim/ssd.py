@@ -44,7 +44,11 @@ This module is the orchestration layer of a four-module package:
     knob);
   * **this module** — policy/CDF setup, batched attempt sampling, run
     orchestration (:class:`SSDSim`), statistics, and the
-    ``simulate`` / ``compare_mechanisms`` / ``simulate_batch`` run APIs.
+    ``simulate`` / ``compare_mechanisms`` / ``simulate_batch`` run APIs;
+  * :mod:`repro.flashsim.runtime` — the parallel sweep executor behind
+    the run APIs' ``workers=`` knob (process-pool fan-out of grid cells
+    with deterministic assembly), complementing the engine's
+    per-channel ``shard=`` decomposition.
 
 The whole trace is expanded to flat per-page-op NumPy arrays up front
 (:func:`expand_trace`); attempt counts for every read page are sampled in
@@ -284,6 +288,7 @@ class SSDSim:
         self.cfg = cfg
         self.cond = condition
         self.policy = policy
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.events_processed = 0
         # AR² tR scale for this operating condition (characterized table).
@@ -367,15 +372,19 @@ class SSDSim:
             tr_scale=self._scale_for(wear_pec),
         )
 
-    def _draw_attempts(self, ptype_idx: int, wear_pec: float) -> int:
-        """One attempt count at (page type, block wear), from ``self.rng``.
+    def _draw_attempts(self, ptype_idx: int, wear_pec: float,
+                       rng: Optional[np.random.Generator] = None) -> int:
+        """One attempt count at (page type, block wear).
 
         The online-GC driver samples reads one at a time as the mapping
-        resolves them (wear is not known until the simulated instant).
+        resolves them (wear is not known until the simulated instant),
+        passing its per-die substream as ``rng`` so the draw order is a
+        die-local property (shard-invariant); ``None`` falls back to the
+        run-global ``self.rng``.
         """
         pt = PAGE_TYPE_ORDER[ptype_idx]
-        a = int(np.searchsorted(self._cdf_for(pt, wear_pec),
-                                self.rng.random()))
+        r = self.rng if rng is None else rng
+        a = int(np.searchsorted(self._cdf_for(pt, wear_pec), r.random()))
         return a if a > 1 else 1
 
     def _tr_for(self, ptype_idx: int, wear_pec: float) -> float:
@@ -433,6 +442,7 @@ class SSDSim:
         expansion: Optional[TraceExpansion] = None,
         schedule=None,
         validate: bool = False,
+        shard: bool = False,
     ) -> SimStats:
         """Simulate one trace.
 
@@ -442,8 +452,11 @@ class SSDSim:
         and no schedule is supplied, the configured GC mode decides:
         ``prepass`` builds the FTL schedule here; ``online`` attaches a
         :class:`repro.flashsim.gc_online.OnlineGC` driver to the event
-        core.  ``validate=True`` turns on the engine's work-conservation
-        checks (test instrumentation).
+        core.  ``shard=True`` runs the event core as one loop per channel
+        with a deterministic merge — bit-identical to the monolithic
+        default (see :mod:`repro.flashsim.engine`).  ``validate=True``
+        turns on the engine's work-conservation checks (test
+        instrumentation).
         """
         cfg, t = self.cfg, self.cfg.timing
         tprog = t.tprog_us
@@ -516,7 +529,7 @@ class SSDSim:
                                 attempts_np.tolist(), tr_np.tolist())
 
         res = run_event_core(cfg, pipelined, sched_policy, bufs, n_requests,
-                             online=online, validate=validate)
+                             online=online, validate=validate, shard=shard)
         self.events_processed = res.n_events
         self.last_gc_suspensions = res.gc_suspensions
         self.last_die_busy_us = float(sum(res.die_tot))
@@ -633,6 +646,7 @@ def simulate(
     engine: str = "array",
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
+    shard: bool = False,
 ) -> SimStats:
     """Convenience wrapper: one (workload, condition, mechanism) cell.
 
@@ -648,12 +662,21 @@ def simulate(
     building an ``SSDConfig`` by hand.  With GC enabled the trace runs
     through the page-mapping FTL (:mod:`repro.flashsim.ftl`) and the
     returned stats carry WA/GC counters; the reference engine predates
-    the FTL and the scheduler layer and rejects both.
+    the FTL and the scheduler layer and rejects both.  ``shard=True``
+    runs the array event core as one loop per channel (bit-identical;
+    :mod:`repro.flashsim.engine`); the reference engine rejects it.
     """
     cfg = _with_knobs(cfg, scheduler, gc)
     if trace is None:
         trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
+    if shard:
+        if engine != "array":
+            raise NotImplementedError(
+                "shard=True requires the array engine (the reference "
+                "engine predates the sharded event core)"
+            )
+        return sim.run(trace, shard=True)
     return sim.run(trace)
 
 
@@ -667,6 +690,8 @@ def compare_mechanisms(
     engine: str = "array",
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
+    shard: bool = False,
+    workers: int = 1,
 ) -> Dict[str, SimStats]:
     """All mechanisms over ONE shared trace (resolved once, expanded once).
 
@@ -678,21 +703,32 @@ def compare_mechanisms(
     so mechanism deltas isolate the retry policy.  (Online GC advances
     the FTL inside each run — mechanisms still share the trace and
     expansion, but GC timing legitimately responds to each mechanism's
-    latencies.)
+    latencies.)  ``shard=True`` selects the per-channel sharded event
+    core; ``workers > 1`` fans mechanisms over a process pool
+    (:func:`repro.flashsim.runtime.run_compare` — fork platforms only,
+    results identical to the inline run; the fan-out is array-engine
+    only, since it shares the array expansion/schedule with workers —
+    ``engine="reference"`` runs its mechanisms sequentially as before).
     """
+    if workers > 1 and engine == "array":
+        from repro.flashsim.runtime import run_compare
+
+        return run_compare(workload, condition, mechanisms, seed, cfg,
+                           n_requests, scheduler, gc, shard, workers)
     cfg = _with_knobs(cfg, scheduler, gc)
     trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     if engine != "array":
         return {
             m: simulate(workload, condition, m, seed, cfg, trace=trace,
-                        engine=engine)
+                        engine=engine, shard=shard)
             for m in mechanisms
         }
     expansion, schedule = _shared_views(trace, cfg)
     out = {}
     for m in mechanisms:
         sim = SSDSim(cfg, condition, RetryPolicy(m), seed=seed + 7)
-        out[m] = sim.run(trace, expansion=expansion, schedule=schedule)
+        out[m] = sim.run(trace, expansion=expansion, schedule=schedule,
+                         shard=shard)
     return out
 
 
@@ -708,6 +744,8 @@ def simulate_batch(
     engine: str = "array",
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
+    shard: bool = False,
+    workers: int = 1,
 ) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
     """Sweep (mechanism x condition x seed) cells for one workload.
 
@@ -721,8 +759,24 @@ def simulate_batch(
     deterministic file traces, seed variation comes from seeded
     transforms (e.g. ``?sample=0.9``) — without one, every seed replays
     the same trace (only attempt sampling varies, via ``seed + 7``).
+    ``shard=True`` selects the per-channel sharded event core;
+    ``workers > 1`` schedules seed groups across a process pool
+    (:func:`repro.flashsim.runtime.run_sweep`) — cell values and dict
+    order are identical for every worker count.
     Returns ``{(mechanism, condition, seed): SimStats}``.
     """
+    if shard and engine != "array":
+        raise NotImplementedError(
+            "shard=True requires the array engine (the reference engine "
+            "predates the sharded event core)"
+        )
+    if workers > 1:
+        from repro.flashsim.runtime import run_sweep
+
+        # Engine-agnostic: seed-group cells re-enter this function with
+        # workers=1 inside each worker, reference engine included.
+        return run_sweep(workload, conditions, mechanisms, seeds, cfg,
+                         n_requests, engine, scheduler, gc, shard, workers)
     cfg = _with_knobs(cfg, scheduler, gc)
     conditions = tuple(conditions)
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
@@ -737,7 +791,8 @@ def simulate_batch(
                 sim = _make_sim(cfg, cond, m, s + 7, engine)
                 if expansion is not None:
                     out[(m, cond, s)] = sim.run(trace, expansion=expansion,
-                                                schedule=schedule)
+                                                schedule=schedule,
+                                                shard=shard)
                 else:
                     out[(m, cond, s)] = sim.run(trace)
     return out

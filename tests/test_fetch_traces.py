@@ -1,0 +1,160 @@
+"""Offline tests for scripts/fetch_msr_traces.py (no network).
+
+The downloader itself needs SNIA connectivity, but everything around it
+— volume registry, destination resolution, the TOFU checksum manifest,
+pin verification, and the MSR-loader sanity parse — is pure local logic
+exercised here against the checked-in MSR-format excerpts.
+"""
+
+import gzip
+import importlib.util
+import json
+import shutil
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+spec = importlib.util.spec_from_file_location(
+    "fetch_msr_traces", REPO / "scripts" / "fetch_msr_traces.py"
+)
+fetch = importlib.util.module_from_spec(spec)
+sys.modules.setdefault("fetch_msr_traces", fetch)
+spec.loader.exec_module(fetch)
+
+
+EXCERPT = REPO / "tests" / "data" / "web_0.csv.gz"
+
+
+class TestVolumeRegistry:
+    def test_36_volumes_13_servers(self):
+        assert len(fetch.MSR_VOLUMES) == 36
+        servers = {v.rsplit("_", 1)[0] for v in fetch.MSR_VOLUMES}
+        assert len(servers) == 13
+        # the two volumes the benchmark replays are real MSR names
+        assert "web_0" in fetch.MSR_VOLUMES
+        assert "src1_1" in fetch.MSR_VOLUMES
+
+    def test_unknown_volume_rejected(self, capsys):
+        with pytest.raises(SystemExit):
+            fetch.main(["definitely_not_a_volume"])
+
+    def test_list_mode(self, capsys):
+        assert fetch.main(["--list"]) == 0
+        out = capsys.readouterr().out.split()
+        assert out == list(fetch.MSR_VOLUMES)
+
+
+class TestDestResolution:
+    def test_env_var_wins(self, monkeypatch, tmp_path):
+        monkeypatch.setenv("REPRO_TRACE_DIR", str(tmp_path / "tr"))
+        assert fetch.default_dest() == tmp_path / "tr"
+
+    def test_fallback_is_cwd_traces(self, monkeypatch, tmp_path):
+        monkeypatch.delenv("REPRO_TRACE_DIR", raising=False)
+        monkeypatch.chdir(tmp_path)
+        assert fetch.default_dest() == tmp_path / "traces"
+
+
+class TestChecksums:
+    def test_sha256_and_pin_verification(self, tmp_path):
+        p = tmp_path / "x.bin"
+        p.write_bytes(b"msr")
+        digest = fetch.sha256_file(p)
+        assert len(digest) == 64
+        fetch.verify_pin("x.bin", digest, {})                 # no pin: ok
+        fetch.verify_pin("x.bin", digest, {"x.bin": digest})  # match: ok
+        fetch.verify_pin("x.bin", digest,
+                         {"x.bin": digest.upper()})           # case-insens.
+        with pytest.raises(RuntimeError, match="SHA-256 mismatch"):
+            fetch.verify_pin("x.bin", digest, {"x.bin": "0" * 64})
+
+    def test_manifest_round_trip(self, tmp_path):
+        assert fetch.load_manifest(tmp_path) == {}
+        manifest = {"web_0.csv.gz": "ab" * 32}
+        fetch.save_manifest(tmp_path, manifest)
+        assert fetch.load_manifest(tmp_path) == manifest
+        assert (tmp_path / fetch.MANIFEST_NAME).exists()
+
+
+class TestSanityParse:
+    def test_parses_checked_in_excerpt(self):
+        n = fetch.sanity_parse(EXCERPT, max_rows=200)
+        assert 0 < n <= 200
+
+    def test_rejects_non_msr_content(self, tmp_path):
+        bad = tmp_path / "bad.csv.gz"
+        with gzip.open(bad, "wt") as f:
+            f.write("this,is,not\nan,msr,trace\n")
+        with pytest.raises(Exception):
+            fetch.sanity_parse(bad)
+
+    def test_gzip_detection(self, tmp_path):
+        assert fetch.is_gzip(EXCERPT)
+        plain = tmp_path / "plain.csv"
+        plain.write_text("128166372003061629,web,0,Read,0,512,100\n")
+        assert not fetch.is_gzip(plain)
+
+    def test_recompress_is_deterministic(self, tmp_path):
+        """Identical CSV bytes must gzip to identical archive bytes
+        (mtime=0, no name in the header) or the SHA-256 manifest would
+        spuriously flag clean re-downloads as corrupt."""
+        row = "128166372003061629,web,0,Read,0,512,100\n"
+        a = tmp_path / "a.csv"
+        b = tmp_path / "b.csv"
+        a.write_text(row * 50)
+        b.write_text(row * 50)
+        fetch.recompress_csv(a)
+        fetch.recompress_csv(b)
+        assert fetch.is_gzip(a)
+        assert fetch.sha256_file(a) == fetch.sha256_file(b)
+        with gzip.open(a, "rt") as f:
+            assert f.read() == row * 50
+
+    def test_recompress_rejects_html(self, tmp_path):
+        page = tmp_path / "login.csv"
+        page.write_text("<html>please sign in</html>")
+        with pytest.raises(RuntimeError, match="neither gzip nor MSR"):
+            fetch.recompress_csv(page)
+        assert page.read_text().startswith("<html>")  # left untouched
+
+
+class TestVerifyOnly:
+    """--verify-only: hash + parse local files, no network, TOFU pins."""
+
+    def test_verify_only_pins_and_detects_corruption(self, tmp_path,
+                                                     monkeypatch, capsys):
+        dest = tmp_path / "traces"
+        dest.mkdir()
+        shutil.copy(EXCERPT, dest / "web_0.csv.gz")
+        assert fetch.main(["web_0", "--verify-only",
+                           "--dest", str(dest)]) == 0
+        manifest = fetch.load_manifest(dest)
+        assert "web_0.csv.gz" in manifest
+        # second verification against the now-pinned digest passes
+        assert fetch.main(["web_0", "--verify-only",
+                           "--dest", str(dest)]) == 0
+        # corrupt the file: the pinned manifest digest must catch it
+        with gzip.open(dest / "web_0.csv.gz", "wt") as f:
+            f.write("128166372003061629,web,0,Read,0,512,100\n")
+        assert fetch.main(["web_0", "--verify-only",
+                           "--dest", str(dest)]) == 1
+        assert "FAILED" in capsys.readouterr().err
+
+    def test_verify_only_missing_file(self, tmp_path, capsys):
+        dest = tmp_path / "empty"
+        dest.mkdir()
+        assert fetch.main(["web_0", "--verify-only",
+                           "--dest", str(dest)]) == 1
+
+    def test_checksum_file_pins(self, tmp_path):
+        dest = tmp_path / "traces"
+        dest.mkdir()
+        shutil.copy(EXCERPT, dest / "web_0.csv.gz")
+        pins = {"web_0.csv.gz": "0" * 64}
+        pin_file = tmp_path / "pins.json"
+        pin_file.write_text(json.dumps(pins))
+        assert fetch.main(["web_0", "--verify-only", "--dest", str(dest),
+                           "--checksum-file", str(pin_file)]) == 1
