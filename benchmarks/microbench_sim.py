@@ -31,7 +31,7 @@ numbers are machine-dependent, every file also records (PR 5):
     should use ``rel_throughput`` and ``host_factor``-normalized
     numbers, never raw wall times.
 
-Four sweeps ride along:
+Five sweeps ride along:
 
   * **claim cells** (PR 3): the paper's headline reductions (PR²+AR² vs
     baseline @ aged; SOTA+PR²+AR² vs SOTA @ modest) re-measured as
@@ -50,7 +50,14 @@ Four sweeps ride along:
     PR²/AR² with prepass GC.  Seed variation comes from an 0.85
     Bernoulli subsample per seed (deterministic files have no seed of
     their own), reported as mean ± 95% CI; the acceptance is that every
-    mechanism produces finite stats and the FTL engages (WA > 1).
+    mechanism produces finite stats and the FTL engages (WA > 1);
+  * **fault cells** (PR 6): read-dominant profiles @ aged under the
+    seeded fault model (:mod:`repro.flashsim.faults`) across a
+    ``mispredict_scale`` ladder — the AR² misprediction-rate vs
+    latency-win tradeoff (mean ± 95% CI over seeds) plus the
+    recovery-latency p99.  The acceptance: mispredictions actually fire
+    at the derived rate, the win erodes (never inverts) as the rate
+    grows, and nothing is unrecoverable at the paper-default ECC margin.
 
 The claim/GC/scheduler/trace sweeps all execute through the parallel
 sweep runtime (:mod:`repro.flashsim.runtime`); ``--workers N`` fans
@@ -88,7 +95,8 @@ import time
 import numpy as np
 
 from repro.core.retry import RetryPolicy
-from repro.flashsim.config import DEFAULT_SSD, GCConfig, SSDConfig
+from repro.flashsim.config import (DEFAULT_SSD, FaultConfig, GCConfig,
+                                   SSDConfig)
 from repro.flashsim.engine_ref import SSDSimRef
 from repro.flashsim.runtime import Cell, host_fingerprint, run_cells
 from repro.flashsim.ssd import (
@@ -547,6 +555,81 @@ def bench_trace_cell(spec, cond, seeds, workers=1):
     return row
 
 
+# -- fault cells: AR² misprediction rate vs latency win -------------------
+
+#: Multipliers on the derived AR² misprediction probability.  0.0 is the
+#: no-misprediction upper bound on the AR² win; the derived rate (1.0)
+#: is the paper-realistic point; 4.0 stresses the tradeoff.
+FAULT_MISPREDICT_SCALES = (0.0, 1.0, 4.0)
+
+
+def bench_fault_cell(w, cond, n_requests, seeds, workers=1):
+    """AR² misprediction-rate vs latency-win tradeoff, mean ± 95% CI.
+
+    For each ``mispredict_scale`` the paper's combined mechanism
+    (pr2ar2) runs against baseline under the seeded fault model: every
+    misprediction costs one extra nominal-tR re-read on the die, so
+    rising scales erode the reduced-tR latency win.  Uncorrectable
+    reads stay on the *derived* ECC probability — the acceptance being
+    that nothing is lost at the paper-default margin
+    (``unrecoverable == 0``).  ``recovery_p99_us`` is the p99 response
+    over recovery-affected requests.  One compare cell per
+    (scale, seed), scheduled through the sweep runtime (``workers``).
+    """
+    w = dataclasses.replace(w, n_requests=n_requests)
+    mechs = ("baseline", "pr2ar2")
+    row = {
+        "workload": w.name,
+        "condition": cond.label(),
+        "mechanisms": list(mechs),
+        "n_requests": n_requests,
+        "n_seeds": len(seeds),
+        "mispredict_scales": list(FAULT_MISPREDICT_SCALES),
+    }
+    cells = [
+        Cell("compare", w, (cond,), mechs, s,
+             faults=FaultConfig(mispredict_scale=scale))
+        for scale in FAULT_MISPREDICT_SCALES
+        for s in seeds
+    ]
+    t0 = time.perf_counter()
+    results = iter(run_cells(cells, workers=workers))
+    unrecoverable_total = 0
+    win_by_scale = {}
+    for scale in FAULT_MISPREDICT_SCALES:
+        rate, win, rec_p99, mis = [], [], [], []
+        for s in seeds:
+            grid = next(results)
+            st, base = grid["pr2ar2"], grid["baseline"]
+            rate.append(st.mispredicted_reads / st.n_requests)
+            win.append(1.0 - st.mean_us / base.mean_us)
+            rec_p99.append(st.recovery_p99_us)
+            mis.append(st.mispredicted_reads)
+            unrecoverable_total += st.unrecoverable + base.unrecoverable
+        rm, rh = mean_ci95(rate)
+        wm, wh = mean_ci95(win)
+        win_by_scale[scale] = wm
+        row[f"scale_{scale:g}"] = {
+            "mispredict_rate_mean": round(rm, 5),
+            "mispredict_rate_ci95": round(rh, 5),
+            "mispredicted_reads_mean": round(float(np.mean(mis)), 1),
+            "latency_win_mean": round(wm, 4),
+            "latency_win_ci95": round(wh, 4),
+            "recovery_p99_us_mean": round(float(np.mean(rec_p99)), 1),
+        }
+    row["wall_s"] = round(time.perf_counter() - t0, 3)
+    row["unrecoverable_total"] = unrecoverable_total
+    row["ok_unrecoverable_zero"] = bool(unrecoverable_total == 0)
+    row["ok_mispredicted_fired"] = bool(
+        row["scale_1"]["mispredicted_reads_mean"] > 0
+    )
+    row["ok_win_erodes"] = bool(
+        win_by_scale[FAULT_MISPREDICT_SCALES[0]]
+        >= win_by_scale[FAULT_MISPREDICT_SCALES[-1]]
+    )
+    return row
+
+
 # -- parallel-sweep cells: the runtime's workers speedup ------------------
 
 
@@ -704,6 +787,25 @@ def main():
                 f"WA={row['wa_mean']:.2f} ok={row['ok_finite']}"
             )
 
+    fault_rows = []
+    fprofiles = [w for w in PROFILES if w.read_dominant]
+    fprofiles = fprofiles[:1] if args.quick else fprofiles[:2]
+    for w in fprofiles:
+        row = bench_fault_cell(w, AGED, n, seeds, workers=workers)
+        fault_rows.append(row)
+        d = row["scale_1"]
+        print(
+            f"FAULT {w.name:10s} @ {row['condition']:>10s}: mispredict "
+            f"{100 * d['mispredict_rate_mean']:.2f}%"
+            f"±{100 * d['mispredict_rate_ci95']:.2f} -> win "
+            f"{100 * d['latency_win_mean']:.1f}%"
+            f"±{100 * d['latency_win_ci95']:.1f} "
+            f"(clean {100 * row['scale_0']['latency_win_mean']:.1f}%, "
+            f"x4 {100 * row['scale_4']['latency_win_mean']:.1f}%) "
+            f"rec_p99 {d['recovery_p99_us_mean']:.0f}us "
+            f"ok={row['ok_unrecoverable_zero'] and row['ok_win_erodes']}"
+        )
+
     parallel_row = None
     if workers > 1:
         t0 = time.perf_counter()
@@ -783,13 +885,26 @@ def main():
         )
         if trace_carried:
             summary["trace_cells_carried"] = True  # from a previous run
+    if fault_rows:
+        summary["fault_acceptance_ok"] = all(
+            r["ok_unrecoverable_zero"] and r["ok_mispredicted_fired"]
+            and r["ok_win_erodes"]
+            for r in fault_rows
+        )
+        summary["fault_unrecoverable_total"] = sum(
+            r["unrecoverable_total"] for r in fault_rows
+        )
+        summary["fault_win_derived_mean"] = round(
+            float(np.mean([r["scale_1"]["latency_win_mean"]
+                           for r in fault_rows])), 4,
+        )
 
     out = {"benchmark": "flashsim-des-engine",
            "host": host_fingerprint(),
            "summary": summary,
            "cells_detail": rows, "claim_cells": claim_rows,
            "gc_cells": gc_rows, "sched_cells": sched_rows,
-           "trace_cells": trace_rows}
+           "trace_cells": trace_rows, "fault_cells": fault_rows}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

@@ -48,11 +48,14 @@ from __future__ import annotations
 import argparse
 import gzip
 import hashlib
+import http.client
 import json
 import os
+import random
 import shutil
 import sys
 import tempfile
+import time
 import urllib.error
 import urllib.request
 from pathlib import Path
@@ -159,13 +162,56 @@ def sanity_parse(path: Path, max_rows: int = 1000) -> int:
     return len(trace.arrival_us)
 
 
-def download(url: str, out_path: Path, timeout: float = 60.0) -> None:
-    req = urllib.request.Request(
-        url, headers={"User-Agent": "repro-flashsim-trace-fetch/1.0"}
-    )
-    with urllib.request.urlopen(req, timeout=timeout) as resp, \
-            open(out_path, "wb") as out:
-        shutil.copyfileobj(resp, out)
+def download(url: str, out_path: Path, timeout: float = 60.0,
+             max_retries: int = 4, backoff_s: float = 1.0,
+             jitter: float = 0.25, sleep=time.sleep) -> None:
+    """Download ``url`` to ``out_path`` with bounded retry and resume.
+
+    Transient failures — connection errors/resets, timeouts, truncated
+    bodies, HTTP 408/429/5xx — are retried up to ``max_retries`` times
+    with exponential backoff (``backoff_s * 2**attempt``) plus up to
+    ``jitter`` proportional random jitter (decorrelates CI jobs
+    hammering the same mirror).  Bytes already on disk are kept between
+    attempts and the retry asks the server to resume with a ``Range``
+    header: a 206 appends from where the failure cut off, a 200 means
+    the server ignored Range and the file restarts from scratch, and a
+    416 (range not satisfiable — stale partial) drops the partial and
+    restarts clean.  Other 4xx responses are permanent and raise
+    immediately.  ``sleep`` is injectable for tests.
+    """
+    attempt = 0
+    while True:
+        resume_from = out_path.stat().st_size if out_path.exists() else 0
+        headers = {"User-Agent": "repro-flashsim-trace-fetch/1.0"}
+        if resume_from > 0:
+            headers["Range"] = f"bytes={resume_from}-"
+        req = urllib.request.Request(url, headers=headers)
+        try:
+            with urllib.request.urlopen(req, timeout=timeout) as resp:
+                status = getattr(resp, "status", 200)
+                mode = "ab" if (resume_from > 0 and status == 206) else "wb"
+                with open(out_path, mode) as out:
+                    shutil.copyfileobj(resp, out)
+            return
+        except urllib.error.HTTPError as e:
+            if e.code == 416 and resume_from > 0:
+                # The partial can't be extended (the file changed or
+                # shrank on the mirror): drop it and restart without
+                # Range.  No attempt consumed — with no partial left,
+                # the next loop cannot 416 again.
+                out_path.unlink()
+                continue
+            if e.code < 500 and e.code not in (408, 429):
+                raise                   # permanent (404, 403, 416, ...)
+            err: Exception = e
+        except (urllib.error.URLError, http.client.HTTPException,
+                ConnectionError, TimeoutError) as e:
+            err = e
+        attempt += 1
+        if attempt > max_retries:
+            raise err
+        sleep(backoff_s * (2 ** (attempt - 1))
+              * (1.0 + jitter * random.random()))
 
 
 def is_gzip(path: Path) -> bool:
@@ -218,12 +264,18 @@ def fetch_volume(name: str, dest: Path, base_url: str, pins: dict,
         print(f"  {fname}: already present ({digest[:12]}…), verified")
         return final
     url = f"{base_url.rstrip('/')}/{fname}"
-    tmp_fd, tmp_name = tempfile.mkstemp(prefix=f".{fname}.", dir=dest)
-    os.close(tmp_fd)
-    tmp = Path(tmp_name)
+    # Deterministic partial name so an interrupted run's bytes are
+    # resumed (Range request) by the next invocation.  The partial is
+    # kept only on *network* failure; content that fails integrity or
+    # parsing is dropped so a bad mirror revision can't poison resumes.
+    tmp = dest / f".{fname}.part"
+    if force and tmp.exists():
+        tmp.unlink()
+    verb = "resuming" if tmp.exists() and tmp.stat().st_size else \
+        "downloading"
+    print(f"  {fname}: {verb} {url}")
+    download(url, tmp)
     try:
-        print(f"  {fname}: downloading {url}")
-        download(url, tmp)
         if not is_gzip(tmp):
             # Mirror served the uncompressed CSV: gzip it (reproducibly)
             # so the name matches what the registry's loaders expect.
@@ -234,13 +286,14 @@ def fetch_volume(name: str, dest: Path, base_url: str, pins: dict,
         if not skip_parse:
             n = sanity_parse(tmp)
             print(f"  {fname}: parsed {n} head requests OK")
-        tmp.replace(final)
-        manifest[fname] = digest
-        print(f"  {fname}: done (sha256 {digest[:12]}…)")
-        return final
-    finally:
+    except Exception:
         if tmp.exists():
             tmp.unlink()
+        raise
+    tmp.replace(final)
+    manifest[fname] = digest
+    print(f"  {fname}: done (sha256 {digest[:12]}…)")
+    return final
 
 
 def main(argv=None) -> int:

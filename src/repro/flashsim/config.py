@@ -75,6 +75,85 @@ class GCConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """Device fault-injection knobs (see :mod:`repro.flashsim.faults`).
+
+    Attached via ``SSDConfig.faults`` (or the run APIs' ``faults=`` knob);
+    ``None`` — the default everywhere — disables the whole failure path
+    and keeps runs bit-identical to a fault-free build.  All injection is
+    seeded and deterministic: draws come from per-die RNG substreams
+    seeded ``(run seed, salt, die)``, separate from the attempt-sampling
+    streams, so identical ``(seed, FaultConfig)`` produce identical
+    failure sets under any ``shard=`` / ``workers=`` setting — and
+    enabling faults never changes which retry-attempt counts are drawn.
+
+    Probabilities default to *derived* values: the uncorrectable-read
+    probability comes from :func:`repro.core.ecc.page_fail_probability`
+    at the block's wear-resolved condition, and the AR² misprediction
+    probability from the mean final-step margin shaved by the reduced-tR
+    sense.  Explicit ``*_prob`` overrides replace the derivation (fault-
+    matrix sweeps); ``*_scale`` multiplies whichever is in effect.
+    """
+
+    #: Probability a read's *final* retry step is uncorrectable.  None
+    #: derives it from the ECC page-failure model at the block's
+    #: wear-resolved condition (effectively ~0 at paper-default margins).
+    uncorrectable_prob: float | None = None
+    #: Multiplier on the uncorrectable probability (derived or explicit).
+    uncorrectable_scale: float = 1.0
+    #: Probability an AR² reduced-tR read exceeds the shaved ECC margin
+    #: and must re-read at nominal tR.  None derives it from the mean
+    #: final-step margin at the reduced scale; only adaptive-tR policies
+    #: sensing below scale 1.0 can mispredict.
+    mispredict_prob: float | None = None
+    #: Multiplier on the misprediction probability.
+    mispredict_scale: float = 1.0
+    #: Escalation re-reads (full-strength, nominal tR) attempted before
+    #: the controller falls back to a superpage-parity rebuild.
+    escalation_attempts: int = 4
+    #: Rebuild an uncorrectable page from its superpage stripe peers
+    #: (real reads on the other dies of the channel).  False counts the
+    #: read as unrecoverable once escalation is exhausted.
+    parity_rebuild: bool = True
+    #: Retire the failing block after a parity rebuild (FTL relocates its
+    #: valid pages; the block never returns to the free pool).
+    retire_blocks: bool = True
+    #: Fail-slow dies: ``((die, multiplier), ...)`` — the die's sense and
+    #: program/erase durations are multiplied (>= 1.0).
+    failslow_dies: tuple[tuple[int, float], ...] = ()
+    #: Probability a host program fails and is retried (+tPROG latency).
+    program_fail_prob: float = 0.0
+    #: Probability an erase fails verification: the block is retired
+    #: instead of returning to the free pool (online GC only).
+    erase_fail_prob: float = 0.0
+    #: Seed salt separating fault streams from attempt-sampling streams.
+    salt: int = 0x5EED
+
+    def __post_init__(self):
+        for name in ("uncorrectable_prob", "mispredict_prob"):
+            v = getattr(self, name)
+            if v is not None and not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1] or None, got {v}")
+        for name in ("program_fail_prob", "erase_fail_prob"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        for name in ("uncorrectable_scale", "mispredict_scale"):
+            if getattr(self, name) < 0.0:
+                raise ValueError(f"{name} must be >= 0, got "
+                                 f"{getattr(self, name)}")
+        if self.escalation_attempts < 1:
+            raise ValueError("escalation_attempts must be >= 1")
+        for d, m in self.failslow_dies:
+            if d < 0:
+                raise ValueError(f"failslow die id must be >= 0, got {d}")
+            if m < 1.0:
+                raise ValueError(
+                    f"failslow multiplier must be >= 1.0 (fail-SLOW), got {m}"
+                )
+
+
+@dataclasses.dataclass(frozen=True)
 class SSDConfig:
     """High-end NVMe SSD organization, matching the paper's MQSim setup.
 
@@ -107,6 +186,10 @@ class SSDConfig:
     #: per contended round, e.g. ``"tokens:6,2"``), or ``"preempt"``
     #: (host_prio + read-suspend of in-flight GC ops).
     scheduler: str = "fcfs"
+    #: Device fault model (:mod:`repro.flashsim.faults`).  ``None`` (the
+    #: default) disables fault injection entirely — no failure draws, no
+    #: recovery traffic, bit-identical to a fault-free run.
+    faults: FaultConfig | None = None
 
     def __post_init__(self):
         if self.n_channels < 1 or self.dies_per_channel < 1:

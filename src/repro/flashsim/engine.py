@@ -125,6 +125,13 @@ class OpBuffers:
     resid: List[float]        # residual duration of a suspended op
     susp: List[bool]          # suspended flag (preempt)
     host_read: Optional[List[bool]] = None
+    #: Fault recovery (None without a fault model): extra full-strength
+    #: re-reads appended after the op's last sampled attempt — the AR²
+    #: misprediction re-read and/or uncorrectable-escalation attempts —
+    #: executed as a serial continuation at ``xtr`` (nominal tR) with the
+    #: die held throughout.
+    xa: Optional[List[int]] = None
+    xtr: Optional[List[float]] = None
 
 
 @dataclasses.dataclass
@@ -239,6 +246,7 @@ def _run_shard(
     op_held, op_end, op_resid, op_susp = (
         bufs.held, bufs.end, bufs.resid, bufs.susp
     )
+    op_xa, op_xtr = bufs.xa, bufs.xtr
     P = len(adm_t)
 
     preempt = policy.preemptive
@@ -452,6 +460,16 @@ def _run_shard(
                     if done > tnext:
                         tnext = done
                     replace(heap, (tnext, seqc | op << 2 | _EV_COPY))
+            elif op_xa is not None and op_xa[op] > 0:
+                # Recovery continuation: this attempt's decode *failed*
+                # (misprediction or uncorrectable — known at done+tecc).
+                # The firmware re-senses serially at full strength; the
+                # die stays held for the whole ladder.
+                op_rem[op] = op_xa[op]
+                op_xa[op] = 0
+                op_tr[op] = op_xtr[op]
+                replace(heap, (done + tecc + op_tr[op],
+                               seqc | op << 2 | _EV_NEXT))
             else:
                 rid = op_rid[op]
                 if rid >= 0:            # GC reads complete no request
@@ -495,6 +513,14 @@ def _run_shard(
                 else:
                     replace(heap, (done + tecc + op_tr[op],
                                    seqc | op << 2 | _EV_NEXT))
+            elif op_xa is not None and op_xa[op] > 0:
+                # Recovery continuation (see _EV_COPY): extra serial
+                # full-strength re-reads after the failed final attempt.
+                op_rem[op] = op_xa[op]
+                op_xa[op] = 0
+                op_tr[op] = op_xtr[op]
+                replace(heap, (done + tecc + op_tr[op],
+                               seqc | op << 2 | _EV_NEXT))
             else:
                 rid = op_rid[op]
                 if rid >= 0:            # GC reads complete no request

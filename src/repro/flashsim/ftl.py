@@ -120,6 +120,7 @@ class FTLStats:
     pages_per_block: int       # physical geometry actually used (pages)
     footprint_pages: int       # distinct logical pages referenced (pages)
     max_block_pe: float        # highest per-block added wear (P/E cycles)
+    blocks_retired: int = 0    # bad blocks retired (never return to pool)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -252,6 +253,10 @@ class PageMapFTL:
         self.gc_page_progs = 0
         self.blocks_erased = 0
         self.gc_invocations = 0
+        #: Bad blocks taken out of service (:meth:`retire_block` /
+        #: :meth:`retire_erase_failed`) — never re-enter any free pool.
+        self.retired: Set[int] = set()
+        self.blocks_retired = 0
         #: (die, victim, gc_frontier_at_selection) per collection — lets
         #: tests assert GC never evicts the block it compacts into.
         self.gc_log: List[Tuple[int, int, int]] = []
@@ -377,6 +382,71 @@ class PageMapFTL:
         """Return an erased (defer_free) victim to ``die``'s free pool."""
         self.free[die].append(block)
 
+    # -- bad-block retirement ------------------------------------------------
+
+    def retire_block(self, die: int, block: int) -> bool:
+        """Take a sealed block out of service, relocating its valid pages.
+
+        The controller's end-of-ladder action after a parity rebuild: the
+        block's valid pages are compacted through the GC frontier (page
+        read + reprogram events, drained like GC traffic) and the block
+        never re-enters the free pool.  Returns False — retirement is
+        refused — when the block is not a retirable sealed block of
+        ``die`` (frontiers and in-flight-erase victims are not), is
+        already retired, or when relocating it would consume the die's
+        last free block (a wedged device is worse than a bad block; the
+        block then stays in service and may be retried later).
+
+        Die-partitioned like every other mutation here: only ``die``'s
+        structures are touched, so the sharded engine's contract holds.
+        """
+        ppb = self.ppb
+        if block in self.retired:
+            return False
+        if block // self.blocks_per_die != die:
+            return False
+        if block not in self.sealed[die]:
+            return False   # frontier / erasing / already free: not ours
+        v = int(self.valid[block])
+        gdst = self.gc_active[die]
+        room = 0 if gdst < 0 else ppb - int(self.wp[gdst])
+        ha = self.active[die]
+        if ha >= 0:
+            room += ppb - int(self.wp[ha])
+        # Keep one free block in reserve: retirement must never eat the
+        # last allocation room a stalled host write is waiting on.
+        if v > room + max(len(self.free[die]) - 1, 0) * ppb:
+            return False
+        base = block * ppb
+        wear = float(self.erases[block]) * self.gc.pec_per_erase
+        for slot in range(int(self.wp[block])):
+            lpn = int(self.p2l[base + slot])
+            if lpn < 0:
+                continue
+            self._events.append((OP_GC_READ, die, lpn % 3, wear, block))
+            self.gc_page_reads += 1
+            self._map_write(lpn, gc_stream=True)
+            self._events.append((OP_GC_PROG, die, lpn % 3, 0.0, block))
+            self.gc_page_progs += 1
+        self.sealed[die].discard(block)
+        self.wp[block] = ppb      # never allocatable again
+        self.valid[block] = 0
+        self.retired.add(block)
+        self.blocks_retired += 1
+        return True
+
+    def retire_erase_failed(self, die: int, block: int) -> None:
+        """Retire a block whose erase failed verification.
+
+        Called by the online driver *instead of* :meth:`erase_complete`:
+        the block was already compacted and erased by :meth:`_collect`
+        (no valid data on it), so retirement is just never returning it
+        to ``die``'s free pool.
+        """
+        self.wp[block] = self.ppb
+        self.retired.add(block)
+        self.blocks_retired += 1
+
     def _maybe_gc(self, die: int) -> None:
         if not self.auto_gc:
             return
@@ -438,6 +508,7 @@ class PageMapFTL:
             pages_per_block=self.ppb,
             footprint_pages=self.footprint,
             max_block_pe=float(self.erases.max()) * self.gc.pec_per_erase,
+            blocks_retired=self.blocks_retired,
         )
 
 

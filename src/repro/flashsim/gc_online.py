@@ -89,10 +89,16 @@ class OnlineGC:
     ``assert_drained()``           end-of-run wedge check.
     """
 
-    def __init__(self, cfg: SSDConfig, expansion, sim):
+    def __init__(self, cfg: SSDConfig, expansion, sim, faults=None):
         gc = cfg.gc
         self.cfg = cfg
         self.sim = sim
+        #: Optional :class:`repro.flashsim.faults.FaultModel`.  Online mode
+        #: draws the recovery ladder at the simulated admission instants
+        #: and runs *real* FTL bad-block retirement; draws stay die-local
+        #: (the fault model's streams are per-die), preserving the shard
+        #: contract.
+        self.faults = faults
         self.ftl = PageMapFTL(cfg, lpns=expansion.page_id,
                               auto_gc=False, defer_free=True)
         self.watermark = (
@@ -152,8 +158,58 @@ class OnlineGC:
             wear = 0.0
             self.prefill_skips += 1
         pt = self._ptype[op]
-        return (self.sim._draw_attempts(pt, wear, rng=self._rngs[d]),
-                self.sim._tr_for(pt, wear))
+        a = self.sim._draw_attempts(pt, wear, rng=self._rngs[d])
+        tr = self.sim._tr_for(pt, wear)
+        fm = self.faults
+        if fm is not None:
+            mult = fm.die_mult(d)
+            tr *= mult
+            extra, rebuild, affected = fm.read_ladder(d, wear)
+            b = self.bufs
+            rid = b.rid[op]
+            if affected:
+                fm.outcome.affected_rids.add(rid)
+            if extra:
+                # Failed decodes re-read at full strength: the engine
+                # appends `extra` serial nominal-tR attempts after the
+                # op's last sampled attempt (die held throughout).
+                b.xa[op] = extra
+                b.xtr[op] = float(self.sim._tr_base[pt]) * mult
+            if rebuild:
+                self._parity_rebuild(d, pt, wear, rid, lpn)
+        return (a, tr)
+
+    def _parity_rebuild(self, d: int, pt: int, wear: float, rid: int,
+                        lpn: int) -> None:
+        """Escalation exhausted: rebuild the page from its superpage
+        stripe peers and retire the bad block.
+
+        Peer reads are injected as *real* page-ops on the other dies of
+        the channel, carrying the original request id (the request
+        completes only when the slowest peer's data is in — ``req_done``
+        is a max) and host-read priority under prioritized schedulers.
+        Retirement relocates the block's valid pages through the FTL's
+        GC frontier; the relocation traffic contends like GC copy-back.
+        """
+        fm = self.faults
+        sim = self.sim
+        peers = fm.rebuild_peers(d)
+        fm.rebuild_outcome(d, len(peers))
+        for dd in peers:
+            # Peer draws come from the *trigger* die's fault substream —
+            # die-local order, so sharding never reorders them (peers
+            # share the trigger's channel, hence its shard).
+            pa = sim._draw_attempts(pt, 0.0, rng=fm.rngs[d])
+            ptr = sim._tr_for(pt, 0.0) * fm.die_mult(dd)
+            self._inject_host_read(dd, rid, pa, ptr)
+        if fm.fc.retire_blocks:
+            ftl = self.ftl
+            ppn = ftl.l2p.get(lpn, -1)
+            if ppn >= 0 and ftl.retire_block(d, ppn // ftl.ppb):
+                fm.outcome.retired_blocks += 1
+                for kind, gd, pt2, w2, blk2 in ftl.drain_events():
+                    self._inject(kind, gd, pt2, w2, blk2)
+                self._check_watermark(d)
 
     def on_program_start(self, op: int, tm: float) -> bool:
         """Allocate the write's physical page at simulated program start.
@@ -172,6 +228,19 @@ class OnlineGC:
             return False
         self.ftl.host_write(self._lpn[op])
         self._check_watermark(d)
+        fm = self.faults
+        if fm is not None:
+            # Reached exactly once per op (stalled retries return False
+            # above): apply fail-slow stretch and draw a program failure
+            # (+tPROG for the internal reprogram).
+            b = self.bufs
+            mult = fm.die_mult(d)
+            if mult != 1.0:
+                b.dur[op] = b.dur[op] * mult
+            if fm.draw_program_fail(d):
+                fm.outcome.program_fails += 1
+                fm.outcome.affected_rids.add(b.rid[op])
+                b.dur[op] += self.tprog * mult
         return True
 
     def stall(self, op: int) -> None:
@@ -190,7 +259,22 @@ class OnlineGC:
                 f"online GC shard-scope violation: erase completion on "
                 f"die {d} outside the active shard"
             )
-        self.ftl.erase_complete(d, blk)
+        fm = self.faults
+        apply_fail = False
+        if fm is not None and fm.draw_erase_fail(d):
+            # The draw is always consumed (stream position is config-
+            # independent), but the failure is suppressed when this erase
+            # is the only reclaim a dry die's stalled writes wait on —
+            # losing it would wedge the device.  The guard reads only
+            # die-local state, so it is shard-invariant.
+            if self.ftl.free[d] or not self._stalled[d]:
+                apply_fail = True
+        if apply_fail:
+            fm.outcome.erase_fails += 1
+            fm.outcome.retired_blocks += 1
+            self.ftl.retire_erase_failed(d, blk)
+        else:
+            self.ftl.erase_complete(d, blk)
         self.inflight_erases[d] -= 1
         stalled = self._stalled[d]
         if stalled:
@@ -256,13 +340,15 @@ class OnlineGC:
             )
         is_read = kind == OP_GC_READ
         is_erase = kind == OP_ERASE
+        fm = self.faults
+        mult = 1.0 if fm is None else fm.die_mult(d)
         if is_read:
             a = sim._draw_attempts(pt, wear, rng=self._rngs[d])
-            tr = sim._tr_for(pt, wear)
+            tr = sim._tr_for(pt, wear) * mult
             dur = 0.0
         else:
             a, tr = 1, 0.0
-            dur = self.terase if is_erase else self.tprog
+            dur = (self.terase if is_erase else self.tprog) * mult
         b.rid.append(-1)
         b.die.append(d)
         b.ch.append(d % self.n_channels)
@@ -278,11 +364,44 @@ class OnlineGC:
         b.susp.append(False)
         if b.host_read is not None:
             b.host_read.append(False)
+        if b.xa is not None:
+            b.xa.append(0)
+            b.xtr.append(0.0)
         o = len(b.rid) - 1
         if is_erase:
             self._erase_block[o] = (d, blk)
             self.inflight_erases[d] += 1
         self.injected.append(o)
+
+    def _inject_host_read(self, d: int, rid: int, a: int, tr: float) -> None:
+        """Inject a parity-rebuild stripe-peer read: a real page-op on
+        ``d`` carrying the *original* request id (and host-read priority
+        under prioritized schedulers), admitted at the current sim time."""
+        b = self.bufs
+        if self._scope is not None and d not in self._scope:
+            raise AssertionError(
+                f"online GC shard-scope violation: rebuild read injected "
+                f"on die {d} outside the active shard"
+            )
+        b.rid.append(rid)
+        b.die.append(d)
+        b.ch.append(d % self.n_channels)
+        b.read.append(True)
+        b.erase.append(False)
+        b.dur.append(0.0)
+        b.a.append(a)
+        b.tr.append(tr)
+        b.rem.append(a)
+        b.held.append(0.0)
+        b.end.append(0.0)
+        b.resid.append(0.0)
+        b.susp.append(False)
+        if b.host_read is not None:
+            b.host_read.append(True)
+        if b.xa is not None:
+            b.xa.append(0)
+            b.xtr.append(0.0)
+        self.injected.append(len(b.rid) - 1)
 
     def stats(self):
         """FTL summary for SimStats (WA, GC traffic, wear)."""

@@ -53,17 +53,29 @@ bench-smoke lane: byte-identical output for any ``workers``.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import multiprocessing
 import os
 import platform
 import threading
-from concurrent.futures import BrokenExecutor, ProcessPoolExecutor
+import time
+from concurrent.futures import (
+    FIRST_COMPLETED,
+    BrokenExecutor,
+    ProcessPoolExecutor,
+    wait,
+)
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
+from repro.flashsim.config import (
+    DEFAULT_SSD,
+    FaultConfig,
+    OperatingCondition,
+    SSDConfig,
+)
 
 __all__ = [
     "Cell",
@@ -108,6 +120,7 @@ class Cell:
     scheduler: Optional[str] = None
     gc: Optional[str] = None
     shard: bool = False
+    faults: Optional[FaultConfig] = None
 
     def __post_init__(self):
         if self.kind not in ("simulate", "compare", "batch"):
@@ -140,20 +153,20 @@ def _run_cell(cell: Cell):
             cell.workload, cell.conditions[0], cell.mechanisms[0],
             seed=cell.seed, cfg=cell.cfg, n_requests=cell.n_requests,
             engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
-            shard=cell.shard,
+            shard=cell.shard, faults=cell.faults,
         )
     if cell.kind == "compare":
         return compare_mechanisms(
             cell.workload, cell.conditions[0], mechanisms=cell.mechanisms,
             seed=cell.seed, cfg=cell.cfg, n_requests=cell.n_requests,
             engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
-            shard=cell.shard,
+            shard=cell.shard, faults=cell.faults,
         )
     return simulate_batch(
         cell.workload, cell.conditions, mechanisms=cell.mechanisms,
         seeds=(cell.seed,), cfg=cell.cfg, n_requests=cell.n_requests,
         engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
-        shard=cell.shard,
+        shard=cell.shard, faults=cell.faults,
     )
 
 
@@ -192,39 +205,199 @@ def _inline_forced() -> bool:
     return os.environ.get("REPRO_SWEEP_INLINE", "0") == "1"
 
 
+# -- checkpoint journal ----------------------------------------------------
+
+
+def _encode_result(r):
+    """Cell result -> JSON-safe journal record (floats repr-round-trip)."""
+    from repro.flashsim.ssd import SimStats
+
+    if isinstance(r, SimStats):
+        return {"t": "stats", "v": dataclasses.asdict(r)}
+    if isinstance(r, dict):
+        if all(isinstance(k, str) for k in r):       # compare: {mech: stats}
+            return {"t": "mechs",
+                    "v": {m: dataclasses.asdict(s) for m, s in r.items()}}
+        return {"t": "cells",                        # batch: {(m, cond, s): stats}
+                "v": [[m, cond.retention_days, cond.pec, s,
+                       dataclasses.asdict(st)]
+                      for (m, cond, s), st in r.items()]}
+    raise TypeError(f"cell result of type {type(r).__name__} cannot be "
+                    f"journaled")
+
+
+def _decode_result(e):
+    from repro.flashsim.ssd import SimStats
+
+    t, v = e["t"], e["v"]
+    if t == "stats":
+        return SimStats(**v)
+    if t == "mechs":
+        return {m: SimStats(**d) for m, d in v.items()}
+    return {
+        (m, OperatingCondition(ret, pec), s): SimStats(**d)
+        for m, ret, pec, s, d in v
+    }
+
+
+class _Journal:
+    """Append-only JSONL checkpoint of completed cells.
+
+    Line 0 is a header carrying the *run key* — a hash over the cell
+    list's reprs — so a journal can only ever resume the exact sweep
+    that wrote it; any other cell list starts the file over.  Each
+    subsequent line records one completed cell ``{"i": index, "r":
+    encoded result}``, flushed as it lands, so a run killed mid-sweep
+    (even SIGKILL — the write syscall has happened) loses at most the
+    in-flight cells.  JSON floats round-trip exactly through ``repr``,
+    so a resumed sweep's assembled results — and its
+    :func:`sweep_to_json` — are byte-identical to an uninterrupted run.
+    A torn trailing line (killed mid-append) is ignored.
+    """
+
+    def __init__(self, path, cells: Sequence[Cell]):
+        self.path = os.fspath(path)
+        self.key = hashlib.sha256(
+            "\n".join(repr(c) for c in cells).encode()
+        ).hexdigest()
+        self.done: Dict[int, object] = {}
+        try:
+            with open(self.path) as f:
+                lines = f.read().splitlines()
+        except OSError:
+            lines = []
+        resumable = False
+        if lines:
+            try:
+                resumable = json.loads(lines[0]).get("run") == self.key
+            except ValueError:
+                resumable = False
+        if resumable:
+            for ln in lines[1:]:
+                try:
+                    ent = json.loads(ln)
+                    self.done[int(ent["i"])] = _decode_result(ent["r"])
+                except (ValueError, KeyError, TypeError):
+                    break                      # torn tail: drop it
+            self._f = open(self.path, "a")
+        else:
+            self._f = open(self.path, "w")
+            self._f.write(json.dumps({"run": self.key}) + "\n")
+            self._f.flush()
+
+    def record(self, i: int, result) -> None:
+        self._f.write(
+            json.dumps({"i": i, "r": _encode_result(result)}) + "\n"
+        )
+        self._f.flush()
+
+
+def _finish_inline(results: List, pending: Dict[int, Cell],
+                   jr: Optional[_Journal]) -> List:
+    """Run the leftover cells inline (in index order), journaling each."""
+    for i in sorted(pending):
+        r = _run_cell(pending[i])
+        results[i] = r
+        if jr is not None:
+            jr.record(i, r)
+    return results
+
+
 def run_cells(cells: Sequence[Cell], workers: int = 1,
-              prewarm: bool = True) -> List:
+              prewarm: bool = True, journal=None,
+              cell_timeout: Optional[float] = None,
+              max_retries: int = 2, backoff_s: float = 0.1) -> List:
     """Execute ``cells``; results are returned in input order.
 
     ``workers <= 1`` runs inline (no pool, no pickling — the exact
     ``workers=1`` code path).  Larger counts fan cells out over a
     process pool; results are still assembled positionally, so the
-    output is independent of completion order.  Pool-*infrastructure*
-    failures (no semaphores at construction, workers dying —
-    ``BrokenExecutor``) fall back to inline execution; an exception
-    raised *by a cell itself* propagates unchanged — it would fail
-    inline too, so re-running the sweep would only duplicate the work.
+    output is independent of completion order.
+
+    Self-healing: pool-*infrastructure* failures never cost completed
+    work.  Results are harvested per-cell as futures finish, so when
+    workers die (``BrokenExecutor`` — fork breakage, an OOM-killed or
+    SIGKILLed child) only the genuinely unfinished cells are retried —
+    on a fresh pool, up to ``max_retries`` times with exponential
+    backoff (``backoff_s * 2**attempt``), then inline as the last
+    resort.  ``cell_timeout`` (seconds) bounds the wait for *progress*:
+    if no cell completes within it, the pool is declared stalled and
+    abandoned (a hung worker cannot hang the sweep) and the remainder
+    is retried the same way.  An exception raised *by a cell itself*
+    propagates unchanged — it would fail inline too, so retrying would
+    only duplicate the work.
+
+    ``journal`` (a path) checkpoints every completed cell to an
+    append-only JSONL file keyed by the cell list: a killed sweep
+    re-run with the same cells and journal skips the recorded cells and
+    returns byte-identical results (:class:`_Journal`).
     """
     cells = list(cells)
-    workers = min(int(workers), len(cells))
+    jr = _Journal(journal, cells) if journal is not None else None
+    results: List = [None] * len(cells)
+    pending: Dict[int, Cell] = {}
+    for i, c in enumerate(cells):
+        if jr is not None and i in jr.done:
+            results[i] = jr.done[i]
+        else:
+            pending[i] = c
+    if not pending:
+        return results
+    workers = min(int(workers), len(pending))
     if workers <= 1 or _inline_forced():
-        return [_run_cell(c) for c in cells]
+        return _finish_inline(results, pending, jr)
     if prewarm:
-        prewarm_characterization(cells)
-    try:
-        pool = ProcessPoolExecutor(max_workers=workers,
-                                   mp_context=_mp_context())
-    except (OSError, PermissionError):
-        # Sandboxed semaphores / fork unavailable: no pool, run inline.
-        return [_run_cell(c) for c in cells]
-    try:
-        with pool:
-            futures = [pool.submit(_run_cell, c) for c in cells]
-            return [f.result() for f in futures]
-    except BrokenExecutor:
-        # Workers died underneath us (fork breakage, OOM-killed child):
-        # re-run everything inline — identical results, no parallelism.
-        return [_run_cell(c) for c in cells]
+        prewarm_characterization(pending.values())
+    attempt = 0
+    while True:
+        try:
+            pool = ProcessPoolExecutor(
+                max_workers=min(workers, len(pending)),
+                mp_context=_mp_context(),
+            )
+        except (OSError, PermissionError):
+            # Sandboxed semaphores / fork unavailable: no pool at all.
+            break
+        stalled = False
+        try:
+            futures = {pool.submit(_run_cell, c): i
+                       for i, c in sorted(pending.items())}
+            not_done = set(futures)
+            while not_done:
+                done, not_done = wait(not_done, timeout=cell_timeout,
+                                      return_when=FIRST_COMPLETED)
+                if not done:
+                    stalled = True        # no progress within cell_timeout
+                    break
+                for fut in done:
+                    i = futures[fut]
+                    try:
+                        r = fut.result()
+                    except BrokenExecutor:
+                        # This future's worker died; siblings that DID
+                        # complete still carry their results — keep
+                        # harvesting, never discard finished work.
+                        stalled = True
+                        continue
+                    results[i] = r
+                    del pending[i]
+                    if jr is not None:
+                        jr.record(i, r)
+        except BrokenExecutor:
+            stalled = True
+        except BaseException:
+            pool.shutdown(wait=False, cancel_futures=True)
+            raise
+        # A stalled pool may hold a hung worker: abandon it without
+        # waiting (its processes drain in the background).
+        pool.shutdown(wait=not stalled, cancel_futures=True)
+        if not pending:
+            return results
+        attempt += 1
+        if attempt > max_retries:
+            break
+        time.sleep(backoff_s * (2 ** (attempt - 1)))
+    return _finish_inline(results, pending, jr)
 
 
 def run_sweep(
@@ -239,6 +412,8 @@ def run_sweep(
     gc: Optional[str] = None,
     shard: bool = False,
     workers: int = 1,
+    faults: Optional[FaultConfig] = None,
+    journal=None,
 ) -> Dict[Tuple[str, OperatingCondition, int], "object"]:
     """``simulate_batch`` semantics with seed groups fanned over workers.
 
@@ -247,16 +422,19 @@ def run_sweep(
     sweep.  The result dict is assembled in the canonical
     seed -> condition -> mechanism order regardless of worker count, so
     iteration order — and :func:`sweep_to_json` output — is byte-stable.
+    ``journal=`` names a checkpoint file: completed seed groups are
+    recorded as they finish and a killed sweep re-run with the same
+    arguments resumes from it byte-identically (:func:`run_cells`).
     """
     conditions = tuple(conditions)
     mechanisms = tuple(mechanisms)
     seeds = tuple(seeds)
     cells = [
         Cell("batch", workload, conditions, mechanisms, s, cfg, n_requests,
-             engine, scheduler, gc, shard)
+             engine, scheduler, gc, shard, faults=faults)
         for s in seeds
     ]
-    groups = run_cells(cells, workers=workers)
+    groups = run_cells(cells, workers=workers, journal=journal)
     out: Dict[Tuple[str, OperatingCondition, int], object] = {}
     for s, group in zip(seeds, groups):
         for cond in conditions:

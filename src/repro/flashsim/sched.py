@@ -106,7 +106,10 @@ class HostPrioQueue:
 
     ``host_read`` is the engine's per-op host-read table (a growing list
     — online GC appends ops mid-run; the reference is shared, so new ops
-    classify correctly).  FIFO within each class.
+    classify correctly).  FIFO within each class.  Superpage-parity
+    rebuild reads injected by the fault-recovery ladder carry
+    ``host_read=True``: they gate a blocked host request, so they jump
+    GC traffic exactly like the read they are rebuilding.
     """
 
     __slots__ = ("hi", "lo", "_host")

@@ -100,7 +100,12 @@ import numpy as np
 
 from repro.core import characterize as CH
 from repro.core.retry import RetryPolicy
-from repro.flashsim.config import DEFAULT_SSD, OperatingCondition, SSDConfig
+from repro.flashsim.config import (
+    DEFAULT_SSD,
+    FaultConfig,
+    OperatingCondition,
+    SSDConfig,
+)
 from repro.flashsim.engine import make_buffers, run_event_core
 from repro.flashsim.sched import get_scheduler
 from repro.flashsim.workloads import (
@@ -172,6 +177,13 @@ class SimStats:
     ``gc_suspensions`` counts preempt-scheduler suspend events;
     ``write_stalls`` counts online-GC host-write stalls (both 0 when the
     feature is off).
+
+    The fault block (``mispredicted_reads`` onward) is populated only
+    when a fault model is attached (``SSDConfig.faults`` / the run APIs'
+    ``faults=`` knob — :mod:`repro.flashsim.faults`); with faults off
+    the defaults state the no-failure facts.  ``recovery_p99_us`` is the
+    p99 response time over the *recovery-affected* requests only (0.0
+    when none were).
     """
 
     mean_us: float            # mean response time over ALL requests (us)
@@ -191,6 +203,15 @@ class SimStats:
     blocks_erased: int = 0    # blocks erased by GC
     gc_suspensions: int = 0   # preempt: GC ops suspended for host reads
     write_stalls: int = 0     # online GC: host writes stalled on free pool
+    mispredicted_reads: int = 0  # AR² reduced-tR decode failures (re-read)
+    rescued_reads: int = 0    # uncorrectables recovered by escalation
+    parity_rebuilds: int = 0  # superpage stripe rebuilds run
+    rebuild_reads: int = 0    # stripe-peer read page-ops issued
+    retired_blocks: int = 0   # bad blocks retired
+    program_fails: int = 0    # host programs that needed a reprogram
+    erase_fails: int = 0      # erases that failed verification
+    unrecoverable: int = 0    # reads lost after the full recovery ladder
+    recovery_p99_us: float = 0.0  # p99 response over recovery-affected reqs
 
     def as_row(self) -> str:
         row = (
@@ -469,6 +490,15 @@ class SSDSim:
 
             schedule = build_ftl_schedule(trace, cfg)
 
+        fm = None
+        if cfg.faults is not None:
+            # Fresh model per run: per-die fault substreams seeded
+            # (run seed, salt, die), separate from the attempt streams.
+            from repro.flashsim.faults import FaultModel
+
+            fm = FaultModel(cfg.faults, cfg, self.cond, self.policy,
+                            self.seed, self)
+
         online = None
         if schedule is not None:
             # Prepass FTL path: host + GC page-ops, attempts and AR² tR
@@ -490,9 +520,22 @@ class SSDSim:
             (adm_t, op_rid, op_die, op_ch, op_read,
              op_erase, op_dur) = schedule.admission_lists
             n_requests = schedule.n_requests
-            bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
-                                op_erase, op_dur, attempts_np.tolist(),
-                                tr_np.tolist())
+            if fm is None:
+                bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
+                                    op_erase, op_dur, attempts_np.tolist(),
+                                    tr_np.tolist())
+            else:
+                from repro.flashsim.faults import plan_faults
+
+                plan = plan_faults(
+                    fm, adm_t, op_rid, op_die, op_ch, op_read, op_erase,
+                    op_dur, attempts_np.tolist(), tr_np.tolist(),
+                    schedule.ptype.tolist(), schedule.wear_pec.tolist(),
+                )
+                bufs = make_buffers(plan.arrival, plan.rid, plan.die,
+                                    plan.ch, plan.read, plan.erase,
+                                    plan.dur, plan.a, plan.tr)
+                bufs.xa, bufs.xtr = plan.xa, plan.xtr
         elif gc_mode == "online":
             # Online FTL path: host ops only in the admission stream;
             # attempt counts / tR resolve at admission, GC injects live.
@@ -507,7 +550,10 @@ class SSDSim:
                 list(op_read), [False] * P, [tprog] * P,
                 [1] * P, [0.0] * P,
             )
-            online = OnlineGC(cfg, ex, self)
+            if fm is not None:
+                bufs.xa = [0] * P
+                bufs.xtr = [0.0] * P
+            online = OnlineGC(cfg, ex, self, faults=fm)
             n_requests = ex.n_requests
             total_read_pages = total_attempts = 0   # engine-accumulated
         else:
@@ -523,10 +569,23 @@ class SSDSim:
             tr_np = (self._tr_base * self.tr_scale)[ex.ptype]
             adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
             n_requests = ex.n_requests
-            bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
-                                [False] * P,        # no erases without FTL
-                                [tprog] * P,        # write-like ops: tPROG
-                                attempts_np.tolist(), tr_np.tolist())
+            if fm is None:
+                bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
+                                    [False] * P,    # no erases without FTL
+                                    [tprog] * P,    # write-like ops: tPROG
+                                    attempts_np.tolist(), tr_np.tolist())
+            else:
+                from repro.flashsim.faults import plan_faults
+
+                plan = plan_faults(
+                    fm, adm_t, op_rid, op_die, op_ch, op_read,
+                    [False] * P, [tprog] * P, attempts_np.tolist(),
+                    tr_np.tolist(), ex.ptype.tolist(), None,
+                )
+                bufs = make_buffers(plan.arrival, plan.rid, plan.die,
+                                    plan.ch, plan.read, plan.erase,
+                                    plan.dur, plan.a, plan.tr)
+                bufs.xa, bufs.xtr = plan.xa, plan.xtr
 
         res = run_event_core(cfg, pipelined, sched_policy, bufs, n_requests,
                              online=online, validate=validate, shard=shard)
@@ -565,6 +624,25 @@ class SSDSim:
             )
         elif res.gc_suspensions:
             gc_kw = dict(gc_suspensions=res.gc_suspensions)
+        fault_kw = {}
+        if fm is not None:
+            oc = fm.outcome
+            rec_p99 = 0.0
+            if oc.affected_rids:
+                idx = np.fromiter(oc.affected_rids, np.int64,
+                                  len(oc.affected_rids))
+                rec_p99 = float(np.percentile(response[idx], 99))
+            fault_kw = dict(
+                mispredicted_reads=oc.mispredicted_reads,
+                rescued_reads=oc.rescued_reads,
+                parity_rebuilds=oc.parity_rebuilds,
+                rebuild_reads=oc.rebuild_reads,
+                retired_blocks=oc.retired_blocks,
+                program_fails=oc.program_fails,
+                erase_fails=oc.erase_fails,
+                unrecoverable=oc.unrecoverable,
+                recovery_p99_us=rec_p99,
+            )
         return SimStats(
             mean_us=float(response.mean()),
             p50_us=float(np.percentile(response, 50)),
@@ -581,6 +659,7 @@ class SSDSim:
                 float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
             ),
             **gc_kw,
+            **fault_kw,
         )
 
 
@@ -588,16 +667,22 @@ class SSDSim:
 
 
 def _with_knobs(
-    cfg: SSDConfig, scheduler: Optional[str], gc: Optional[str]
+    cfg: SSDConfig, scheduler: Optional[str], gc: Optional[str],
+    faults: Optional[FaultConfig] = None,
 ) -> SSDConfig:
-    """Overlay the run-API ``scheduler=`` / ``gc=`` knobs onto a config.
+    """Overlay the run-API ``scheduler=`` / ``gc=`` / ``faults=`` knobs
+    onto a config.
 
     ``scheduler`` picks the die-queue policy; ``gc`` is ``"off"``,
     ``"prepass"``, or ``"online"`` (the latter two imply
-    ``gc.enabled=True``).  None leaves the config untouched.
+    ``gc.enabled=True``); ``faults`` attaches a
+    :class:`~repro.flashsim.config.FaultConfig`.  None leaves the config
+    untouched.
     """
     if scheduler is not None:
         cfg = dataclasses.replace(cfg, scheduler=scheduler)
+    if faults is not None:
+        cfg = dataclasses.replace(cfg, faults=faults)
     if gc is not None:
         if gc == "off":
             gcc = dataclasses.replace(cfg.gc, enabled=False)
@@ -629,6 +714,11 @@ def _make_sim(cfg, condition, mechanism, seed, engine):
     if engine == "array":
         return SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed)
     if engine == "reference":
+        if cfg.faults is not None:
+            raise NotImplementedError(
+                "faults require the array engine (the reference engine "
+                "predates the fault-injection subsystem)"
+            )
         from repro.flashsim.engine_ref import SSDSimRef
 
         return SSDSimRef(cfg, condition, RetryPolicy(mechanism), seed=seed)
@@ -647,6 +737,7 @@ def simulate(
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
     shard: bool = False,
+    faults: Optional[FaultConfig] = None,
 ) -> SimStats:
     """Convenience wrapper: one (workload, condition, mechanism) cell.
 
@@ -665,8 +756,10 @@ def simulate(
     the FTL and the scheduler layer and rejects both.  ``shard=True``
     runs the array event core as one loop per channel (bit-identical;
     :mod:`repro.flashsim.engine`); the reference engine rejects it.
+    ``faults=`` attaches a :class:`~repro.flashsim.config.FaultConfig`
+    (:mod:`repro.flashsim.faults` — array engine only).
     """
-    cfg = _with_knobs(cfg, scheduler, gc)
+    cfg = _with_knobs(cfg, scheduler, gc, faults)
     if trace is None:
         trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
@@ -692,6 +785,7 @@ def compare_mechanisms(
     gc: Optional[str] = None,
     shard: bool = False,
     workers: int = 1,
+    faults: Optional[FaultConfig] = None,
 ) -> Dict[str, SimStats]:
     """All mechanisms over ONE shared trace (resolved once, expanded once).
 
@@ -710,12 +804,12 @@ def compare_mechanisms(
     only, since it shares the array expansion/schedule with workers —
     ``engine="reference"`` runs its mechanisms sequentially as before).
     """
+    cfg = _with_knobs(cfg, scheduler, gc, faults)
     if workers > 1 and engine == "array":
         from repro.flashsim.runtime import run_compare
 
         return run_compare(workload, condition, mechanisms, seed, cfg,
-                           n_requests, scheduler, gc, shard, workers)
-    cfg = _with_knobs(cfg, scheduler, gc)
+                           n_requests, None, None, shard, workers)
     trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     if engine != "array":
         return {
@@ -746,6 +840,8 @@ def simulate_batch(
     gc: Optional[str] = None,
     shard: bool = False,
     workers: int = 1,
+    faults: Optional[FaultConfig] = None,
+    journal=None,
 ) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
     """Sweep (mechanism x condition x seed) cells for one workload.
 
@@ -762,7 +858,11 @@ def simulate_batch(
     ``shard=True`` selects the per-channel sharded event core;
     ``workers > 1`` schedules seed groups across a process pool
     (:func:`repro.flashsim.runtime.run_sweep`) — cell values and dict
-    order are identical for every worker count.
+    order are identical for every worker count.  ``faults=`` attaches a
+    :class:`~repro.flashsim.config.FaultConfig` to every cell;
+    ``journal=`` names a checkpoint file — completed cells are recorded
+    as they finish and a re-run resumes from them byte-identically
+    (:func:`repro.flashsim.runtime.run_cells`).
     Returns ``{(mechanism, condition, seed): SimStats}``.
     """
     if shard and engine != "array":
@@ -770,14 +870,15 @@ def simulate_batch(
             "shard=True requires the array engine (the reference engine "
             "predates the sharded event core)"
         )
-    if workers > 1:
+    cfg = _with_knobs(cfg, scheduler, gc, faults)
+    if workers > 1 or journal is not None:
         from repro.flashsim.runtime import run_sweep
 
         # Engine-agnostic: seed-group cells re-enter this function with
         # workers=1 inside each worker, reference engine included.
         return run_sweep(workload, conditions, mechanisms, seeds, cfg,
-                         n_requests, engine, scheduler, gc, shard, workers)
-    cfg = _with_knobs(cfg, scheduler, gc)
+                         n_requests, engine, None, None, shard, workers,
+                         journal=journal)
     conditions = tuple(conditions)
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
     for s in seeds:

@@ -1,0 +1,559 @@
+"""Failure-path modeling and fault injection (ISSUE 6).
+
+Covers the device fault model (:mod:`repro.flashsim.faults`), the
+controller recovery ladder (escalation re-reads, superpage-parity
+rebuilds, bad-block retirement), the determinism contract (identical
+``(seed, FaultConfig)`` -> identical failure sets under any ``shard=`` /
+``workers=``), the self-healing sweep runtime (worker kills, journal
+checkpoint/resume), and the defaults-off guarantee (``faults=None`` is
+bit-identical to a fault-free build).
+"""
+
+import dataclasses
+import json
+import multiprocessing
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.flashsim.config import (
+    DEFAULT_SSD,
+    FaultConfig,
+    GCConfig,
+    OperatingCondition,
+    SSDConfig,
+)
+from repro.flashsim.ftl import PageMapFTL
+from repro.flashsim.runtime import (
+    Cell,
+    run_cells,
+    run_sweep,
+    sweep_to_json,
+)
+from repro.flashsim.ssd import compare_mechanisms, simulate, simulate_batch
+from repro.flashsim.workloads import RequestTrace, TraceSource
+
+FRESH = OperatingCondition(0.0, 0.0)
+AGED = OperatingCondition(365.0, 1000.0)
+N = 300
+
+FAULT_FIELDS = (
+    "mispredicted_reads", "rescued_reads", "parity_rebuilds",
+    "rebuild_reads", "retired_blocks", "program_fails", "erase_fails",
+    "unrecoverable",
+)
+
+
+def fault_counters(stats):
+    return {f: getattr(stats, f) for f in FAULT_FIELDS}
+
+
+class TestFaultConfigValidation:
+    def test_probabilities_bounded(self):
+        with pytest.raises(ValueError, match="uncorrectable_prob"):
+            FaultConfig(uncorrectable_prob=1.5)
+        with pytest.raises(ValueError, match="mispredict_prob"):
+            FaultConfig(mispredict_prob=-0.1)
+        with pytest.raises(ValueError, match="program_fail_prob"):
+            FaultConfig(program_fail_prob=2.0)
+        with pytest.raises(ValueError, match="erase_fail_prob"):
+            FaultConfig(erase_fail_prob=-1.0)
+
+    def test_scales_and_escalation(self):
+        with pytest.raises(ValueError, match="uncorrectable_scale"):
+            FaultConfig(uncorrectable_scale=-1.0)
+        with pytest.raises(ValueError, match="escalation_attempts"):
+            FaultConfig(escalation_attempts=0)
+
+    def test_failslow_is_slow(self):
+        with pytest.raises(ValueError, match="fail-SLOW"):
+            FaultConfig(failslow_dies=((0, 0.5),))
+        with pytest.raises(ValueError, match="die id"):
+            FaultConfig(failslow_dies=((-1, 2.0),))
+        FaultConfig(failslow_dies=((3, 2.5),))  # valid
+
+    def test_defaults_valid(self):
+        fc = FaultConfig()
+        assert fc.parity_rebuild and fc.retire_blocks
+        assert fc.escalation_attempts >= 1
+
+
+class TestDefaultsOff:
+    """faults=None — the default everywhere — changes nothing, and an
+    all-zero FaultConfig is bit-identical to it (the separate-stream
+    contract: fault draws never perturb attempt sampling)."""
+
+    @pytest.mark.parametrize("shard", [False, True])
+    def test_zero_fault_config_bit_identical(self, shard):
+        base = simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=N,
+                        shard=shard)
+        zero = FaultConfig(uncorrectable_prob=0.0, mispredict_prob=0.0)
+        with_zero = simulate("websearch", AGED, "pr2ar2", seed=7,
+                             n_requests=N, shard=shard, faults=zero)
+        assert base == with_zero
+
+    def test_zero_fault_counters_stay_zero(self):
+        zero = FaultConfig(uncorrectable_prob=0.0, mispredict_prob=0.0)
+        s = simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=N,
+                     faults=zero)
+        assert all(v == 0 for v in fault_counters(s).values())
+        assert s.recovery_p99_us == 0.0
+
+    def test_gc_paths_unaffected_by_none(self):
+        for gc in ("prepass", "online"):
+            a = simulate("rsrch", AGED, "pr2ar2", seed=3, n_requests=N,
+                         gc=gc)
+            b = simulate("rsrch", AGED, "pr2ar2", seed=3, n_requests=N,
+                         gc=gc, faults=FaultConfig(
+                             uncorrectable_prob=0.0, mispredict_prob=0.0))
+            assert a == b
+
+
+class TestMisprediction:
+    """AR² mispredictions: a reduced-tR read whose RBER exceeds the
+    shaved ECC margin pays one extra nominal-tR re-read."""
+
+    def test_derived_rate_positive_when_adaptive_and_aged(self):
+        s = simulate("websearch", AGED, "ar2", seed=7, n_requests=N,
+                     faults=FaultConfig())
+        assert s.mispredicted_reads > 0
+        assert s.unrecoverable == 0
+
+    @pytest.mark.parametrize("mech", ["baseline", "sota", "pr2"])
+    def test_non_adaptive_policies_never_mispredict(self, mech):
+        s = simulate("websearch", AGED, mech, seed=7, n_requests=N,
+                     faults=FaultConfig(mispredict_prob=1.0))
+        assert s.mispredicted_reads == 0
+
+    def test_every_misprediction_pays_a_nominal_reread(self):
+        kw = dict(seed=7, n_requests=N)
+        clean = simulate("websearch", AGED, "ar2", **kw)
+        faulty = simulate("websearch", AGED, "ar2", **kw,
+                          faults=FaultConfig(mispredict_prob=1.0))
+        # every read mispredicted: the re-read cost must show up in the
+        # read-latency mean, and the request count must not change
+        assert faulty.mispredicted_reads > 0
+        assert faulty.n_requests == clean.n_requests
+        assert faulty.read_mean_us > clean.read_mean_us
+        assert faulty.recovery_p99_us > 0.0
+
+    def test_misprediction_rate_scales(self):
+        lo = simulate("websearch", AGED, "ar2", seed=7, n_requests=N,
+                      faults=FaultConfig(mispredict_scale=0.2))
+        hi = simulate("websearch", AGED, "ar2", seed=7, n_requests=N,
+                      faults=FaultConfig(mispredict_scale=5.0))
+        assert hi.mispredicted_reads > lo.mispredicted_reads
+
+
+class TestUncorrectableAndRecovery:
+    def test_escalation_rescues_at_default_capability(self):
+        s = simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=N,
+                     faults=FaultConfig(uncorrectable_prob=0.05))
+        assert s.rescued_reads > 0
+        # 4 escalation attempts at p=0.05: rebuild probability ~6e-6
+        assert s.unrecoverable == 0
+
+    def test_derived_uncorrectable_rate_is_benign(self):
+        """At the paper-default ECC capability the derived uncorrectable
+        probability is ~0: the ladder never reaches data loss."""
+        s = simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=N,
+                     faults=FaultConfig())
+        assert s.unrecoverable == 0
+
+    def test_recovery_latency_charged(self):
+        kw = dict(seed=7, n_requests=N)
+        clean = simulate("websearch", AGED, "pr2ar2", **kw)
+        faulty = simulate("websearch", AGED, "pr2ar2", **kw,
+                          faults=FaultConfig(uncorrectable_prob=0.2))
+        assert faulty.read_mean_us > clean.read_mean_us
+        assert faulty.recovery_p99_us > 0.0
+
+    def test_no_parity_rebuild_counts_unrecoverable(self):
+        fc = FaultConfig(uncorrectable_prob=0.9, escalation_attempts=1,
+                         parity_rebuild=False)
+        s = simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=N,
+                     faults=fc)
+        assert s.unrecoverable > 0
+        assert s.parity_rebuilds == 0
+
+    def test_parity_rebuild_issues_stripe_peer_reads(self):
+        fc = FaultConfig(uncorrectable_prob=0.7, escalation_attempts=1,
+                         retire_blocks=False)
+        s = simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=N,
+                     faults=fc)
+        assert s.parity_rebuilds > 0
+        # stripe peers = the channel's other dies
+        peers = DEFAULT_SSD.dies_per_channel - 1
+        assert s.rebuild_reads == s.parity_rebuilds * peers
+
+
+class TestFailSlowDies:
+    def test_failslow_die_stretches_latency(self):
+        kw = dict(seed=7, n_requests=N)
+        clean = simulate("websearch", AGED, "pr2ar2", **kw,
+                         faults=FaultConfig())
+        slow = simulate("websearch", AGED, "pr2ar2", **kw,
+                        faults=FaultConfig(failslow_dies=((0, 4.0),
+                                                          (1, 4.0))))
+        assert slow.read_mean_us > clean.read_mean_us
+
+
+class TestDeterminism:
+    """Identical (seed, FaultConfig) -> identical failure sets and stats
+    under any shard= / workers= decomposition."""
+
+    @pytest.mark.parametrize("gc", [None, "prepass", "online"])
+    def test_shard_equality_with_faults(self, gc):
+        fc = FaultConfig(uncorrectable_prob=0.05, mispredict_scale=2.0)
+        kw = dict(seed=7, n_requests=N, gc=gc, faults=fc)
+        a = simulate("rsrch", AGED, "pr2ar2", shard=False, **kw)
+        b = simulate("rsrch", AGED, "pr2ar2", shard=True, **kw)
+        assert a == b
+
+    def test_repeat_run_identical(self):
+        fc = FaultConfig(uncorrectable_prob=0.05)
+        kw = dict(seed=7, n_requests=N, faults=fc)
+        assert (simulate("websearch", AGED, "pr2ar2", **kw)
+                == simulate("websearch", AGED, "pr2ar2", **kw))
+
+    def test_compare_mechanisms_with_faults(self):
+        fc = FaultConfig(uncorrectable_prob=0.05)
+        r = compare_mechanisms("websearch", AGED, seed=7, n_requests=N,
+                               faults=fc)
+        assert r["ar2"].mispredicted_reads > 0
+        assert r["baseline"].mispredicted_reads == 0
+        for mech, stats in r.items():
+            solo = simulate("websearch", AGED, mech, seed=7, n_requests=N,
+                            faults=fc)
+            assert stats == solo
+
+    def test_workers_equality_with_faults(self):
+        kw = dict(
+            conditions=[FRESH, AGED], mechanisms=["baseline", "pr2ar2"],
+            seeds=[1, 2], n_requests=N, faults=FaultConfig(),
+        )
+        r1 = simulate_batch("websearch", workers=1, **kw)
+        r2 = simulate_batch("websearch", workers=2, **kw)
+        assert sweep_to_json(r1) == sweep_to_json(r2)
+
+
+class TestOnlineRecovery:
+    """Online-GC fault path: wear-resolved draws, real FTL retirement,
+    erase/program failures at the simulated instants."""
+
+    FC = FaultConfig(uncorrectable_prob=0.6, escalation_attempts=1)
+
+    def _run(self, **kw):
+        base = dict(seed=3, n_requests=2000, gc="online", faults=self.FC)
+        base.update(kw)
+        return simulate("rsrch", AGED, "pr2ar2", **base)
+
+    def test_rebuild_and_retirement_exercised(self):
+        s = self._run()
+        assert s.parity_rebuilds > 0
+        assert s.rebuild_reads > 0
+        assert s.retired_blocks > 0
+
+    def test_online_shard_equality(self):
+        assert self._run(shard=False) == self._run(shard=True)
+
+    def test_erase_failures_retire_blocks(self):
+        fc = FaultConfig(erase_fail_prob=0.5)
+        s = simulate("rsrch", AGED, "pr2ar2", seed=3, n_requests=2000,
+                     gc="online", faults=fc)
+        assert s.erase_fails > 0
+        assert s.retired_blocks >= s.erase_fails
+        assert s.n_requests == 2000
+
+    def test_program_failures_counted_and_charged(self):
+        kw = dict(seed=3, n_requests=600, gc="online")
+        clean = simulate("rsrch", AGED, "pr2ar2", **kw)
+        s = simulate("rsrch", AGED, "pr2ar2", **kw,
+                     faults=FaultConfig(program_fail_prob=0.3))
+        assert s.program_fails > 0
+        assert s.mean_us > clean.mean_us
+
+
+class TestReferenceEngine:
+    def test_reference_engine_rejects_faults(self):
+        with pytest.raises(NotImplementedError, match="fault"):
+            simulate("websearch", AGED, "pr2ar2", seed=7, n_requests=50,
+                     engine="reference", faults=FaultConfig())
+
+
+# -- FTL bad-block retirement (unit) ---------------------------------------
+
+
+def small_ftl(**gc_kw) -> PageMapFTL:
+    kw = dict(enabled=True, pages_per_block=4, blocks_per_die=8,
+              gc_threshold_blocks=1)
+    kw.update(gc_kw)
+    cfg = SSDConfig(n_channels=1, dies_per_channel=1, gc=GCConfig(**kw))
+    return PageMapFTL(cfg)
+
+
+class TestRetireBlock:
+    def test_retire_relocates_valid_pages(self):
+        ftl = small_ftl()
+        for lpn in range(5):          # block 0 fills + seals, block 1 opens
+            ftl.host_write(lpn)
+        ftl.drain_events()
+        assert 0 in ftl.sealed[0]
+        assert ftl.retire_block(0, 0)
+        assert 0 in ftl.retired and ftl.blocks_retired == 1
+        assert ftl.valid[0] == 0 and ftl.wp[0] == ftl.ppb
+        assert 0 not in ftl.free[0]
+        # the four relocated lpns still resolve, off the retired block
+        for lpn in range(4):
+            ppn = ftl.l2p[lpn]
+            assert ppn // ftl.ppb != 0
+            assert ftl.p2l[ppn] == lpn
+        # relocation emitted GC read+program traffic
+        kinds = [ev[0] for ev in ftl.drain_events()]
+        assert len(kinds) == 8        # 4 reads + 4 programs
+
+    def test_retire_refuses_frontier_and_foreign_blocks(self):
+        ftl = small_ftl()
+        for lpn in range(5):
+            ftl.host_write(lpn)
+        active = ftl.active[0]
+        assert not ftl.retire_block(0, active)      # frontier: refused
+        assert not ftl.retire_block(0, 99)          # not die 0's block
+        assert ftl.retire_block(0, 0)
+        assert not ftl.retire_block(0, 0)           # already retired
+
+    def test_retire_refuses_when_it_would_wedge(self):
+        # 4 blocks/die min geometry: fill 2 sealed blocks, leave 1 free —
+        # relocating 4 valid pages would eat the last reserve block.
+        ftl = small_ftl(blocks_per_die=4, gc_threshold_blocks=1)
+        for lpn in range(12):
+            ftl.host_write(lpn)
+        ftl.drain_events()
+        assert len(ftl.free[0]) == 1
+        assert not ftl.retire_block(0, 0)
+        assert 0 not in ftl.retired   # stays in service
+
+    def test_retire_erase_failed_never_returns_to_pool(self):
+        ftl = small_ftl()
+        blk = ftl.free[0][-1]
+        ftl.retire_erase_failed(0, blk)
+        assert blk in ftl.retired
+        assert ftl.wp[blk] == ftl.ppb    # never allocatable
+
+
+# -- self-healing runtime ---------------------------------------------------
+
+
+def _synthetic_trace(seed: int, n: int) -> RequestTrace:
+    rng = np.random.default_rng(seed)
+    return RequestTrace(
+        arrival_us=np.cumsum(rng.exponential(30.0, n)),
+        is_read=rng.random(n) < 0.7,
+        n_pages=np.ones(n, np.int64),
+        start_page=rng.integers(0, 4096, n),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class KillOnceSource(TraceSource):
+    """Trace source that SIGKILLs the *worker* process on first build.
+
+    The marker file makes the kill once-only (and observable), and the
+    recorded parent pid keeps inline/baseline runs alive — only a forked
+    pool worker dies.  Picklable via the fork start method.
+    """
+
+    marker: str = ""
+    parent_pid: int = 0
+    n: int = 300
+    transforms: tuple = ()
+
+    def cache_key(self, seed: int) -> tuple:
+        return ("kill-once", self.n, seed,
+                tuple(t.key for t in self.transforms))
+
+    def _build(self, seed: int) -> RequestTrace:
+        if (self.marker and not os.path.exists(self.marker)
+                and os.getpid() != self.parent_pid):
+            Path(self.marker).touch()
+            os.kill(os.getpid(), signal.SIGKILL)
+        return _synthetic_trace(seed, self.n)
+
+
+def _require_fork():
+    if "fork" not in multiprocessing.get_all_start_methods():
+        pytest.skip("fork start method unavailable")
+    if os.environ.get("REPRO_SWEEP_INLINE") == "1":
+        pytest.skip("pool execution disabled (REPRO_SWEEP_INLINE=1)")
+
+
+class TestSelfHealingPool:
+    def test_worker_kill_preserves_completed_results(self, tmp_path):
+        """SIGKILL one worker mid-sweep: the pool breaks, completed
+        futures' results are harvested (not discarded), only unfinished
+        cells retry, and the final JSON is byte-identical to workers=1."""
+        _require_fork()
+        from repro.flashsim.workloads import clear_trace_cache
+
+        marker = tmp_path / "killed"
+        src = KillOnceSource(marker=str(marker), parent_pid=os.getpid())
+        kw = dict(
+            conditions=[AGED], mechanisms=("baseline", "pr2ar2"),
+            seeds=[0, 1, 2, 3], n_requests=200,
+        )
+        clear_trace_cache()   # force workers to _build (and one to die)
+        parallel = run_sweep(src, workers=2, **kw)
+        assert marker.exists(), "no worker was killed — test is vacuous"
+        inline = run_sweep(src, workers=1, **kw)
+        assert sweep_to_json(parallel) == sweep_to_json(inline)
+
+    def test_cell_exceptions_still_propagate(self):
+        """A cell that *raises* (vs. dying) fails the sweep unchanged —
+        retrying user errors would only duplicate the work."""
+        bad = Cell("simulate", "websearch", (AGED,), ("no-such-mech",), 0,
+                   n_requests=50)
+        with pytest.raises((KeyError, ValueError)):
+            run_cells([bad], workers=1)
+        _require_fork()
+        with pytest.raises((KeyError, ValueError)):
+            run_cells([bad, bad], workers=2, prewarm=False)
+
+    def test_stalled_pool_abandoned_and_finished_inline(self, tmp_path):
+        """cell_timeout bounds the wait for progress: a pool that makes
+        none is abandoned and the cells complete inline."""
+        _require_fork()
+        marker = tmp_path / "killed"
+        src = KillOnceSource(marker=str(marker), parent_pid=os.getpid(),
+                             n=100)
+        from repro.flashsim.workloads import clear_trace_cache
+
+        clear_trace_cache()
+        cells = [Cell("simulate", src, (AGED,), ("baseline",), s,
+                      n_requests=50) for s in range(2)]
+        results = run_cells(cells, workers=2, cell_timeout=60.0,
+                            max_retries=1)
+        assert all(r is not None for r in results)
+        assert [r.n_requests for r in results] == [50, 50]
+
+
+class TestJournalResume:
+    KW = dict(
+        conditions=(FRESH, AGED), mechanisms=("baseline", "pr2ar2"),
+        seeds=(1, 2, 3), n_requests=150,
+    )
+
+    def test_journal_round_trip_byte_identical(self, tmp_path):
+        jpath = tmp_path / "sweep.jsonl"
+        fresh = run_sweep("websearch", **self.KW)
+        journaled = run_sweep("websearch", journal=jpath, **self.KW)
+        assert sweep_to_json(fresh) == sweep_to_json(journaled)
+        lines = jpath.read_text().splitlines()
+        assert len(lines) == 1 + len(self.KW["seeds"])  # header + cells
+        # resume from a complete journal recomputes nothing and matches
+        resumed = run_sweep("websearch", journal=jpath, **self.KW)
+        assert sweep_to_json(resumed) == sweep_to_json(fresh)
+
+    def test_partial_journal_resumes_byte_identical(self, tmp_path):
+        jpath = tmp_path / "sweep.jsonl"
+        fresh = run_sweep("websearch", journal=jpath, **self.KW)
+        lines = jpath.read_text().splitlines()
+        # keep the header and the first completed cell only
+        jpath.write_text("\n".join(lines[:2]) + "\n")
+        resumed = run_sweep("websearch", journal=jpath, **self.KW)
+        assert sweep_to_json(resumed) == sweep_to_json(fresh)
+
+    def test_torn_tail_ignored(self, tmp_path):
+        jpath = tmp_path / "sweep.jsonl"
+        fresh = run_sweep("websearch", journal=jpath, **self.KW)
+        with open(jpath, "a") as f:
+            f.write('{"i": 99, "r": {"t": "cells", "v"')   # torn append
+        resumed = run_sweep("websearch", journal=jpath, **self.KW)
+        assert sweep_to_json(resumed) == sweep_to_json(fresh)
+
+    def test_journal_keyed_to_cell_list(self, tmp_path):
+        """A journal resumes only the exact sweep that wrote it: any
+        other cell list starts the file over (no cross-contamination)."""
+        jpath = tmp_path / "sweep.jsonl"
+        run_sweep("websearch", journal=jpath, **self.KW)
+        other = dict(self.KW, seeds=(7, 8))
+        fresh = run_sweep("websearch", **other)
+        rerun = run_sweep("websearch", journal=jpath, **other)
+        assert sweep_to_json(rerun) == sweep_to_json(fresh)
+        lines = jpath.read_text().splitlines()
+        assert len(lines) == 1 + 2    # rewritten for the new run key
+
+    def test_journal_with_faults_and_workers(self, tmp_path):
+        _require_fork()
+        jpath = tmp_path / "sweep.jsonl"
+        kw = dict(self.KW, faults=FaultConfig())
+        fresh = run_sweep("websearch", **kw)
+        journaled = run_sweep("websearch", journal=jpath, workers=2, **kw)
+        assert sweep_to_json(fresh) == sweep_to_json(journaled)
+
+
+_KILL_SCRIPT = """
+import sys
+from repro.flashsim.runtime import run_sweep
+from repro.flashsim.config import OperatingCondition
+
+run_sweep(
+    "websearch",
+    (OperatingCondition(0.0, 0.0), OperatingCondition(365.0, 1000.0)),
+    ("baseline", "pr2", "ar2", "pr2ar2"),
+    seeds=range(6),
+    n_requests=6000,
+    journal=sys.argv[1],
+)
+"""
+
+
+class TestSigkillResume:
+    def test_sigkilled_sweep_resumes_byte_identical(self, tmp_path):
+        """Kill a journaled sweep with SIGKILL mid-run; re-running with
+        the same journal skips the recorded cells and the final
+        sweep_to_json is byte-identical to an uninterrupted sweep."""
+        jpath = tmp_path / "sweep.jsonl"
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(Path(__file__).resolve().parents[1] / "src")
+        env["REPRO_SWEEP_INLINE"] = "1"
+        proc = subprocess.Popen(
+            [sys.executable, "-c", _KILL_SCRIPT, str(jpath)],
+            env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+        )
+        try:
+            # wait for >= 1 completed cell in the journal, then SIGKILL
+            deadline = time.time() + 300
+            while time.time() < deadline:
+                if proc.poll() is not None:
+                    break
+                if jpath.exists() and len(
+                        jpath.read_text().splitlines()) >= 2:
+                    break
+                time.sleep(0.02)
+            killed_midway = proc.poll() is None
+            if killed_midway:
+                proc.send_signal(signal.SIGKILL)
+            proc.wait(timeout=60)
+        finally:
+            if proc.poll() is None:
+                proc.kill()
+        assert jpath.exists() and jpath.read_text().splitlines(), \
+            "journal never materialized — subprocess failed to start"
+
+        kw = dict(
+            conditions=(FRESH, AGED),
+            mechanisms=("baseline", "pr2", "ar2", "pr2ar2"),
+            seeds=range(6), n_requests=6000,
+        )
+        pre = len(jpath.read_text().splitlines()) - 1
+        resumed = run_sweep("websearch", journal=jpath, **kw)
+        fresh = run_sweep("websearch", **kw)
+        assert sweep_to_json(resumed) == sweep_to_json(fresh)
+        if killed_midway:
+            assert 0 < pre < 6, f"kill landed outside the sweep ({pre})"

@@ -8,9 +8,11 @@ exercised here against the checked-in MSR-format excerpts.
 
 import gzip
 import importlib.util
+import io
 import json
 import shutil
 import sys
+import urllib.error
 from pathlib import Path
 
 import pytest
@@ -119,6 +121,170 @@ class TestSanityParse:
         with pytest.raises(RuntimeError, match="neither gzip nor MSR"):
             fetch.recompress_csv(page)
         assert page.read_text().startswith("<html>")  # left untouched
+
+
+class _Resp:
+    """Fake urlopen response: one read() of the payload, then EOF — or a
+    connection reset mid-body when ``cut`` (partial already written)."""
+
+    def __init__(self, payload, status=200, cut=False):
+        self._payload = payload
+        self.status = status
+        self._cut = cut
+        self._done = False
+
+    def read(self, n=-1):
+        if self._done:
+            if self._cut:
+                raise ConnectionResetError("mirror reset mid-body")
+            return b""
+        self._done = True
+        return self._payload
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+class FlakyServer:
+    """Scripted stand-in for ``urllib.request.urlopen``.
+
+    One script entry per request: ``"refuse"`` (URLError), an int HTTP
+    status (HTTPError), ``("cut", n)`` (serve n bytes then reset),
+    ``"ignore-range"`` (200 + full body despite Range), or ``"ok"``
+    (honour Range with a 206).  Records each request's Range header.
+    """
+
+    def __init__(self, body, script):
+        self.body = body
+        self.script = list(script)
+        self.requests = []          # Range header (or None) per request
+
+    def __call__(self, req, timeout=None):
+        rng = req.get_header("Range")
+        self.requests.append(rng)
+        start = int(rng.split("=")[1].rstrip("-")) if rng else 0
+        action = self.script.pop(0) if self.script else "ok"
+        if action == "refuse":
+            raise urllib.error.URLError("connection refused")
+        if isinstance(action, int):
+            raise urllib.error.HTTPError(
+                "http://mirror/x", action, "boom", {}, io.BytesIO(b"")
+            )
+        if isinstance(action, tuple):
+            return _Resp(self.body[start:start + action[1]],
+                         status=206 if rng else 200, cut=True)
+        if action == "ignore-range":
+            return _Resp(self.body, status=200)
+        return _Resp(self.body[start:], status=206 if rng else 200)
+
+
+class TestDownloadRetry:
+    """Offline retry/backoff/resume behaviour against a flaky fake."""
+
+    BODY = bytes(range(256)) * 4        # 1 KiB, position-identifiable
+
+    def _get(self, monkeypatch, tmp_path, script, **kw):
+        server = FlakyServer(self.BODY, script)
+        monkeypatch.setattr(fetch.urllib.request, "urlopen", server)
+        sleeps = []
+        out = tmp_path / "vol.bin"
+        err = None
+        try:
+            fetch.download("http://mirror/vol.bin", out,
+                           sleep=sleeps.append, jitter=0.0, **kw)
+        except Exception as e:          # noqa: BLE001 — inspected by tests
+            err = e
+        return server, out, sleeps, err
+
+    def test_retry_then_success(self, monkeypatch, tmp_path):
+        server, out, sleeps, err = self._get(
+            monkeypatch, tmp_path, ["refuse", "refuse", "ok"]
+        )
+        assert err is None
+        assert out.read_bytes() == self.BODY
+        assert len(server.requests) == 3
+        # exponential backoff: each delay doubles the previous one
+        assert len(sleeps) == 2 and sleeps[1] == 2 * sleeps[0]
+
+    def test_jitter_perturbs_backoff(self, monkeypatch, tmp_path):
+        server = FlakyServer(self.BODY, ["refuse", "ok"])
+        monkeypatch.setattr(fetch.urllib.request, "urlopen", server)
+        sleeps = []
+        fetch.download("http://mirror/vol.bin", tmp_path / "v",
+                       sleep=sleeps.append, backoff_s=1.0, jitter=0.5)
+        assert 1.0 <= sleeps[0] <= 1.5
+
+    def test_cut_body_resumes_with_range(self, monkeypatch, tmp_path):
+        server, out, sleeps, err = self._get(
+            monkeypatch, tmp_path, [("cut", 100), "ok"]
+        )
+        assert err is None
+        assert out.read_bytes() == self.BODY      # no gap, no duplication
+        assert server.requests == [None, "bytes=100-"]
+
+    def test_server_ignoring_range_restarts_clean(self, monkeypatch,
+                                                  tmp_path):
+        server, out, sleeps, err = self._get(
+            monkeypatch, tmp_path, [("cut", 100), "ignore-range"]
+        )
+        assert err is None
+        assert out.read_bytes() == self.BODY      # 200 truncated the part
+        assert server.requests == [None, "bytes=100-"]
+
+    def test_416_drops_stale_partial(self, monkeypatch, tmp_path):
+        out = tmp_path / "vol.bin"
+        out.write_bytes(b"x" * 4096)              # stale oversized partial
+        server = FlakyServer(self.BODY, [416, "ok"])
+        monkeypatch.setattr(fetch.urllib.request, "urlopen", server)
+        fetch.download("http://mirror/vol.bin", out, sleep=lambda s: None)
+        assert out.read_bytes() == self.BODY
+        assert server.requests == ["bytes=4096-", None]
+
+    def test_permanent_4xx_raises_immediately(self, monkeypatch, tmp_path):
+        server, out, sleeps, err = self._get(monkeypatch, tmp_path, [404])
+        assert isinstance(err, urllib.error.HTTPError) and err.code == 404
+        assert len(server.requests) == 1 and not sleeps
+
+    def test_gives_up_after_max_retries(self, monkeypatch, tmp_path):
+        server, out, sleeps, err = self._get(
+            monkeypatch, tmp_path, ["refuse"] * 10, max_retries=2
+        )
+        assert isinstance(err, urllib.error.URLError)
+        assert len(server.requests) == 3 and len(sleeps) == 2
+
+    def test_429_and_5xx_are_transient(self, monkeypatch, tmp_path):
+        server, out, sleeps, err = self._get(
+            monkeypatch, tmp_path, [429, 503, "ok"]
+        )
+        assert err is None and out.read_bytes() == self.BODY
+
+    def test_partial_kept_and_resumed_across_invocations(self, monkeypatch,
+                                                         tmp_path):
+        """fetch_volume keeps the .part on network failure; a later run
+        resumes it with a Range request and lands the verified file."""
+        monkeypatch.setattr(fetch.time, "sleep", lambda s: None)
+        body = EXCERPT.read_bytes()
+        dest = tmp_path / "traces"
+        dest.mkdir()
+        killed = FlakyServer(body, [("cut", 100)] + ["refuse"] * 8)
+        monkeypatch.setattr(fetch.urllib.request, "urlopen", killed)
+        with pytest.raises(urllib.error.URLError):
+            fetch.fetch_volume("web_0", dest, "http://mirror", {}, {})
+        part = dest / ".web_0.csv.gz.part"
+        assert part.exists() and part.stat().st_size == 100
+
+        healthy = FlakyServer(body, ["ok"])
+        monkeypatch.setattr(fetch.urllib.request, "urlopen", healthy)
+        manifest = {}
+        final = fetch.fetch_volume("web_0", dest, "http://mirror", {},
+                                   manifest)
+        assert healthy.requests == ["bytes=100-"]
+        assert final.read_bytes() == body
+        assert not part.exists()
+        assert manifest["web_0.csv.gz"] == fetch.sha256_file(EXCERPT)
 
 
 class TestVerifyOnly:

@@ -253,3 +253,82 @@ def test_transform_chain_deterministic_property(seed, n, frac, chain_seed):
     np.testing.assert_array_equal(a.is_read, b.is_read)
     # subsample kept a subsequence: arrivals are a subset in order
     assert np.isin(a.arrival_us, t.arrival_us).all()
+
+
+# -- fault-injection properties (ISSUE 6 satellite) ------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(0, 2**16),
+    st.sampled_from(["ar2", "pr2ar2"]),
+    st.floats(0.0, 0.15),
+    st.integers(1, 4),
+)
+def test_fault_failure_set_shard_invariant(seed, mech, unc, esc):
+    """Identical (seed, FaultConfig) -> identical failure sets and stats
+    under monolithic and per-channel-sharded execution, for any knobs."""
+    from repro.flashsim.config import FaultConfig, OperatingCondition
+    from repro.flashsim.ssd import simulate
+
+    fc = FaultConfig(uncorrectable_prob=unc, escalation_attempts=esc,
+                     mispredict_scale=2.0)
+    kw = dict(seed=seed, n_requests=200, faults=fc)
+    cond = OperatingCondition(365.0, 1000.0)
+    a = simulate("websearch", cond, mech, shard=False, **kw)
+    b = simulate("websearch", cond, mech, shard=True, **kw)
+    assert (a.mispredicted_reads, a.rescued_reads, a.parity_rebuilds,
+            a.rebuild_reads, a.retired_blocks, a.unrecoverable) == \
+           (b.mispredicted_reads, b.rescued_reads, b.parity_rebuilds,
+            b.rebuild_reads, b.retired_blocks, b.unrecoverable)
+    assert a == b
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**32 - 1), st.integers(20, 120))
+def test_ftl_retirement_bijectivity_property(seed, n_ops):
+    """The l2p/p2l mapping stays a lossless bijection — and retired
+    blocks never re-enter any pool — under ANY random interleaving of
+    host writes, (pre-filling) reads, and bad-block retirements."""
+    from repro.flashsim.config import GCConfig, SSDConfig
+    from repro.flashsim.ftl import PageMapFTL
+
+    rng = np.random.default_rng(seed)
+    cfg = SSDConfig(n_channels=2, dies_per_channel=2, gc=GCConfig(
+        enabled=True, pages_per_block=4, blocks_per_die=8,
+        gc_threshold_blocks=1))
+    ftl = PageMapFTL(cfg, lpns=np.arange(40))
+    touched = set()
+    for _ in range(n_ops):
+        op = rng.integers(0, 4)
+        if op <= 1:
+            lpn = int(rng.integers(0, 40))
+            ftl.host_write(lpn)
+            touched.add(lpn)
+        elif op == 2:
+            lpn = int(rng.integers(0, 40))
+            ftl.host_read(lpn)     # may lazily pre-fill
+            touched.add(lpn)
+        else:
+            die = int(rng.integers(0, ftl.n_dies))
+            if ftl.sealed[die]:
+                blk = sorted(ftl.sealed[die])[
+                    int(rng.integers(0, len(ftl.sealed[die])))]
+                ftl.retire_block(die, blk)
+        ftl.drain_events()
+    # bijection: distinct lpns on distinct ppns, p2l the exact inverse
+    ppns = sorted(ftl.l2p.values())
+    assert len(set(ppns)) == len(ppns)
+    for lpn, ppn in ftl.l2p.items():
+        assert ftl.p2l[ppn] == lpn
+    # zero data loss: everything ever written or pre-filled still maps
+    assert touched <= set(ftl.l2p)
+    # retirement is terminal: full write pointer, invalid, out of every
+    # pool and frontier
+    for blk in ftl.retired:
+        assert ftl.wp[blk] == ftl.ppb
+        assert ftl.valid[blk] == 0
+        die = blk // ftl.blocks_per_die
+        assert blk not in ftl.free[die]
+        assert blk not in ftl.sealed[die]
+        assert ftl.active[die] != blk and ftl.gc_active[die] != blk

@@ -100,14 +100,22 @@ class TestSyntheticBitParity:
         assert SyntheticSource(w).trace(1) is cached_trace(w, seed=1)
 
     def test_pinned_compare_mechanisms_cell(self):
-        """The pre-refactor stats of one plain cell, bit-for-bit."""
+        """The pre-refactor stats of one plain cell, bit-for-bit.
+
+        Pinned fields only: SimStats grows new (zero-defaulted) counters
+        over time — the contract is that every *pre-refactor* value is
+        untouched, not that no fields were added since the pin.
+        """
         w = dataclasses.replace(make_workloads()["websearch"],
                                 n_requests=400)
         grid = compare_mechanisms(w, AGED, mechanisms=("baseline", "pr2ar2"),
                                   seed=3)
         for mech, want in GOLDEN["compare_plain"].items():
             got = dataclasses.asdict(grid[mech])
-            assert got == want, f"{mech}: stats drifted from pre-refactor"
+            for field, v in want.items():
+                assert got[field] == v, (
+                    f"{mech}.{field}: stats drifted from pre-refactor"
+                )
 
     def test_pinned_compare_mechanisms_gc_cell(self):
         """Same contract through the FTL prepass (WA/GC counters too)."""
@@ -116,7 +124,8 @@ class TestSyntheticBitParity:
                                   seed=1, gc="prepass")
         for mech, want in GOLDEN["compare_gc_prepass"].items():
             got = dataclasses.asdict(grid[mech])
-            assert got == want, f"{mech}: GC-cell stats drifted"
+            for field, v in want.items():
+                assert got[field] == v, f"{mech}.{field}: GC-cell stats drifted"
 
 
 class TestRequestTraceValidation:
