@@ -96,7 +96,7 @@ import numpy as np
 
 from repro.core.retry import RetryPolicy
 from repro.flashsim.config import (DEFAULT_SSD, FaultConfig, GCConfig,
-                                   SSDConfig)
+                                   HostCacheConfig, SSDConfig)
 from repro.flashsim.engine_ref import SSDSimRef
 from repro.flashsim.runtime import Cell, host_fingerprint, run_cells
 from repro.flashsim.ssd import (
@@ -630,6 +630,131 @@ def bench_fault_cell(w, cond, n_requests, seeds, workers=1):
     return row
 
 
+# -- closed-loop cells: throughput-vs-QD ladder ---------------------------
+
+#: NCQ depths of the saturation ladder (powers of two through the knee).
+CLOSED_QD_LADDER = (1, 2, 4, 8, 16, 32, 64, 128, 256)
+CLOSED_QD_LADDER_QUICK = (1, 4, 16, 64, 256)
+#: Fixed depth for the PR² overlap-win and host-cache rungs: past the
+#: linear region, before open-loop convergence.
+CLOSED_WIN_QD = 8
+
+
+def bench_closed_loop_cell(w, cond, n_requests, seeds, quick=False,
+                           workers=1):
+    """Closed-loop frontend: throughput-vs-QD ladder, mean ± 95% CI.
+
+    Every rung replays one GC write-cliff profile through the NCQ-gated
+    frontend (``gc="prepass"``) for baseline and pr2ar2; an open-loop
+    compare cell per seed anchors the QD-bounded-p99 check and a
+    write-back-cache rung at ``CLOSED_WIN_QD`` records the absorption
+    counters.  Acceptance flags:
+
+    * ``ok_throughput_monotone`` — mean pr2ar2 throughput never drops as
+      the queue deepens (and the ladder shows a knee: the top rung no
+      longer scales linearly);
+    * ``ok_qd_bounded_p99`` — the device-side read p99 at every bounded
+      rung (QD <= 16) stays at or below the open-loop read p99 (admission
+      control bounds device queueing on the GC write cliff);
+    * ``ok_pr2_overlap_win`` — at ``CLOSED_WIN_QD`` the pipelined
+      mechanism (CACHE READ: next sense under the current DMA transfer)
+      beats serial baseline on closed-loop throughput.
+    """
+    ladder = CLOSED_QD_LADDER_QUICK if quick else CLOSED_QD_LADDER
+    win_qd = (CLOSED_WIN_QD if CLOSED_WIN_QD in ladder
+              else ladder[len(ladder) // 2])
+    w = dataclasses.replace(w, n_requests=n_requests)
+    mechs = ("baseline", "pr2ar2")
+    hc = HostCacheConfig(capacity_pages=max(64, n_requests // 8))
+    cells = [
+        Cell("compare", w, (cond,), mechs, s, gc="prepass", ncq_depth=qd)
+        for qd in ladder
+        for s in seeds
+    ]
+    cells += [Cell("compare", w, (cond,), mechs, s, gc="prepass")
+              for s in seeds]                       # open-loop anchor
+    cells += [Cell("compare", w, (cond,), mechs, s, gc="prepass",
+                   ncq_depth=win_qd, host_cache=hc)
+              for s in seeds]                       # write-back cache rung
+    t0 = time.perf_counter()
+    results = iter(run_cells(cells, workers=workers))
+    row = {
+        "workload": w.name,
+        "condition": cond.label(),
+        "n_requests": n_requests,
+        "n_seeds": len(seeds),
+        "qd_ladder": list(ladder),
+        "win_qd": win_qd,
+    }
+    iops_by_qd = {}
+    rungs = []
+    for qd in ladder:
+        iops_b, iops_p, dev_p99, wait = [], [], [], []
+        for s in seeds:
+            grid = next(results)
+            st, base = grid["pr2ar2"], grid["baseline"]
+            iops_b.append(base.throughput_iops)
+            iops_p.append(st.throughput_iops)
+            dev_p99.append(st.read_device_p99_us)
+            wait.append(st.hostq_wait_mean_us)
+        im, ih = mean_ci95(iops_p)
+        bm, bh = mean_ci95(iops_b)
+        dm, dh = mean_ci95(dev_p99)
+        iops_by_qd[qd] = im
+        rungs.append({
+            "qd": qd,
+            "throughput_iops_mean": round(im, 1),
+            "throughput_iops_ci95": round(ih, 1),
+            "baseline_iops_mean": round(bm, 1),
+            "baseline_iops_ci95": round(bh, 1),
+            "read_device_p99_us_mean": round(dm, 1),
+            "read_device_p99_us_ci95": round(dh, 1),
+            "hostq_wait_mean_us": round(float(np.mean(wait)), 1),
+        })
+    row["rungs"] = rungs
+    open_p99 = []
+    for s in seeds:
+        grid = next(results)
+        open_p99.append(grid["pr2ar2"].read_p99_us)
+    om, oh = mean_ci95(open_p99)
+    row["open_loop_read_p99_us_mean"] = round(om, 1)
+    row["open_loop_read_p99_us_ci95"] = round(oh, 1)
+    hit_p, absw, stalls, mean_c = [], [], [], []
+    for s in seeds:
+        grid = next(results)
+        st = grid["pr2ar2"]
+        hit_p.append(st.cache_hit_pages)
+        absw.append(st.cache_absorbed_writes)
+        stalls.append(st.cache_stalled_writes)
+        mean_c.append(st.mean_us)
+    row["cache_rung"] = {
+        "qd": win_qd,
+        "capacity_pages": hc.capacity_pages,
+        "absorbed_writes_mean": round(float(np.mean(absw)), 1),
+        "hit_pages_mean": round(float(np.mean(hit_p)), 1),
+        "stalled_writes_mean": round(float(np.mean(stalls)), 1),
+        "mean_us": round(float(np.mean(mean_c)), 1),
+    }
+    row["wall_s"] = round(time.perf_counter() - t0, 3)
+
+    ladder_iops = [iops_by_qd[qd] for qd in ladder]
+    # 2% slack: past saturation, deeper queues reshuffle GC interleaving
+    # and the plateau can dip fractionally.
+    monotone = all(b >= a * 0.98
+                   for a, b in zip(ladder_iops, ladder_iops[1:]))
+    has_knee = ladder_iops[-1] < ladder_iops[-2] * 1.5
+    row["ok_throughput_monotone"] = bool(monotone and has_knee)
+    bounded = [r for r in rungs if r["qd"] <= 16]
+    row["ok_qd_bounded_p99"] = bool(all(
+        r["read_device_p99_us_mean"] <= om * (1 + 1e-9) for r in bounded
+    ))
+    win = next(r for r in rungs if r["qd"] == win_qd)
+    row["pr2_overlap_speedup"] = round(
+        win["throughput_iops_mean"] / win["baseline_iops_mean"], 3)
+    row["ok_pr2_overlap_win"] = bool(row["pr2_overlap_speedup"] > 1.0)
+    return row
+
+
 # -- parallel-sweep cells: the runtime's workers speedup ------------------
 
 
@@ -806,6 +931,25 @@ def main():
             f"ok={row['ok_unrecoverable_zero'] and row['ok_win_erodes']}"
         )
 
+    closed_rows = []
+    for w in (GC_PROFILES[:1] if args.quick else GC_PROFILES[:2]):
+        n_cl = GC_QUICK_N if args.quick else n
+        row = bench_closed_loop_cell(w, AGED, n_cl, seeds,
+                                     quick=args.quick, workers=workers)
+        closed_rows.append(row)
+        knee = row["rungs"][-1]
+        ok = (row["ok_throughput_monotone"] and row["ok_qd_bounded_p99"]
+              and row["ok_pr2_overlap_win"])
+        print(
+            f"CLOSED {w.name:8s} QD ladder "
+            f"{row['rungs'][0]['throughput_iops_mean']:.0f} -> "
+            f"{knee['throughput_iops_mean']:.0f} IOPS "
+            f"(x{row['pr2_overlap_speedup']:.2f} vs baseline @QD"
+            f"{row['win_qd']}) dev_p99<= "
+            f"{row['open_loop_read_p99_us_mean']:.0f}us "
+            f"ok={ok}"
+        )
+
     parallel_row = None
     if workers > 1:
         t0 = time.perf_counter()
@@ -885,6 +1029,16 @@ def main():
         )
         if trace_carried:
             summary["trace_cells_carried"] = True  # from a previous run
+    if closed_rows:
+        summary["closed_loop_acceptance_ok"] = all(
+            r["ok_throughput_monotone"] and r["ok_qd_bounded_p99"]
+            and r["ok_pr2_overlap_win"]
+            for r in closed_rows
+        )
+        summary["closed_loop_pr2_speedup_mean"] = round(
+            float(np.mean([r["pr2_overlap_speedup"] for r in closed_rows])),
+            3,
+        )
     if fault_rows:
         summary["fault_acceptance_ok"] = all(
             r["ok_unrecoverable_zero"] and r["ok_mispredicted_fired"]
@@ -904,7 +1058,8 @@ def main():
            "summary": summary,
            "cells_detail": rows, "claim_cells": claim_rows,
            "gc_cells": gc_rows, "sched_cells": sched_rows,
-           "trace_cells": trace_rows, "fault_cells": fault_rows}
+           "trace_cells": trace_rows, "fault_cells": fault_rows,
+           "closed_loop_cells": closed_rows}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

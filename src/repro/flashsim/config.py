@@ -154,6 +154,42 @@ class FaultConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class HostCacheConfig:
+    """Host write-back cache knobs (see :mod:`repro.flashsim.hostcache`).
+
+    Only meaningful on the closed-loop path (``SSDConfig.ncq_depth`` set):
+    writes that fit are absorbed into a host-side DRAM cache and complete
+    at cache speed; their flash programs are issued later ("flushed") when
+    the dirty watermark is crossed, entering the device through the normal
+    scheduler/GC machinery as low-priority (non-host-read) programs.
+    Reads that hit a dirty/flushing line are served from the cache.
+    """
+
+    #: Cache capacity in flash pages.  Occupancy counts every absorbed
+    #: page-program until its flush completes on the die.
+    capacity_pages: int = 4096
+    #: Flushing starts when dirty (not-yet-issued) pages exceed
+    #: ``flush_high * capacity_pages`` ...
+    flush_high: float = 0.75
+    #: ... and stops once they drop to ``flush_low * capacity_pages``.
+    flush_low: float = 0.5
+    #: Host-side service time (us) for a cache-absorbed write or a
+    #: full-cache-hit read (DRAM access; no flash op, no tDMA).
+    hit_us: float = 2.0
+
+    def __post_init__(self):
+        if self.capacity_pages < 1:
+            raise ValueError("capacity_pages must be >= 1")
+        if not 0.0 < self.flush_low <= self.flush_high <= 1.0:
+            raise ValueError(
+                "need 0 < flush_low <= flush_high <= 1, got "
+                f"low={self.flush_low} high={self.flush_high}"
+            )
+        if self.hit_us < 0.0:
+            raise ValueError("hit_us must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class SSDConfig:
     """High-end NVMe SSD organization, matching the paper's MQSim setup.
 
@@ -190,12 +226,32 @@ class SSDConfig:
     #: default) disables fault injection entirely — no failure draws, no
     #: recovery traffic, bit-identical to a fault-free run.
     faults: FaultConfig | None = None
+    #: Host NCQ depth for the CLOSED-LOOP frontend.  ``None`` (the
+    #: default) keeps the simulator open-loop — every request admitted at
+    #: its trace arrival time, bit-identical to all prior output.  An
+    #: integer ``>= 1`` bounds the number of in-flight requests: arrivals
+    #: wait in a host queue until a device slot frees, `SimStats` gains
+    #: queue-wait vs device-time decomposition and throughput counters,
+    #: and the engine runs the explicit sense/transfer channel model.
+    ncq_depth: int | None = None
+    #: Host write-back cache (closed-loop only; requires ``ncq_depth``).
+    #: ``None`` sends every write straight to the device.
+    host_cache: HostCacheConfig | None = None
 
     def __post_init__(self):
         if self.n_channels < 1 or self.dies_per_channel < 1:
             raise ValueError(
                 f"SSDConfig needs >=1 channel and >=1 die per channel, got "
                 f"{self.n_channels}x{self.dies_per_channel}"
+            )
+        if self.ncq_depth is not None and self.ncq_depth < 1:
+            raise ValueError(
+                f"ncq_depth must be >= 1 or None, got {self.ncq_depth}"
+            )
+        if self.host_cache is not None and self.ncq_depth is None:
+            raise ValueError(
+                "host_cache requires the closed-loop frontend: set "
+                "ncq_depth as well"
             )
         from repro.flashsim.sched import get_scheduler
 

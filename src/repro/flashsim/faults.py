@@ -281,6 +281,10 @@ class FaultPlan:
     tr: List[float]
     xa: List[int]
     xtr: List[float]
+    #: Logical page per op (-1 for GC/inserted recovery ops); only present
+    #: when the caller passed ``lpn`` — the closed-loop frontend needs it
+    #: for write-cache hit detection.
+    lpn: Optional[List[int]] = None
 
 
 def plan_faults(
@@ -296,6 +300,7 @@ def plan_faults(
     tr: List[float],
     ptype: List[int],
     wear: Optional[List[float]],
+    lpn: Optional[List[int]] = None,
 ) -> FaultPlan:
     """Deterministic fault pre-pass over an admission stream.
 
@@ -331,8 +336,9 @@ def plan_faults(
     o_tr: List[float] = []
     o_xa: List[int] = []
     o_xtr: List[float] = []
+    o_lpn: List[int] = []
 
-    def emit(t, r, d, c, rd, er, du, at, sn, x=0, xt=0.0):
+    def emit(t, r, d, c, rd, er, du, at, sn, x=0, xt=0.0, lp=-1):
         o_adm.append(t)
         o_rid.append(r)
         o_die.append(d)
@@ -344,12 +350,14 @@ def plan_faults(
         o_tr.append(sn)
         o_xa.append(x)
         o_xtr.append(xt)
+        o_lpn.append(lp)
 
     for i in range(len(adm)):
         d = die[i]
         mult = model.die_mult(d)
         w = float(wear[i]) if wear is not None else 0.0
         r = rid[i]
+        lp_i = lpn[i] if lpn is not None else -1
         if read[i]:
             tr_i = tr[i] * mult
             xa_i, xtr_i, rebuild = 0, 0.0, False
@@ -361,7 +369,7 @@ def plan_faults(
                 if affected:
                     out.affected_rids.add(r)
             emit(adm[i], r, d, ch[i], True, False, dur[i], a[i], tr_i,
-                 xa_i, xtr_i)
+                 xa_i, xtr_i, lp_i)
             if rebuild:
                 pt = ptype[i]
                 peers = model.rebuild_peers(d)
@@ -393,9 +401,11 @@ def plan_faults(
                 out.program_fails += 1
                 out.affected_rids.add(r)
                 dur_i += tprog * mult
-            emit(adm[i], r, d, ch[i], False, False, dur_i, a[i], tr[i])
+            emit(adm[i], r, d, ch[i], False, False, dur_i, a[i], tr[i],
+                 lp=lp_i)
 
     return FaultPlan(
         arrival=o_adm, rid=o_rid, die=o_die, ch=o_ch, read=o_read,
         erase=o_erase, dur=o_dur, a=o_a, tr=o_tr, xa=o_xa, xtr=o_xtr,
+        lpn=o_lpn if lpn is not None else None,
     )

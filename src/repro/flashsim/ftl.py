@@ -144,6 +144,10 @@ class FTLSchedule:
     wear_pec: np.ndarray     # (P,) block-local added wear at read time (P/E)
     n_requests: int
     stats: FTLStats
+    #: (P,) logical page of each host op; -1 for GC/erase ops.  Only the
+    #: closed-loop frontend reads it (write-cache hit detection); None on
+    #: schedules built before the field existed.
+    lpn: Optional[np.ndarray] = None
 
     @property
     def n_ops(self) -> int:
@@ -541,8 +545,9 @@ def build_ftl_schedule(
     kind: List[int] = []
     dur: List[float] = []
     wear: List[float] = []
+    lpns: List[int] = []
 
-    def emit(a, r, d, pt, k, du, w):
+    def emit(a, r, d, pt, k, du, w, lp=-1):
         arrival.append(a)
         rid.append(r)
         die.append(d)
@@ -551,6 +556,7 @@ def build_ftl_schedule(
         kind.append(k)
         dur.append(du)
         wear.append(w)
+        lpns.append(lp)
 
     arr_l = ex.arrival_us.tolist()
     rid_l = ex.rid.tolist()
@@ -564,11 +570,11 @@ def build_ftl_schedule(
         d = lpn % n_dies
         if read_l[i]:
             w = ftl.host_read(lpn)
-            emit(a, rid_l[i], d, lpn % 3, OP_READ, 0.0, w)
+            emit(a, rid_l[i], d, lpn % 3, OP_READ, 0.0, w, lpn)
             host_reads += 1
         else:
             ftl.host_write(lpn)
-            emit(a, rid_l[i], d, lpn % 3, OP_PROG, tprog, 0.0)
+            emit(a, rid_l[i], d, lpn % 3, OP_PROG, tprog, 0.0, lpn)
         for (k, gd, pt, gw, _blk) in ftl.drain_events():
             gdur = tprog if k == OP_GC_PROG else (terase if k == OP_ERASE else 0.0)
             emit(a, -1, gd, pt, k, gdur, gw)
@@ -584,4 +590,5 @@ def build_ftl_schedule(
         wear_pec=np.asarray(wear, np.float64),
         n_requests=ex.n_requests,
         stats=ftl.stats(host_reads=host_reads),
+        lpn=np.asarray(lpns, np.int64),
     )

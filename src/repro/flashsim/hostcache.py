@@ -1,0 +1,169 @@
+"""Host-side write-back cache for the closed-loop frontend.
+
+:class:`WriteCache` models the controller DRAM write buffer a real host
+sees in front of the flash array: incoming writes that fit are *absorbed*
+(the request completes at DRAM speed), their page programs are parked in
+an admission-order FIFO, and a watermark policy later *flushes* them to
+the device, where they enter the ordinary scheduler/GC machinery as
+low-priority programs.  Reads that hit a dirty (or still-flushing) line
+are served from the cache without touching flash.
+
+The class is engine-agnostic and fully synchronous — the event loop in
+:mod:`repro.flashsim.engine` drives it and decides *when* pops/completions
+happen; this module only owns the bookkeeping contract:
+
+* **Occupancy** counts every absorbed page program from ``absorb()``
+  until ``page_durable()`` — dirty *and* in-flight-flush pages both hold
+  capacity, so backpressure is honest.
+* **Read-after-write**: ``version(lpn)`` always returns the newest
+  version in stream order (cached if any copy is resident, else the
+  durable one), and FIFO flushing preserves per-LPN program order, so the
+  durable state after a full drain equals a synchronous replay of the
+  write stream.
+* **No coalescing**: re-writing a cached LPN appends a new entry (a new
+  program will be issued) rather than merging — each absorbed page-op
+  occupies its own slot until it lands, which keeps flush traffic equal
+  to absorbed traffic and the capacity accounting trivially auditable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, Iterator, Optional, Sequence, Tuple
+
+from repro.flashsim.config import HostCacheConfig
+
+__all__ = ["CacheEntry", "WriteCache"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheEntry:
+    """One absorbed write: its page LPNs, their versions, and an opaque
+    payload the engine uses to find the deferred device ops."""
+
+    lpns: Tuple[int, ...]
+    versions: Tuple[int, ...]
+    payload: Any = None
+
+
+class WriteCache:
+    """Page-granular write-back cache with FIFO flush order and
+    high/low watermarks (see :class:`~repro.flashsim.config.
+    HostCacheConfig`)."""
+
+    def __init__(self, cfg: HostCacheConfig):
+        self.cfg = cfg
+        self.capacity = cfg.capacity_pages
+        self.high_mark = cfg.flush_high * cfg.capacity_pages
+        self.low_mark = cfg.flush_low * cfg.capacity_pages
+        #: absorbed-but-not-issued page programs
+        self.dirty_pages = 0
+        #: issued-but-not-durable page programs
+        self.flushing_pages = 0
+        self._fifo: Deque[CacheEntry] = deque()
+        #: lpn -> number of resident (dirty or flushing) copies
+        self._resident: Dict[int, int] = {}
+        #: lpn -> newest absorbed version (monotone per lpn)
+        self._latest: Dict[int, int] = {}
+        #: lpn -> newest version that has landed on flash
+        self.durable: Dict[int, int] = {}
+        self._next_version = 1
+        # counters (engine copies these into SimStats)
+        self.absorbed_writes = 0
+        self.absorbed_pages = 0
+        self.hit_pages = 0
+        self.flush_pages = 0
+
+    # -- occupancy ---------------------------------------------------------
+
+    @property
+    def pending_pages(self) -> int:
+        """Pages currently holding capacity (dirty + flushing)."""
+        return self.dirty_pages + self.flushing_pages
+
+    def fits(self, n_pages: int) -> bool:
+        """Could a write of ``n_pages`` EVER be absorbed?  False means the
+        caller must fall back to write-through."""
+        return n_pages <= self.capacity
+
+    def can_absorb(self, n_pages: int) -> bool:
+        return self.pending_pages + n_pages <= self.capacity
+
+    # -- write path --------------------------------------------------------
+
+    def absorb(self, lpns: Sequence[int], payload: Any = None) -> CacheEntry:
+        """Absorb one write (its pages become dirty).  Caller must have
+        checked :meth:`can_absorb`."""
+        if not self.can_absorb(len(lpns)):
+            raise RuntimeError("absorb() without capacity — caller bug")
+        versions = []
+        for lpn in lpns:
+            v = self._next_version
+            self._next_version += 1
+            self._latest[lpn] = v
+            self._resident[lpn] = self._resident.get(lpn, 0) + 1
+            versions.append(v)
+        entry = CacheEntry(tuple(lpns), tuple(versions), payload)
+        self._fifo.append(entry)
+        self.dirty_pages += len(lpns)
+        self.absorbed_writes += 1
+        self.absorbed_pages += len(lpns)
+        return entry
+
+    # -- read path ---------------------------------------------------------
+
+    def contains(self, lpn: int) -> bool:
+        """Read hit: a dirty or flushing copy of ``lpn`` is resident."""
+        return lpn in self._resident
+
+    def version(self, lpn: int) -> Optional[int]:
+        """Version a read admitted *now* observes: the newest resident
+        copy if cached, else the durable copy (None if never written)."""
+        if lpn in self._resident:
+            return self._latest[lpn]
+        return self.durable.get(lpn)
+
+    def note_hit(self, n_pages: int = 1) -> None:
+        self.hit_pages += n_pages
+
+    # -- flush policy ------------------------------------------------------
+
+    def need_flush(self) -> bool:
+        """High watermark crossed — start issuing flush entries."""
+        return self.dirty_pages > self.high_mark
+
+    def flushed_enough(self) -> bool:
+        """Low watermark reached — stop issuing."""
+        return self.dirty_pages <= self.low_mark
+
+    def pop_entry(self) -> Optional[CacheEntry]:
+        """Oldest dirty entry, moved dirty -> flushing; None when clean."""
+        if not self._fifo:
+            return None
+        entry = self._fifo.popleft()
+        n = len(entry.lpns)
+        self.dirty_pages -= n
+        self.flushing_pages += n
+        self.flush_pages += n
+        return entry
+
+    def drain(self) -> Iterator[CacheEntry]:
+        """Pop every remaining dirty entry (end-of-trace drain)."""
+        while self._fifo:
+            yield self.pop_entry()
+
+    def page_durable(self, lpn: int, version: int) -> None:
+        """One flushed page program completed on the die: free its slot,
+        update the durable map, evict the line if no newer copy exists."""
+        self.flushing_pages -= 1
+        if self.flushing_pages < 0:
+            raise RuntimeError("page_durable() without a flush in flight")
+        if version >= self.durable.get(lpn, -1):
+            self.durable[lpn] = version
+        rc = self._resident[lpn] - 1
+        if rc:
+            self._resident[lpn] = rc
+        else:
+            del self._resident[lpn]
+            del self._latest[lpn]

@@ -121,6 +121,8 @@ class Cell:
     gc: Optional[str] = None
     shard: bool = False
     faults: Optional[FaultConfig] = None
+    ncq_depth: Optional[int] = None
+    host_cache: object = None
 
     def __post_init__(self):
         if self.kind not in ("simulate", "compare", "batch"):
@@ -154,6 +156,7 @@ def _run_cell(cell: Cell):
             seed=cell.seed, cfg=cell.cfg, n_requests=cell.n_requests,
             engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
             shard=cell.shard, faults=cell.faults,
+            ncq_depth=cell.ncq_depth, host_cache=cell.host_cache,
         )
     if cell.kind == "compare":
         return compare_mechanisms(
@@ -161,12 +164,14 @@ def _run_cell(cell: Cell):
             seed=cell.seed, cfg=cell.cfg, n_requests=cell.n_requests,
             engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
             shard=cell.shard, faults=cell.faults,
+            ncq_depth=cell.ncq_depth, host_cache=cell.host_cache,
         )
     return simulate_batch(
         cell.workload, cell.conditions, mechanisms=cell.mechanisms,
         seeds=(cell.seed,), cfg=cell.cfg, n_requests=cell.n_requests,
         engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
         shard=cell.shard, faults=cell.faults,
+        ncq_depth=cell.ncq_depth, host_cache=cell.host_cache,
     )
 
 
@@ -226,16 +231,30 @@ def _encode_result(r):
                     f"journaled")
 
 
-def _decode_result(e):
+def _stats_from_journal(d):
+    """Rebuild a SimStats from a journal record, tolerating schema drift.
+
+    SimStats grows additive zero-default fields over time (GC, fault and
+    closed-loop blocks landed in separate PRs).  A journal written by an
+    older build lacks the new keys (defaults fill them in), and one
+    written by a *newer* build may carry keys this build doesn't know —
+    drop those rather than crash, so resume never breaks on additive
+    stats.
+    """
     from repro.flashsim.ssd import SimStats
 
+    known = {f.name for f in dataclasses.fields(SimStats)}
+    return SimStats(**{k: v for k, v in d.items() if k in known})
+
+
+def _decode_result(e):
     t, v = e["t"], e["v"]
     if t == "stats":
-        return SimStats(**v)
+        return _stats_from_journal(v)
     if t == "mechs":
-        return {m: SimStats(**d) for m, d in v.items()}
+        return {m: _stats_from_journal(d) for m, d in v.items()}
     return {
-        (m, OperatingCondition(ret, pec), s): SimStats(**d)
+        (m, OperatingCondition(ret, pec), s): _stats_from_journal(d)
         for m, ret, pec, s, d in v
     }
 
@@ -414,6 +433,8 @@ def run_sweep(
     workers: int = 1,
     faults: Optional[FaultConfig] = None,
     journal=None,
+    ncq_depth: Optional[int] = None,
+    host_cache=None,
 ) -> Dict[Tuple[str, OperatingCondition, int], "object"]:
     """``simulate_batch`` semantics with seed groups fanned over workers.
 
@@ -431,7 +452,8 @@ def run_sweep(
     seeds = tuple(seeds)
     cells = [
         Cell("batch", workload, conditions, mechanisms, s, cfg, n_requests,
-             engine, scheduler, gc, shard, faults=faults)
+             engine, scheduler, gc, shard, faults=faults,
+             ncq_depth=ncq_depth, host_cache=host_cache)
         for s in seeds
     ]
     groups = run_cells(cells, workers=workers, journal=journal)

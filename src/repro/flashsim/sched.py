@@ -62,6 +62,16 @@ truthiness / ``len()``  queue emptiness / total queued ops.
 
 ``FCFSQueue`` subclasses ``deque`` so ``append`` / ``__bool__`` stay
 C-speed on the hot path; ``pop_next`` aliases ``deque.popleft``.
+
+Closed-loop frontend
+--------------------
+The closed-loop interpreter (``engine.run_closed_loop``, selected with
+``ncq_depth=``) reuses these same queue objects for die scheduling, so
+``fcfs`` / ``host_prio`` / ``host_prio_aged`` / ``tokens`` all work
+unchanged under NCQ admission.  ``preempt`` is the exception: its
+suspend/resume bookkeeping lives in the open-loop event core only, so
+combining ``sched="preempt"`` with ``ncq_depth=`` raises
+``NotImplementedError``.
 """
 
 from __future__ import annotations

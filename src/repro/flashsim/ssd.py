@@ -212,6 +212,23 @@ class SimStats:
     erase_fails: int = 0      # erases that failed verification
     unrecoverable: int = 0    # reads lost after the full recovery ladder
     recovery_p99_us: float = 0.0  # p99 response over recovery-affected reqs
+    # Closed-loop block: populated only when the NCQ frontend is on
+    # (``SSDConfig.ncq_depth`` / the run APIs' ``ncq_depth=`` knob).
+    # Response time decomposes exactly:  response = hostq wait
+    # + device time + host_overhead_us.
+    hostq_wait_mean_us: float = 0.0   # mean admission wait in the host queue
+    hostq_wait_p99_us: float = 0.0    # p99 admission wait
+    device_mean_us: float = 0.0       # mean admit -> complete device time
+    read_device_p99_us: float = 0.0   # p99 device time over host reads —
+    #                                   the QD-bounded latency figure
+    throughput_iops: float = 0.0      # sustained n_requests / makespan
+    max_inflight: int = 0             # peak admitted-and-incomplete requests
+    cache_hit_reads: int = 0          # reads served entirely from the cache
+    cache_hit_pages: int = 0          # read pages served from dirty lines
+    cache_absorbed_writes: int = 0    # writes absorbed by the write cache
+    cache_flush_pages: int = 0        # page programs issued by cache flushes
+    cache_stalled_writes: int = 0     # writes that waited on cache capacity
+    die_sense_util: float = 0.0       # fraction of span dies spent sensing
 
     def as_row(self) -> str:
         row = (
@@ -464,6 +481,7 @@ class SSDSim:
         schedule=None,
         validate: bool = False,
         shard: bool = False,
+        trace_phases: bool = False,
     ) -> SimStats:
         """Simulate one trace.
 
@@ -478,12 +496,35 @@ class SSDSim:
         default (see :mod:`repro.flashsim.engine`).  ``validate=True``
         turns on the engine's work-conservation checks (test
         instrumentation).
+
+        With ``cfg.ncq_depth`` set the run goes through the closed-loop
+        frontend (:func:`repro.flashsim.engine.run_closed_loop`): NCQ-
+        gated admission, optional write-back cache, explicit channel DMA
+        phase.  Closed-loop supports prepass GC and faults but not the
+        preempt scheduler or online GC; ``shard=`` is ignored (the NCQ
+        couples channels through the shared slot pool — the monolithic
+        closed loop is the defined semantics for any ``shard``/
+        ``workers`` setting).  ``trace_phases=True`` (closed loop only)
+        records per-op sense/transfer/program intervals into
+        ``self.last_phases`` for the interval-invariant property tests.
         """
         cfg, t = self.cfg, self.cfg.timing
         tprog = t.tprog_us
         pipelined = self.policy.pipelined
         sched_policy = get_scheduler(cfg.scheduler)
         gc_mode = cfg.gc.mode if cfg.gc.enabled else None
+        closed = cfg.ncq_depth is not None
+        if closed:
+            if gc_mode == "online":
+                raise NotImplementedError(
+                    "closed-loop frontend (ncq_depth) does not support "
+                    "online GC yet — use gc='prepass'"
+                )
+            if sched_policy.preemptive:
+                raise NotImplementedError(
+                    "closed-loop frontend (ncq_depth) does not support "
+                    "the preempt scheduler"
+                )
 
         if schedule is None and gc_mode == "prepass":
             from repro.flashsim.ftl import build_ftl_schedule
@@ -520,6 +561,8 @@ class SSDSim:
             (adm_t, op_rid, op_die, op_ch, op_read,
              op_erase, op_dur) = schedule.admission_lists
             n_requests = schedule.n_requests
+            op_lpn = (schedule.lpn.tolist()
+                      if schedule.lpn is not None else None)
             if fm is None:
                 bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
                                     op_erase, op_dur, attempts_np.tolist(),
@@ -531,11 +574,13 @@ class SSDSim:
                     fm, adm_t, op_rid, op_die, op_ch, op_read, op_erase,
                     op_dur, attempts_np.tolist(), tr_np.tolist(),
                     schedule.ptype.tolist(), schedule.wear_pec.tolist(),
+                    lpn=op_lpn,
                 )
                 bufs = make_buffers(plan.arrival, plan.rid, plan.die,
                                     plan.ch, plan.read, plan.erase,
                                     plan.dur, plan.a, plan.tr)
                 bufs.xa, bufs.xtr = plan.xa, plan.xtr
+                op_lpn = plan.lpn
         elif gc_mode == "online":
             # Online FTL path: host ops only in the admission stream;
             # attempt counts / tR resolve at admission, GC injects live.
@@ -555,6 +600,7 @@ class SSDSim:
                 bufs.xtr = [0.0] * P
             online = OnlineGC(cfg, ex, self, faults=fm)
             n_requests = ex.n_requests
+            op_lpn = None
             total_read_pages = total_attempts = 0   # engine-accumulated
         else:
             ex = expansion if expansion is not None else expand_trace(trace, cfg)
@@ -569,6 +615,7 @@ class SSDSim:
             tr_np = (self._tr_base * self.tr_scale)[ex.ptype]
             adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
             n_requests = ex.n_requests
+            op_lpn = ex.page_id.tolist()
             if fm is None:
                 bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
                                     [False] * P,    # no erases without FTL
@@ -581,27 +628,76 @@ class SSDSim:
                     fm, adm_t, op_rid, op_die, op_ch, op_read,
                     [False] * P, [tprog] * P, attempts_np.tolist(),
                     tr_np.tolist(), ex.ptype.tolist(), None,
+                    lpn=op_lpn,
                 )
                 bufs = make_buffers(plan.arrival, plan.rid, plan.die,
                                     plan.ch, plan.read, plan.erase,
                                     plan.dur, plan.a, plan.tr)
                 bufs.xa, bufs.xtr = plan.xa, plan.xtr
+                op_lpn = plan.lpn
 
-        res = run_event_core(cfg, pipelined, sched_policy, bufs, n_requests,
-                             online=online, validate=validate, shard=shard)
+        closed_kw = {}
+        if closed:
+            from repro.flashsim.engine import run_closed_loop
+
+            cache = None
+            if cfg.host_cache is not None:
+                from repro.flashsim.hostcache import WriteCache
+
+                cache = WriteCache(cfg.host_cache)
+            res = run_closed_loop(
+                cfg, pipelined, sched_policy, bufs, n_requests,
+                trace.arrival_us.tolist(), trace.is_read.tolist(),
+                cfg.ncq_depth, op_lpn=op_lpn, cache=cache,
+                validate=validate, trace_phases=trace_phases,
+            )
+            gc_suspensions = 0
+            total_attempts = res.attempts_issued
+            total_read_pages = res.read_pages_issued
+            self.last_phases = res.phases
+        else:
+            res = run_event_core(cfg, pipelined, sched_policy, bufs,
+                                 n_requests, online=online,
+                                 validate=validate, shard=shard)
+            gc_suspensions = res.gc_suspensions
+            self.last_phases = None
+            if online is not None:
+                total_attempts = res.online_attempts
+                total_read_pages = res.online_read_pages
         self.events_processed = res.n_events
-        self.last_gc_suspensions = res.gc_suspensions
+        self.last_gc_suspensions = gc_suspensions
         self.last_die_busy_us = float(sum(res.die_tot))
-
-        if online is not None:
-            total_attempts = res.online_attempts
-            total_read_pages = res.online_read_pages
 
         req_done_at = np.asarray(res.req_done)
         self.last_req_done_us = req_done_at
         response = req_done_at - trace.arrival_us + cfg.host_overhead_us
         read_resp = response[trace.is_read]
         span = float(req_done_at.max())
+        if closed:
+            # Closed-loop span: the makespan of everything the device did
+            # (flush programs / GC can outlive the last host completion).
+            span = max(span, max(res.die_busy), max(res.ch_busy))
+            admit_at = np.asarray(res.req_admit)
+            wait = admit_at - trace.arrival_us
+            device = req_done_at - admit_at
+            read_dev = device[trace.is_read]
+            closed_kw = dict(
+                hostq_wait_mean_us=float(wait.mean()),
+                hostq_wait_p99_us=float(np.percentile(wait, 99)),
+                device_mean_us=float(device.mean()),
+                read_device_p99_us=(
+                    float(np.percentile(read_dev, 99))
+                    if read_dev.size else 0.0
+                ),
+                throughput_iops=n_requests / span * 1e6,
+                max_inflight=res.max_inflight,
+                cache_hit_reads=res.full_hit_reads,
+                cache_hit_pages=res.hit_pages,
+                cache_absorbed_writes=res.absorbed_writes,
+                cache_flush_pages=res.flush_pages,
+                cache_stalled_writes=res.stalled_writes,
+                die_sense_util=sum(res.die_sense_tot) / (span * cfg.n_dies),
+            )
         gc_kw = {}
         if schedule is not None or online is not None:
             # GC traffic can outlive the last host completion (an erase
@@ -619,11 +715,11 @@ class SSDSim:
                 gc_page_reads=fs.gc_page_reads,
                 gc_page_progs=fs.gc_page_progs,
                 blocks_erased=fs.blocks_erased,
-                gc_suspensions=res.gc_suspensions,
+                gc_suspensions=gc_suspensions,
                 write_stalls=online.write_stalls if online is not None else 0,
             )
-        elif res.gc_suspensions:
-            gc_kw = dict(gc_suspensions=res.gc_suspensions)
+        elif gc_suspensions:
+            gc_kw = dict(gc_suspensions=gc_suspensions)
         fault_kw = {}
         if fm is not None:
             oc = fm.outcome
@@ -660,6 +756,7 @@ class SSDSim:
             ),
             **gc_kw,
             **fault_kw,
+            **closed_kw,
         )
 
 
@@ -669,6 +766,8 @@ class SSDSim:
 def _with_knobs(
     cfg: SSDConfig, scheduler: Optional[str], gc: Optional[str],
     faults: Optional[FaultConfig] = None,
+    ncq_depth: Optional[int] = None,
+    host_cache=None,
 ) -> SSDConfig:
     """Overlay the run-API ``scheduler=`` / ``gc=`` / ``faults=`` knobs
     onto a config.
@@ -676,13 +775,19 @@ def _with_knobs(
     ``scheduler`` picks the die-queue policy; ``gc`` is ``"off"``,
     ``"prepass"``, or ``"online"`` (the latter two imply
     ``gc.enabled=True``); ``faults`` attaches a
-    :class:`~repro.flashsim.config.FaultConfig`.  None leaves the config
-    untouched.
+    :class:`~repro.flashsim.config.FaultConfig`; ``ncq_depth`` /
+    ``host_cache`` switch on the closed-loop frontend
+    (:class:`~repro.flashsim.config.HostCacheConfig`).  None leaves the
+    config untouched.
     """
     if scheduler is not None:
         cfg = dataclasses.replace(cfg, scheduler=scheduler)
     if faults is not None:
         cfg = dataclasses.replace(cfg, faults=faults)
+    if ncq_depth is not None:
+        cfg = dataclasses.replace(cfg, ncq_depth=ncq_depth)
+    if host_cache is not None:
+        cfg = dataclasses.replace(cfg, host_cache=host_cache)
     if gc is not None:
         if gc == "off":
             gcc = dataclasses.replace(cfg.gc, enabled=False)
@@ -719,6 +824,11 @@ def _make_sim(cfg, condition, mechanism, seed, engine):
                 "faults require the array engine (the reference engine "
                 "predates the fault-injection subsystem)"
             )
+        if cfg.ncq_depth is not None:
+            raise NotImplementedError(
+                "the closed-loop frontend (ncq_depth) requires the array "
+                "engine"
+            )
         from repro.flashsim.engine_ref import SSDSimRef
 
         return SSDSimRef(cfg, condition, RetryPolicy(mechanism), seed=seed)
@@ -738,6 +848,9 @@ def simulate(
     gc: Optional[str] = None,
     shard: bool = False,
     faults: Optional[FaultConfig] = None,
+    ncq_depth: Optional[int] = None,
+    host_cache=None,
+    validate: bool = False,
 ) -> SimStats:
     """Convenience wrapper: one (workload, condition, mechanism) cell.
 
@@ -757,9 +870,14 @@ def simulate(
     runs the array event core as one loop per channel (bit-identical;
     :mod:`repro.flashsim.engine`); the reference engine rejects it.
     ``faults=`` attaches a :class:`~repro.flashsim.config.FaultConfig`
-    (:mod:`repro.flashsim.faults` — array engine only).
+    (:mod:`repro.flashsim.faults` — array engine only).  ``ncq_depth=``
+    switches on the closed-loop frontend (bounded NCQ admission, explicit
+    channel DMA phase); ``host_cache=`` additionally attaches the host
+    write-back cache (:class:`~repro.flashsim.config.HostCacheConfig`).
+    Closed-loop runs are always monolithic (``shard`` is ignored) and
+    reject the preempt scheduler, online GC, and the reference engine.
     """
-    cfg = _with_knobs(cfg, scheduler, gc, faults)
+    cfg = _with_knobs(cfg, scheduler, gc, faults, ncq_depth, host_cache)
     if trace is None:
         trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
@@ -769,8 +887,8 @@ def simulate(
                 "shard=True requires the array engine (the reference "
                 "engine predates the sharded event core)"
             )
-        return sim.run(trace, shard=True)
-    return sim.run(trace)
+        return sim.run(trace, shard=True, validate=validate)
+    return sim.run(trace, validate=validate)
 
 
 def compare_mechanisms(
@@ -786,6 +904,8 @@ def compare_mechanisms(
     shard: bool = False,
     workers: int = 1,
     faults: Optional[FaultConfig] = None,
+    ncq_depth: Optional[int] = None,
+    host_cache=None,
 ) -> Dict[str, SimStats]:
     """All mechanisms over ONE shared trace (resolved once, expanded once).
 
@@ -803,8 +923,10 @@ def compare_mechanisms(
     results identical to the inline run; the fan-out is array-engine
     only, since it shares the array expansion/schedule with workers —
     ``engine="reference"`` runs its mechanisms sequentially as before).
+    ``ncq_depth=`` / ``host_cache=`` select the closed-loop frontend for
+    every mechanism (see :func:`simulate`).
     """
-    cfg = _with_knobs(cfg, scheduler, gc, faults)
+    cfg = _with_knobs(cfg, scheduler, gc, faults, ncq_depth, host_cache)
     if workers > 1 and engine == "array":
         from repro.flashsim.runtime import run_compare
 
@@ -842,6 +964,8 @@ def simulate_batch(
     workers: int = 1,
     faults: Optional[FaultConfig] = None,
     journal=None,
+    ncq_depth: Optional[int] = None,
+    host_cache=None,
 ) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
     """Sweep (mechanism x condition x seed) cells for one workload.
 
@@ -863,6 +987,8 @@ def simulate_batch(
     ``journal=`` names a checkpoint file — completed cells are recorded
     as they finish and a re-run resumes from them byte-identically
     (:func:`repro.flashsim.runtime.run_cells`).
+    ``ncq_depth=`` / ``host_cache=`` select the closed-loop frontend for
+    every cell (see :func:`simulate`).
     Returns ``{(mechanism, condition, seed): SimStats}``.
     """
     if shard and engine != "array":
@@ -870,7 +996,7 @@ def simulate_batch(
             "shard=True requires the array engine (the reference engine "
             "predates the sharded event core)"
         )
-    cfg = _with_knobs(cfg, scheduler, gc, faults)
+    cfg = _with_knobs(cfg, scheduler, gc, faults, ncq_depth, host_cache)
     if workers > 1 or journal is not None:
         from repro.flashsim.runtime import run_sweep
 

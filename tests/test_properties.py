@@ -332,3 +332,139 @@ def test_ftl_retirement_bijectivity_property(seed, n_ops):
         assert blk not in ftl.free[die]
         assert blk not in ftl.sealed[die]
         assert ftl.active[die] != blk and ftl.gc_active[die] != blk
+
+
+# -- closed-loop frontend invariants (ISSUE 7) ----------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    st.integers(1, 24),                       # ncq_depth
+    st.integers(0, 4),                        # seed
+    st.sampled_from(["websearch", "prn"]),
+    st.booleans(),                            # host cache attached?
+)
+def test_closed_loop_inflight_bounded(qd, seed, wl, with_cache):
+    """In-flight requests never exceed ``ncq_depth``, for any depth,
+    seed, workload and cache setting (validate=True additionally arms
+    the engine's own slot/work-conservation checks every event)."""
+    from repro.flashsim.config import HostCacheConfig, OperatingCondition
+    from repro.flashsim.ssd import simulate
+
+    hc = HostCacheConfig(capacity_pages=64) if with_cache else None
+    stats = simulate(wl, OperatingCondition(365.0, 1000.0), "pr2ar2",
+                     seed=seed, n_requests=150, gc="prepass",
+                     ncq_depth=qd, host_cache=hc, validate=True)
+    assert 1 <= stats.max_inflight <= qd
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_write_cache_drain_equals_synchronous_replay(data):
+    """Read-after-write through the cache: at every step ``version()``
+    observes the newest write in stream order, and after a full drain —
+    with flush *landings* arbitrarily reordered — the durable state
+    equals a synchronous replay of the write stream."""
+    from repro.flashsim.config import HostCacheConfig
+    from repro.flashsim.hostcache import WriteCache
+
+    cache = WriteCache(HostCacheConfig(capacity_pages=64))
+    replay = {}                              # lpn -> newest version (model)
+    landed_of = []                           # issued entries awaiting land
+    n_ops = data.draw(st.integers(5, 60))
+    for _ in range(n_ops):
+        kind = data.draw(st.sampled_from(["w", "r", "flush", "land"]))
+        if kind == "w":
+            lpns = data.draw(
+                st.lists(st.integers(0, 15), min_size=1, max_size=4))
+            if cache.can_absorb(len(lpns)):
+                e = cache.absorb(lpns)
+                for lpn, v in zip(e.lpns, e.versions):
+                    replay[lpn] = v
+        elif kind == "r":
+            lpn = data.draw(st.integers(0, 15))
+            assert cache.version(lpn) == replay.get(lpn), (
+                "a read observed a stale version through the cache"
+            )
+        elif kind == "flush":
+            e = cache.pop_entry()
+            if e is not None:
+                landed_of.extend(zip(e.lpns, e.versions))
+        elif landed_of:
+            i = data.draw(st.integers(0, len(landed_of) - 1))
+            lpn, v = landed_of.pop(i)        # land in ARBITRARY order
+            cache.page_durable(lpn, v)
+    # full drain: everything still cached flushes and lands
+    for e in cache.drain():
+        landed_of.extend(zip(e.lpns, e.versions))
+    while landed_of:
+        i = data.draw(st.integers(0, len(landed_of) - 1))
+        lpn, v = landed_of.pop(i)
+        cache.page_durable(lpn, v)
+    assert cache.pending_pages == 0
+    assert cache.durable == replay, (
+        "durable state after drain differs from a synchronous replay"
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(0, 3),                        # seed
+    st.sampled_from(["baseline", "pr2ar2"]),  # serial vs pipelined reads
+)
+def test_closed_loop_phase_intervals(seed, mech):
+    """Die/channel occupancy recorded by the closed loop is physical:
+    channels are single-server, die-phase intervals never overlap on a
+    die, every read transfer starts only after its sense ends, and a
+    read's next sense overlaps its previous transfer ONLY under the
+    pipelined (PR² CACHE READ) mechanisms."""
+    import dataclasses
+
+    from repro.core.retry import RetryPolicy
+    from repro.flashsim.config import DEFAULT_SSD, OperatingCondition
+    from repro.flashsim.ssd import SSDSim, resolve_trace
+
+    cfg = dataclasses.replace(DEFAULT_SSD, ncq_depth=6)
+    sim = SSDSim(cfg, OperatingCondition(365.0, 1000.0),
+                 RetryPolicy(mech), seed=seed + 7)
+    trace = resolve_trace("websearch", seed=seed, n_requests=120)
+    sim.run(trace, trace_phases=True)
+    phases = sim.last_phases
+    assert phases, "trace_phases=True must record intervals"
+
+    EPS = 1e-7
+    by_ch, by_die, by_op = {}, {}, {}
+    for o, kind, res, t0, t1 in phases:
+        assert t1 >= t0 - EPS
+        if kind == "xfer":
+            by_ch.setdefault(res, []).append((t0, t1))
+        else:
+            by_die.setdefault(res, []).append((t0, t1))
+        by_op.setdefault(o, []).append((kind, t0, t1))
+    for ivs in by_ch.values():               # single-server channel
+        ivs.sort()
+        for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+            assert b0 >= a1 - EPS, "overlapping transfers on one channel"
+    for ivs in by_die.values():              # single-server die phases
+        ivs.sort()
+        for (a0, a1), (b0, b1) in zip(ivs, ivs[1:]):
+            assert b0 >= a1 - EPS, "overlapping die phases on one die"
+    pipelined = RetryPolicy(mech).pipelined
+    saw_overlap = False
+    for ops in by_op.values():
+        senses = sorted((t0, t1) for k, t0, t1 in ops if k == "sense")
+        xfers = sorted((t0, t1) for k, t0, t1 in ops if k == "xfer")
+        if not senses:
+            continue                         # program/erase op
+        # k-th transfer moves the k-th sense's data: starts at/after it.
+        for (s0, s1), (x0, x1) in zip(senses, xfers):
+            assert x0 >= s1 - EPS, "transfer started before sense ended"
+        # Serial mechanisms: next sense waits for the previous transfer.
+        for (x0, x1), (s0, s1) in zip(xfers, senses[1:]):
+            if s0 < x1 - EPS:
+                saw_overlap = True
+                assert pipelined, (
+                    "sense/transfer overlap under a serial mechanism"
+                )
+    if pipelined:
+        assert saw_overlap, "pipelined run never overlapped — no PR² win"
