@@ -31,7 +31,7 @@ numbers are machine-dependent, every file also records (PR 5):
     should use ``rel_throughput`` and ``host_factor``-normalized
     numbers, never raw wall times.
 
-Five sweeps ride along:
+Six sweeps ride along:
 
   * **claim cells** (PR 3): the paper's headline reductions (PR²+AR² vs
     baseline @ aged; SOTA+PR²+AR² vs SOTA @ modest) re-measured as
@@ -57,7 +57,14 @@ Five sweeps ride along:
     latency-win tradeoff (mean ± 95% CI over seeds) plus the
     recovery-latency p99.  The acceptance: mispredictions actually fire
     at the derived rate, the win erodes (never inverts) as the rate
-    grows, and nothing is unrecoverable at the paper-default ECC margin.
+    grows, and nothing is unrecoverable at the paper-default ECC margin;
+  * **shard-scaling cells** (PR 8): the batched lockstep core
+    (``engine="batched"``) vs the array interpreter, wall vs channel
+    count {1, 2, 4, 8} on the websearch reference cell — per-cell
+    bit-parity (full SimStats equality per seed) and fast-path-activated
+    flags, best-of-3 walls as mean ± 95% CI over seeds, throughput
+    normalized to this run's 8-channel array cell.  The acceptance rides
+    on the 8-channel cell: batched events/sec >= 1.5x the interpreter.
 
 The claim/GC/scheduler/trace sweeps all execute through the parallel
 sweep runtime (:mod:`repro.flashsim.runtime`); ``--workers N`` fans
@@ -792,6 +799,107 @@ def bench_parallel_sweep(n_requests, seeds, quick, workers):
     }
 
 
+# -- shard-scaling cells: lockstep batched core vs the interpreter --------
+
+
+def bench_shard_scaling(n_requests, seeds):
+    """Single-cell engine scaling: wall vs channel count, the array
+    interpreter vs the lockstep batched core
+    (:mod:`repro.flashsim.engine_batched`), websearch @ aged.
+
+    Per (n_channels, engine) cell: mean ± 95% CI of wall seconds and
+    events/sec over the seeds, plus per-seed bit-parity (full SimStats
+    dataclass equality between the engines) and whether the Pallas fast
+    path actually ran (``fast_path_events`` counter).  ``rel_throughput``
+    normalizes every cell against this run's 8-channel array cell, so
+    the scaling shape is machine-free; absolute walls are host-dependent
+    (the top-level fingerprint records the core count — a CPU-quota'd
+     1-core container cannot show multi-core scaling, but the batched
+    speedup is in-process and holds regardless).
+
+    The acceptance gate rides on the 8-channel cell:
+    ``batched_speedup_mean >= 1.5`` (events/sec, batched / array).
+    """
+    w0 = next(p for p in PROFILES if p.name == "websearch")
+    w = dataclasses.replace(w0, n_requests=n_requests)
+    mech = "baseline"
+    channel_rows = []
+    for c in (1, 2, 4, 8):
+        cfg = dataclasses.replace(DEFAULT_SSD, n_channels=c)
+        walls = {"array": [], "batched": []}
+        eps = {"array": [], "batched": []}
+        ratios, parity = [], True
+        fast_path = True
+        # warm every (channels, engine, seed) triple: each seed's trace
+        # can land in a different static-shape bucket (capsteps/capq),
+        # so one warm run per channel count still leaves jit compiles
+        # inside the timed loop
+        for s in seeds:
+            for eng in ("array", "batched"):
+                SSDSim(cfg, AGED, RetryPolicy(mech), seed=s + 7,
+                       engine=eng).run(cached_trace(w, seed=s))
+        for s in seeds:
+            trace = cached_trace(w, seed=s)
+            stats = {}
+            for eng in ("array", "batched"):
+                # best-of-3: scheduler jitter on a shared host is ±30%
+                # one-sided slowdown; min is the standard estimator of
+                # the undisturbed wall
+                best = None
+                for _ in range(3):
+                    sim = SSDSim(cfg, AGED, RetryPolicy(mech), seed=s + 7,
+                                 engine=eng)
+                    t0 = time.perf_counter()
+                    stats[eng] = sim.run(trace)
+                    dt = time.perf_counter() - t0
+                    best = dt if best is None else min(best, dt)
+                walls[eng].append(best)
+                eps[eng].append(sim.events_processed / best)
+            parity = parity and stats["array"] == stats["batched"]
+            fast_path = fast_path and \
+                stats["batched"].fast_path_events > 0
+            ratios.append(eps["batched"][-1] / eps["array"][-1])
+        row = {"n_channels": c, "bit_parity": bool(parity),
+               "fast_path_active": bool(fast_path)}
+        for eng in ("array", "batched"):
+            wm, wh = mean_ci95(walls[eng])
+            em, eh = mean_ci95(eps[eng])
+            row[eng] = {
+                "wall_mean_s": round(wm, 4), "wall_ci95_s": round(wh, 4),
+                "events_per_sec_mean": round(em),
+                "events_per_sec_ci95": round(eh),
+            }
+        rm, rh = mean_ci95(ratios)
+        row["batched_speedup_mean"] = round(rm, 3)
+        row["batched_speedup_ci95"] = round(rh, 3)
+        channel_rows.append(row)
+    ref_eps = next(r for r in channel_rows if r["n_channels"] == 8
+                   )["array"]["events_per_sec_mean"]
+    for r in channel_rows:
+        for eng in ("array", "batched"):
+            r[eng]["rel_throughput"] = round(
+                r[eng]["events_per_sec_mean"] / ref_eps, 3)
+    ch8 = channel_rows[-1]
+    return {
+        "workload": w0.name,
+        "condition": AGED.label(),
+        "mechanism": mech,
+        "n_requests": n_requests,
+        "seeds": len(seeds),
+        "channels": channel_rows,
+        "bit_parity_all": bool(all(r["bit_parity"] for r in channel_rows)),
+        "fast_path_all": bool(
+            all(r["fast_path_active"] for r in channel_rows)),
+        "speedup_8ch_mean": ch8["batched_speedup_mean"],
+        "speedup_8ch_ci95": ch8["batched_speedup_ci95"],
+        "acceptance_8ch_speedup_ok": bool(
+            ch8["batched_speedup_mean"] >= 1.5),
+        # multi-core *process* scaling is a different (host-gated)
+        # claim; this cell's speedup is single-process lockstep
+        "host_dependent": "wall times; see top-level host fingerprint",
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=None,
@@ -963,6 +1071,18 @@ def main():
             f"equal={parallel_row['cells_equal']})"
         )
 
+    t0 = time.perf_counter()
+    shard_scaling = bench_shard_scaling(n, seeds)
+    print(
+        f"# shard scaling ({time.perf_counter() - t0:.1f}s): "
+        f"batched/array @8ch "
+        f"{shard_scaling['speedup_8ch_mean']:.2f}x"
+        f"±{shard_scaling['speedup_8ch_ci95']:.2f} "
+        f"parity={shard_scaling['bit_parity_all']} "
+        f"fast_path={shard_scaling['fast_path_all']} "
+        f"ok={shard_scaling['acceptance_8ch_speedup_ok']}"
+    )
+
     total_array = sum(r["wall_array_s"] for r in rows)
     # Reference-cell normalization: cells_detail[0] is the pinned cell
     # (first e2e cell, websearch @ aged x all mechanisms); dividing each
@@ -995,6 +1115,14 @@ def main():
         "characterization_warm_s": round(warm_s, 2),
         "reference_cell": reference_cell,
         "claim": claim_summary,
+    }
+    summary["shard_scaling"] = {
+        "speedup_8ch_mean": shard_scaling["speedup_8ch_mean"],
+        "speedup_8ch_ci95": shard_scaling["speedup_8ch_ci95"],
+        "bit_parity_all": shard_scaling["bit_parity_all"],
+        "fast_path_all": shard_scaling["fast_path_all"],
+        "acceptance_8ch_speedup_ok":
+            shard_scaling["acceptance_8ch_speedup_ok"],
     }
     if parallel_row is not None:
         summary["parallel"] = parallel_row
@@ -1059,7 +1187,8 @@ def main():
            "cells_detail": rows, "claim_cells": claim_rows,
            "gc_cells": gc_rows, "sched_cells": sched_rows,
            "trace_cells": trace_rows, "fault_cells": fault_rows,
-           "closed_loop_cells": closed_rows}
+           "closed_loop_cells": closed_rows,
+           "shard_scaling_cells": shard_scaling}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

@@ -237,8 +237,22 @@ class SSDConfig:
     #: Host write-back cache (closed-loop only; requires ``ncq_depth``).
     #: ``None`` sends every write straight to the device.
     host_cache: HostCacheConfig | None = None
+    #: Event-core implementation the run APIs select when their
+    #: ``engine=`` argument is left unset: ``"array"`` (the bit-pinned
+    #: default interpreter), ``"batched"`` (all channel loops advance in
+    #: lockstep inside one compiled kernel — bit-identical on its
+    #: supported matrix, rejects everything else), or ``"reference"``
+    #: (the retired seed engine).  An explicit ``engine=`` on
+    #: ``simulate``/``compare_mechanisms``/``simulate_batch`` overrides
+    #: this.
+    engine: str = "array"
 
     def __post_init__(self):
+        if self.engine not in ("array", "batched", "reference"):
+            raise ValueError(
+                f"SSDConfig.engine must be 'array', 'batched', or "
+                f"'reference', got {self.engine!r}"
+            )
         if self.n_channels < 1 or self.dies_per_channel < 1:
             raise ValueError(
                 f"SSDConfig needs >=1 channel and >=1 die per channel, got "

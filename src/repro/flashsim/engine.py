@@ -147,6 +147,9 @@ class EngineResult:
     gc_suspensions: int       # preempt: suspend events (duration + boundary)
     online_attempts: int      # online mode: total host-read attempts
     online_read_pages: int    # online mode: host read pages admitted
+    #: Events retired by the batched lockstep kernel (0 for interpreter
+    #: runs) — the "Pallas fast path actually ran" observability counter.
+    fast_path_events: int = 0
 
 
 def make_buffers(arrival, rid, die, ch, read, erase, dur, a, tr) -> OpBuffers:

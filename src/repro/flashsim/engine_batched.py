@@ -1,0 +1,193 @@
+"""Batched shard core: lockstep-vectorized event loops over all channels.
+
+``run_event_core_batched`` is a drop-in replacement for
+:func:`repro.flashsim.engine.run_event_core` on the **FCFS open-loop
+fast path**: every per-channel shard loop advances in lockstep inside
+one compiled kernel (:mod:`repro.kernels.fcfs_core`) instead of running
+sequentially in Python.  The result is bit-identical to the interpreter
+— the kernel replays the exact event order (push-order seq discipline)
+and the exact float arithmetic (the busy-until collapse's add/max
+sequence) of :func:`repro.flashsim.engine._run_shard` per lane; see the
+kernel module docstring for the construction.
+
+Eligibility (the supported matrix) is checked **explicitly** — an
+unsupported configuration raises :class:`BatchedUnsupported` rather
+than silently falling back to the interpreter:
+
+  ===================  ========================================
+  scheduler            ``fcfs`` only (no priority dispatch, no
+                       preemption — the kernel's per-die FIFO is
+                       the fcfs deque)
+  GC                   ``none`` or ``prepass`` (the prepass
+                       schedule is just a longer admission
+                       stream); ``online`` injects ops mid-loop
+  faults               ``None`` (recovery ladders are serial
+                       continuations the kernel doesn't model)
+  frontend             open loop (``ncq_depth=None``) — checked
+                       by the caller, which owns the config
+  validate             ``False`` (work-conservation asserts are
+                       interpreter instrumentation)
+  ===================  ========================================
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.flashsim.engine import EngineResult
+from repro.flashsim.sched import SchedulerPolicy
+
+
+class BatchedUnsupported(NotImplementedError):
+    """Raised when a run configuration is outside the batched core's
+    supported matrix (never a silent fallback)."""
+
+
+def check_batched_config(cfg) -> None:
+    """Config-level eligibility for ``engine='batched'`` (fail fast at
+    construction; run-time state is checked again by
+    :func:`check_batched_supported`)."""
+    from repro.flashsim.sched import get_scheduler
+
+    pol = get_scheduler(cfg.scheduler)
+    if pol.prioritized or pol.preemptive or pol.name != "fcfs":
+        raise BatchedUnsupported(
+            f"engine='batched' supports scheduler='fcfs' only, got "
+            f"{cfg.scheduler!r}; use engine='array'"
+        )
+    if cfg.gc.enabled and cfg.gc.mode == "online":
+        raise BatchedUnsupported(
+            "engine='batched' does not support online GC (ops are "
+            "injected mid-loop); use gc='prepass' or engine='array'"
+        )
+    if cfg.faults is not None:
+        raise BatchedUnsupported(
+            "engine='batched' does not support fault injection; use "
+            "engine='array'"
+        )
+    if cfg.ncq_depth is not None:
+        raise BatchedUnsupported(
+            "engine='batched' is open-loop only (ncq_depth=None); the "
+            "closed-loop frontend requires engine='array'"
+        )
+
+
+def check_batched_supported(
+    policy: SchedulerPolicy,
+    bufs,
+    online,
+    validate: bool,
+) -> None:
+    """Raise :class:`BatchedUnsupported` unless this run is eligible."""
+    if policy.prioritized or policy.preemptive or policy.name != "fcfs":
+        raise BatchedUnsupported(
+            f"engine='batched' supports scheduler='fcfs' only, got "
+            f"{policy.name!r}; run this scheduler with engine='array'"
+        )
+    if online is not None:
+        raise BatchedUnsupported(
+            "engine='batched' does not support online GC (ops are "
+            "injected mid-loop); use gc='prepass' or engine='array'"
+        )
+    if bufs.xa is not None:
+        raise BatchedUnsupported(
+            "engine='batched' does not support fault injection "
+            "(recovery-ladder continuations); use engine='array'"
+        )
+    if validate:
+        raise BatchedUnsupported(
+            "validate=True is interpreter instrumentation; use "
+            "engine='array' for work-conservation checks"
+        )
+
+
+def run_event_core_batched(
+    cfg,
+    pipelined: bool,
+    policy: SchedulerPolicy,
+    bufs,
+    n_requests: int,
+    online=None,
+    validate: bool = False,
+) -> EngineResult:
+    """Run the admission stream through the lockstep kernel.
+
+    Same contract as ``run_event_core(..., shard=True)`` on the
+    supported matrix: one lane per channel, results merged exactly as
+    :func:`repro.flashsim.engine.merge_shard_results` would.
+    """
+    check_batched_supported(policy, bufs, online, validate)
+
+    t = cfg.timing
+    n_ch, n_dies = cfg.n_channels, cfg.n_dies
+    P = len(bufs.arrival)
+
+    arrival = np.asarray(bufs.arrival, dtype=np.float64)
+    rid = np.asarray(bufs.rid, dtype=np.int64)
+    die = np.asarray(bufs.die, dtype=np.int64)
+    ch = np.asarray(bufs.ch, dtype=np.int64)
+    read = np.asarray(bufs.read, dtype=bool)
+    erase = np.asarray(bufs.erase, dtype=bool)
+    dur = np.asarray(bufs.dur, dtype=np.float64)
+    att = np.asarray(bufs.a, dtype=np.float64)
+    tr = np.asarray(bufs.tr, dtype=np.float64)
+
+    if P and not np.array_equal(ch, die % n_ch):
+        # The lockstep decomposition leans on the static die stripe the
+        # same way shard=True does; an op off its die's channel would
+        # break lane ownership.
+        raise BatchedUnsupported(
+            "engine='batched' requires the die->channel stripe "
+            "(ch == die % n_channels) for every op"
+        )
+
+    kind = np.where(read, 0.0, np.where(erase, 2.0, 1.0))
+    die_local = (die // n_ch).astype(np.float64)
+    table = np.stack([arrival, kind, die_local, dur, att, tr], axis=1)
+
+    # Per-channel admission substreams, original order preserved — the
+    # same partition run_event_core's shard path builds.
+    lane_idx = [np.flatnonzero(ch == c) for c in range(n_ch)]
+
+    from repro.kernels.fcfs_core import fcfs_core
+    from repro.kernels.fcfs_core.ops import pad_ops
+
+    ops = pad_ops([table[idx] for idx in lane_idx])
+    n_dies_local = -(-n_dies // n_ch)
+    fin, diestat, lane = fcfs_core(ops, n_dies_local, pipelined,
+                                   t.tdma_us, t.tecc_us)
+
+    # -- reassemble an EngineResult exactly as merge_shard_results would
+    req_done = np.zeros(n_requests, dtype=np.float64)
+    for c, idx in enumerate(lane_idx):
+        if not idx.size:
+            continue
+        rid_l = rid[idx]
+        fin_l = fin[c, : idx.size]
+        sel = rid_l >= 0
+        np.maximum.at(req_done, rid_l[sel], fin_l[sel])
+
+    die_tot = [0.0] * n_dies
+    die_busy = [0.0] * n_dies
+    for c in range(n_ch):
+        for j in range(n_dies_local):
+            d = j * n_ch + c
+            if d < n_dies:
+                die_tot[d] = float(diestat[c, j, 0])
+                die_busy[d] = float(diestat[c, j, 1])
+
+    n_events = int(lane[:, 2].sum())
+    return EngineResult(
+        req_done=req_done.tolist(),
+        die_tot=die_tot,
+        ch_tot=lane[:, 1].tolist(),
+        die_busy=die_busy,
+        ch_busy=lane[:, 0].tolist(),
+        n_events=n_events,
+        gc_suspensions=0,
+        online_attempts=0,
+        online_read_pages=0,
+        fast_path_events=n_events,
+    )

@@ -116,7 +116,8 @@ class Cell:
     seed: int
     cfg: SSDConfig = DEFAULT_SSD
     n_requests: Optional[int] = None
-    engine: str = "array"
+    #: ``None`` defers to ``cfg.engine`` (itself ``"array"`` by default).
+    engine: Optional[str] = None
     scheduler: Optional[str] = None
     gc: Optional[str] = None
     shard: bool = False
@@ -311,6 +312,27 @@ class _Journal:
         self._f.flush()
 
 
+# Oversubscription factor for chunked submission: pending cells are
+# grouped into ~workers * _CHUNK_OVERSUB tasks, so one pickled round
+# trip carries several small cells (per-task IPC was costing more than
+# the cells themselves: BENCH_sim recorded speedup 0.92 at workers=4)
+# while still leaving enough tasks per worker for load balancing.
+_CHUNK_OVERSUB = 4
+
+
+def _chunk_pending(pending: Dict[int, Cell],
+                   workers: int) -> List[List[Tuple[int, Cell]]]:
+    items = sorted(pending.items())
+    n_tasks = workers * _CHUNK_OVERSUB
+    size = max(1, -(-len(items) // n_tasks))
+    return [items[k:k + size] for k in range(0, len(items), size)]
+
+
+def _run_cell_chunk(items: List[Tuple[int, Cell]]):
+    """Worker entry: run a chunk of (index, cell) pairs in order."""
+    return [(i, _run_cell(c)) for i, c in items]
+
+
 def _finish_inline(results: List, pending: Dict[int, Cell],
                    jr: Optional[_Journal]) -> List:
     """Run the leftover cells inline (in index order), journaling each."""
@@ -330,8 +352,11 @@ def run_cells(cells: Sequence[Cell], workers: int = 1,
 
     ``workers <= 1`` runs inline (no pool, no pickling — the exact
     ``workers=1`` code path).  Larger counts fan cells out over a
-    process pool; results are still assembled positionally, so the
-    output is independent of completion order.
+    process pool in *chunks* of several cells per task (amortizing the
+    per-task pickle/IPC overhead that made small-cell sweeps slower
+    than inline); results are still assembled positionally, so the
+    output is independent of completion order, worker count, and
+    chunking.
 
     Self-healing: pool-*infrastructure* failures never cost completed
     work.  Results are harvested per-cell as futures finish, so when
@@ -342,7 +367,8 @@ def run_cells(cells: Sequence[Cell], workers: int = 1,
     resort.  ``cell_timeout`` (seconds) bounds the wait for *progress*:
     if no cell completes within it, the pool is declared stalled and
     abandoned (a hung worker cannot hang the sweep) and the remainder
-    is retried the same way.  An exception raised *by a cell itself*
+    is retried the same way (progress is observed per completed
+    *chunk*).  An exception raised *by a cell itself*
     propagates unchanged — it would fail inline too, so retrying would
     only duplicate the work.
 
@@ -379,8 +405,12 @@ def run_cells(cells: Sequence[Cell], workers: int = 1,
             break
         stalled = False
         try:
-            futures = {pool.submit(_run_cell, c): i
-                       for i, c in sorted(pending.items())}
+            # Chunked submission: one task carries several cells, so
+            # the pickle/IPC round trip is amortized (results are still
+            # placed positionally — output is identical for any worker
+            # count or chunking).
+            futures = {pool.submit(_run_cell_chunk, ch): [i for i, _ in ch]
+                       for ch in _chunk_pending(pending, workers)}
             not_done = set(futures)
             while not_done:
                 done, not_done = wait(not_done, timeout=cell_timeout,
@@ -389,19 +419,19 @@ def run_cells(cells: Sequence[Cell], workers: int = 1,
                     stalled = True        # no progress within cell_timeout
                     break
                 for fut in done:
-                    i = futures[fut]
                     try:
-                        r = fut.result()
+                        chunk_results = fut.result()
                     except BrokenExecutor:
                         # This future's worker died; siblings that DID
                         # complete still carry their results — keep
                         # harvesting, never discard finished work.
                         stalled = True
                         continue
-                    results[i] = r
-                    del pending[i]
-                    if jr is not None:
-                        jr.record(i, r)
+                    for i, r in chunk_results:
+                        results[i] = r
+                        del pending[i]
+                        if jr is not None:
+                            jr.record(i, r)
         except BrokenExecutor:
             stalled = True
         except BaseException:
@@ -482,12 +512,11 @@ _COMPARE_LOCK = threading.Lock()
 
 
 def _run_compare_mech(mechanism: str):
-    from repro.core.retry import RetryPolicy
-    from repro.flashsim.ssd import SSDSim
+    from repro.flashsim.ssd import _make_sim
 
-    trace, expansion, schedule, cfg, condition, seed, shard = \
+    trace, expansion, schedule, cfg, condition, seed, shard, engine = \
         _COMPARE_PAYLOAD
-    sim = SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed + 7)
+    sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
     return sim.run(trace, expansion=expansion, schedule=schedule,
                    shard=shard)
 
@@ -503,13 +532,16 @@ def run_compare(
     gc: Optional[str],
     shard: bool,
     workers: int,
+    engine: str = "array",
 ) -> Dict[str, "object"]:
     """Parallel ``compare_mechanisms``: one worker per mechanism.
 
     Requires the ``fork`` start method (shared views are inherited, not
     pickled); otherwise — or on pool failure — falls back to the inline
     run API.  Results match ``compare_mechanisms(..., workers=1)``
-    exactly, in the caller's mechanism order.
+    exactly, in the caller's mechanism order.  Supports the ``array``
+    and ``batched`` engines (both consume the shared expansion/schedule
+    views).
     """
     global _COMPARE_PAYLOAD
     from repro.flashsim import ssd
@@ -520,7 +552,8 @@ def run_compare(
             or ctx.get_start_method() != "fork"):
         return ssd.compare_mechanisms(
             workload, condition, mechanisms=mechanisms, seed=seed, cfg=cfg,
-            n_requests=n_requests, scheduler=scheduler, gc=gc, shard=shard,
+            n_requests=n_requests, engine=engine, scheduler=scheduler,
+            gc=gc, shard=shard,
         )
     cfg = ssd._with_knobs(cfg, scheduler, gc)
     trace = ssd.resolve_trace(workload, seed=seed, n_requests=n_requests)
@@ -534,7 +567,7 @@ def run_compare(
     )
     with _COMPARE_LOCK:
         _COMPARE_PAYLOAD = (trace, expansion, schedule, cfg, condition,
-                            seed, shard)
+                            seed, shard, engine)
         try:
             try:
                 pool = ProcessPoolExecutor(

@@ -229,6 +229,12 @@ class SimStats:
     cache_flush_pages: int = 0        # page programs issued by cache flushes
     cache_stalled_writes: int = 0     # writes that waited on cache capacity
     die_sense_util: float = 0.0       # fraction of span dies spent sensing
+    #: Events retired by the batched lockstep (Pallas) fast path — 0 for
+    #: interpreter runs, ``== n_events`` for ``engine="batched"`` runs.
+    #: Observability only: excluded from equality so batched-vs-array
+    #: bit-identity asserts compare the simulation outcome, not the
+    #: engine that produced it.
+    fast_path_events: int = dataclasses.field(default=0, compare=False)
 
     def as_row(self) -> str:
         row = (
@@ -322,11 +328,22 @@ class SSDSim:
         condition: OperatingCondition = OperatingCondition(),
         policy: RetryPolicy = RetryPolicy("baseline"),
         seed: int = 0,
+        engine: str = "array",
     ):
+        if engine not in ("array", "batched"):
+            raise ValueError(
+                f"SSDSim engine must be 'array' or 'batched', got "
+                f"{engine!r} (engine='reference' is SSDSimRef)"
+            )
+        if engine == "batched":
+            from repro.flashsim.engine_batched import check_batched_config
+
+            check_batched_config(cfg)
         self.cfg = cfg
         self.cond = condition
         self.policy = policy
         self.seed = seed
+        self.engine = engine
         self.rng = np.random.default_rng(seed)
         self.events_processed = 0
         # AR² tR scale for this operating condition (characterized table).
@@ -341,6 +358,12 @@ class SSDSim:
             self.tr_scale = 1.0
         # Per-block AR² scale memo: snapped effective P/E -> safe scale.
         self._wear_scales: Dict[float, float] = {}
+        # Worn-block attempt-CDF memo: (page type, wear) -> CDF.  One
+        # resolution per distinct (condition, mechanism, wear bin) for
+        # the whole run — the sharded/batched paths and every unique-wear
+        # loop hit this dict instead of re-deriving the worn condition
+        # and re-keying the characterization LRU per lookup.
+        self._wear_cdfs: Dict[Tuple[str, float], np.ndarray] = {}
         # Unscaled per-page-type tR (scale applied per op: device-level for
         # unworn blocks, per-block for GC-worn ones).
         self._tr_base = np.array(
@@ -401,14 +424,19 @@ class SSDSim:
         """
         if wear_pec <= 0.0:
             return self._attempt_cdfs[page_type]
-        worn = self.cond.with_wear(wear_pec)
-        return CH.attempt_cdf(
-            self.cond.retention_days,
-            CH.snap_pec(worn.pec),
-            page_type=page_type,
-            sota=self.policy.sota_start,
-            tr_scale=self._scale_for(wear_pec),
-        )
+        key = (page_type, wear_pec)
+        cdf = self._wear_cdfs.get(key)
+        if cdf is None:
+            worn = self.cond.with_wear(wear_pec)
+            cdf = CH.attempt_cdf(
+                self.cond.retention_days,
+                CH.snap_pec(worn.pec),
+                page_type=page_type,
+                sota=self.policy.sota_start,
+                tr_scale=self._scale_for(wear_pec),
+            )
+            self._wear_cdfs[key] = cdf
+        return cdf
 
     def _draw_attempts(self, ptype_idx: int, wear_pec: float,
                        rng: Optional[np.random.Generator] = None) -> int:
@@ -514,6 +542,11 @@ class SSDSim:
         sched_policy = get_scheduler(cfg.scheduler)
         gc_mode = cfg.gc.mode if cfg.gc.enabled else None
         closed = cfg.ncq_depth is not None
+        batched = self.engine == "batched"
+        if batched:
+            from repro.flashsim.engine_batched import check_batched_config
+
+            check_batched_config(cfg)
         if closed:
             if gc_mode == "online":
                 raise NotImplementedError(
@@ -655,6 +688,14 @@ class SSDSim:
             total_attempts = res.attempts_issued
             total_read_pages = res.read_pages_issued
             self.last_phases = res.phases
+        elif batched:
+            from repro.flashsim.engine_batched import run_event_core_batched
+
+            res = run_event_core_batched(cfg, pipelined, sched_policy,
+                                         bufs, n_requests, online=online,
+                                         validate=validate)
+            gc_suspensions = res.gc_suspensions
+            self.last_phases = None
         else:
             res = run_event_core(cfg, pipelined, sched_policy, bufs,
                                  n_requests, online=online,
@@ -754,6 +795,7 @@ class SSDSim:
             read_p99_us=(
                 float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
             ),
+            fast_path_events=getattr(res, "fast_path_events", 0),
             **gc_kw,
             **fault_kw,
             **closed_kw,
@@ -818,6 +860,12 @@ def _shared_views(trace, cfg):
 def _make_sim(cfg, condition, mechanism, seed, engine):
     if engine == "array":
         return SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed)
+    if engine == "batched":
+        # SSDSim validates the config against the batched core's
+        # supported matrix (fcfs / gc off|prepass / no faults / open
+        # loop) and raises BatchedUnsupported outside it.
+        return SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed,
+                      engine="batched")
     if engine == "reference":
         if cfg.faults is not None:
             raise NotImplementedError(
@@ -843,7 +891,7 @@ def simulate(
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
     trace: Optional[RequestTrace] = None,
-    engine: str = "array",
+    engine: Optional[str] = None,
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
     shard: bool = False,
@@ -869,6 +917,12 @@ def simulate(
     the FTL and the scheduler layer and rejects both.  ``shard=True``
     runs the array event core as one loop per channel (bit-identical;
     :mod:`repro.flashsim.engine`); the reference engine rejects it.
+    ``engine="batched"`` runs all channel loops in lockstep inside one
+    compiled kernel (:mod:`repro.flashsim.engine_batched`) — bit-
+    identical to the array engine on its supported matrix (fcfs, gc
+    off/prepass, no faults, open loop) and raising
+    :class:`~repro.flashsim.engine_batched.BatchedUnsupported`
+    elsewhere, never silently falling back.
     ``faults=`` attaches a :class:`~repro.flashsim.config.FaultConfig`
     (:mod:`repro.flashsim.faults` — array engine only).  ``ncq_depth=``
     switches on the closed-loop frontend (bounded NCQ admission, explicit
@@ -877,16 +931,21 @@ def simulate(
     Closed-loop runs are always monolithic (``shard`` is ignored) and
     reject the preempt scheduler, online GC, and the reference engine.
     """
+    if engine is None:
+        engine = cfg.engine
     cfg = _with_knobs(cfg, scheduler, gc, faults, ncq_depth, host_cache)
     if trace is None:
         trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     sim = _make_sim(cfg, condition, mechanism, seed + 7, engine)
     if shard:
-        if engine != "array":
+        if engine == "reference":
             raise NotImplementedError(
                 "shard=True requires the array engine (the reference "
                 "engine predates the sharded event core)"
             )
+        # engine="batched" IS the per-channel decomposition: shard=True
+        # is a no-op there (the lockstep core always runs one lane per
+        # channel, bit-identical to both array paths).
         return sim.run(trace, shard=True, validate=validate)
     return sim.run(trace, validate=validate)
 
@@ -898,7 +957,7 @@ def compare_mechanisms(
     seed: int = 0,
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
-    engine: str = "array",
+    engine: Optional[str] = None,
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
     shard: bool = False,
@@ -920,20 +979,24 @@ def compare_mechanisms(
     latencies.)  ``shard=True`` selects the per-channel sharded event
     core; ``workers > 1`` fans mechanisms over a process pool
     (:func:`repro.flashsim.runtime.run_compare` — fork platforms only,
-    results identical to the inline run; the fan-out is array-engine
-    only, since it shares the array expansion/schedule with workers —
-    ``engine="reference"`` runs its mechanisms sequentially as before).
+    results identical to the inline run; the fan-out shares the array
+    expansion/schedule with workers, so it supports the ``array`` and
+    ``batched`` engines — ``engine="reference"`` runs its mechanisms
+    sequentially as before).
     ``ncq_depth=`` / ``host_cache=`` select the closed-loop frontend for
     every mechanism (see :func:`simulate`).
     """
+    if engine is None:
+        engine = cfg.engine
     cfg = _with_knobs(cfg, scheduler, gc, faults, ncq_depth, host_cache)
-    if workers > 1 and engine == "array":
+    if workers > 1 and engine in ("array", "batched"):
         from repro.flashsim.runtime import run_compare
 
         return run_compare(workload, condition, mechanisms, seed, cfg,
-                           n_requests, None, None, shard, workers)
+                           n_requests, None, None, shard, workers,
+                           engine=engine)
     trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
-    if engine != "array":
+    if engine == "reference":
         return {
             m: simulate(workload, condition, m, seed, cfg, trace=trace,
                         engine=engine, shard=shard)
@@ -942,7 +1005,7 @@ def compare_mechanisms(
     expansion, schedule = _shared_views(trace, cfg)
     out = {}
     for m in mechanisms:
-        sim = SSDSim(cfg, condition, RetryPolicy(m), seed=seed + 7)
+        sim = _make_sim(cfg, condition, m, seed + 7, engine)
         out[m] = sim.run(trace, expansion=expansion, schedule=schedule,
                          shard=shard)
     return out
@@ -957,7 +1020,7 @@ def simulate_batch(
     seeds: Sequence[int] = (0,),
     cfg: SSDConfig = DEFAULT_SSD,
     n_requests: Optional[int] = None,
-    engine: str = "array",
+    engine: Optional[str] = None,
     scheduler: Optional[str] = None,
     gc: Optional[str] = None,
     shard: bool = False,
@@ -991,7 +1054,9 @@ def simulate_batch(
     every cell (see :func:`simulate`).
     Returns ``{(mechanism, condition, seed): SimStats}``.
     """
-    if shard and engine != "array":
+    if engine is None:
+        engine = cfg.engine
+    if shard and engine == "reference":
         raise NotImplementedError(
             "shard=True requires the array engine (the reference engine "
             "predates the sharded event core)"
@@ -1009,7 +1074,7 @@ def simulate_batch(
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
     for s in seeds:
         trace = resolve_trace(workload, seed=s, n_requests=n_requests)
-        if engine == "array":
+        if engine in ("array", "batched"):
             expansion, schedule = _shared_views(trace, cfg)
         else:
             expansion = schedule = None

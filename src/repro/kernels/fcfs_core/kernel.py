@@ -1,0 +1,341 @@
+"""Lockstep Pallas kernel for the FCFS open-loop shard core.
+
+One kernel invocation advances *all* channel shards of a run in lockstep:
+the lane dimension (axis 0 everywhere) is the shard/channel, and each
+``fori_loop`` step retires exactly one event — an admission, a sense
+completion, a die release, or a write-transfer landing — per active lane.
+The channel busy-until collapse is the sequential max-plus recurrence
+
+    done = max(ch_busy, t) + tDMA ;  ch_busy = done
+
+carried as a lane vector across steps, evaluated in event order, which is
+what makes the result bit-identical to the interpreter loop in
+:mod:`repro.flashsim.engine` (no reassociation of float arithmetic — the
+exact add/max sequence of ``_run_shard`` is replayed per lane).
+
+The interpreter's heap is replaced by a bounded merge that is exact by
+construction for the supported matrix (fcfs, gc in {none, prepass},
+no faults, open loop):
+
+  * each die holds at most one scheduled event (next sense/copy, or its
+    release) — a (time, seq) pair in the die-state row;
+  * write transfers in flight form a FIFO whose times and seqs are
+    pushed in admission order (monotone, since the channel collapse
+    grants at issue) — the ACQ queue;
+  * the admission cursor wins ties (the interpreter's ``next_adm <= tt``).
+
+``seq`` counters are incremented exactly where ``_run_shard`` increments
+``seqc``, so heap tie-breaking (push order) is reproduced, not
+approximated.
+
+State layout (all f64; integers are exactly representable):
+
+  ops   (L, MAXP, 9)  — [arrival, kind, die, dur, attempts, tr, gdt,
+                        gk0, grem0] per op in admission order; kind
+                        0=read 1=write 2=erase 3=pad (arrival inf).
+                        The g* columns are host-precomputed grant
+                        attributes (see :func:`augment_ops`): first
+                        event delta (tR for reads, dur otherwise),
+                        initial event kind (0 sense / 1 release), and
+                        initial remaining-attempts — they collapse the
+                        read/write/erase dispatch at grant time to
+                        single blends.
+  state (L, D+1, 14)  — per-die rows [evt, evseq, evop, evkind, held,
+                        free, rem, a_act, tr_act, qhead, qtail, tot,
+                        busy, nonread]; row D is the masked-write sink.
+  fifo  (L, D+1, CAPQ)— per-die FIFO ring of queued op ids; CAPQ is a
+                        host-computed bound (max ops on one die), so
+                        the ring never overwrites a live entry.
+  acq   (L, CAPW+1, 4)— ring of in-flight write transfers [done, seq,
+                        op, die]; CAPW bounds the writes of one lane;
+                        slot CAPW is the masked-write sink.
+  log   (CAPSTEPS, 2L)— per-step completion log, one row per lockstep
+                        step: [fin values | fin op ids].  Inactive
+                        lanes log op id MAXP (the sink).  The per-op
+                        ``fin`` table (reads: done+tECC of the final
+                        attempt; writes/erases: release time) is never
+                        read inside the loop, so it is reconstructed
+                        from the log by one host-side scatter in
+                        :func:`repro.kernels.fcfs_core.ops.fcfs_core`
+                        — one log write per step instead of L per-lane
+                        updates.
+
+Every scatter into the carry is *unconditional*: inactive lanes are
+redirected to a sink row/slot instead of blending with the gathered
+current value, so each carry buffer has the scatter as its only
+consumer and XLA updates it in place across ``fori_loop`` steps
+(masked blends forced a full copy of every buffer per step).  The FIFO
+push runs before the pop gather for the same reason — a lane popping
+this step never pushes, so reading the pushed buffer is semantically
+identical, and it keeps the scatter the buffer's only carry consumer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# ops columns
+(_ARR, _KIND, _DIE, _DUR, _A, _TR, _GDT, _GK0, _GREM0) = range(9)
+# die-state columns
+(_EVT, _EVSEQ, _EVOP, _EVKIND, _HELD, _FREE, _REM, _AACT, _TRACT,
+ _QHEAD, _QTAIL, _TOT, _BUSY, _NR) = range(14)
+
+_BIGSEQ = 1e18
+
+
+def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
+                 lane_ref, *, n_lanes, n_dies, maxp, capq, capw,
+                 capsteps, pipelined):
+    L, D = n_lanes, n_dies
+    lanes = jnp.arange(L)
+    inf = jnp.inf
+    ops = ops_ref[...]
+    steps = steps_ref[0]
+    # tDMA/tECC enter as traced scalars, NOT Python literals: XLA's
+    # algebraic simplifier folds add(add(x, c1), c2) -> add(x, c1+c2)
+    # for literal constants, which reassociates the sense chain
+    # (max(chb, t) + tdma) + tecc and breaks bit-identity with the
+    # interpreter.  Parameters are opaque to that rewrite.
+    tdma = timing_ref[0]
+    tecc = timing_ref[1]
+
+    def body(t, carry):
+        (state, fifo, acq, log, chb, ch_tot, seqc, n_ev,
+         ai, aq_head, aq_tail) = carry
+
+        # ---- candidate selection: per-die events + ACQ head ----------
+        evt = state[:, :D, _EVT]
+        evseq = state[:, :D, _EVSEQ]
+        aq_row = acq[lanes, aq_head % capw]
+        aq_empty = aq_head >= aq_tail
+        aq_t = jnp.where(aq_empty, inf, aq_row[:, 0])
+        aq_sq = jnp.where(aq_empty, _BIGSEQ, aq_row[:, 1])
+        cand_t = jnp.concatenate([evt, aq_t[:, None]], axis=1)
+        cand_s = jnp.concatenate([evseq, aq_sq[:, None]], axis=1)
+        tmin = cand_t.min(axis=1)
+        is_min = cand_t == tmin[:, None]
+        smin = jnp.where(is_min, cand_s, _BIGSEQ).min(axis=1)
+        widx = jnp.argmax(is_min & (cand_s == smin[:, None]), axis=1)
+
+        adm_row = ops[lanes, ai]
+        adm_t = adm_row[:, _ARR]
+        active = (adm_t < inf) | (tmin < inf)
+        take_adm = (adm_t <= tmin) & active
+        take_ev = (~take_adm) & active
+
+        a_kind = adm_row[:, _KIND]
+        a_die = adm_row[:, _DIE].astype(jnp.int32)
+        is_r = take_adm & (a_kind == 0.0)
+        is_w = take_adm & (a_kind == 1.0)
+        is_e = take_adm & (a_kind == 2.0)
+
+        ev_acq = take_ev & (widx == D)
+        ev_die = take_ev & (widx < D)
+        o_acq = aq_row[:, 2].astype(jnp.int32)
+        acq_die = aq_row[:, 3].astype(jnp.int32)
+        aq_head = aq_head + ev_acq.astype(jnp.int32)
+
+        # the one die row this step reads/writes
+        tgt = jnp.where(take_adm & (is_r | is_e), a_die,
+                        jnp.where(ev_die, widx.astype(jnp.int32),
+                                  jnp.where(ev_acq, acq_die, D)))
+        row = state[lanes, tgt]
+
+        q_empty = row[:, _QTAIL] == row[:, _QHEAD]
+        die_free = (row[:, _FREE] == 1.0) & q_empty
+
+        ev_kind = row[:, _EVKIND]
+        ev_sense = ev_die & (ev_kind == 0.0)
+        ev_rel = ev_die & (ev_kind == 1.0)
+
+        # -- the channel collapse (write admission DMA or sense DMA;
+        #    a step is one or the other, so one max-plus update) --
+        touches = is_w | ev_sense
+        c_done = jnp.maximum(chb, jnp.where(take_adm, adm_t, tmin)) + tdma
+        chb = jnp.where(touches, c_done, chb)
+        ch_tot = jnp.where(touches, ch_tot + tdma, ch_tot)
+
+        # write admission: ACQ push at its DMA-done time, unconditional
+        # (non-write lanes land in the sink slot capw, never read).
+        # Per-lane dynamic_update_slice with a static lane index is the
+        # cheapest in-place update XLA:CPU will emit for a handful of
+        # computed row indices — both the generic scatter op and a
+        # one-hot blend over the ring measured slower.
+        aq_slot = jnp.where(is_w, aq_tail % capw, capw)
+        aq_new = jnp.stack([c_done, seqc, ai.astype(jnp.float64),
+                            adm_row[:, _DIE]], axis=1)
+        for l in range(L):
+            acq = jax.lax.dynamic_update_slice(
+                acq, aq_new[l][None, None, :],
+                (jnp.int32(l), aq_slot[l], jnp.int32(0)))
+        aq_tail = aq_tail + is_w.astype(jnp.int32)
+
+        # -- sense / copy handler --
+        s_tm = tmin
+        s_tr = row[:, _TRACT]
+        if not pipelined:
+            s_more = row[:, _REM] > 1.0
+            s_next = jnp.where(s_more, (c_done + tecc) + s_tr, c_done)
+            s_rem = row[:, _REM] - 1.0
+        else:
+            s_more = row[:, _REM] + 1.0 < row[:, _AACT]
+            s_rel = jnp.where(row[:, _AACT] > 1.0, s_tm + s_tr, s_tm)
+            s_next = jnp.where(s_more,
+                               jnp.maximum(s_tm + s_tr, c_done), s_rel)
+            s_rem = row[:, _REM] + 1.0
+        s_fin = c_done + tecc
+
+        # -- grants: admission (free die), ACQ landing, release pop --
+        r_tm = tmin
+        g_adm = (is_r | is_e) & die_free
+        g_acq = ev_acq & die_free
+        queue_push = ((is_r | is_e) & ~die_free) | (ev_acq & ~die_free)
+        push_val = jnp.where(take_adm, ai.astype(jnp.float64),
+                             o_acq.astype(jnp.float64))
+
+        # FIFO push before the pop gather (see module docstring)
+        push_die = jnp.where(queue_push, tgt, D)
+        push_slot = row[:, _QTAIL].astype(jnp.int32) % capq
+        for l in range(L):
+            fifo = jax.lax.dynamic_update_slice(
+                fifo, push_val[l].reshape(1, 1, 1),
+                (jnp.int32(l), push_die[l], push_slot[l]))
+
+        q_nonempty = ~q_empty
+        grant2 = ev_rel & q_nonempty
+        qh = row[:, _QHEAD].astype(jnp.int32) % capq
+        o2 = fifo[lanes, tgt, qh].astype(jnp.int32)
+
+        # one gather serves every grant source: popped op, admitted op,
+        # or the ACQ-landed op (masked lanes read a harmless row)
+        grant_any = g_adm | g_acq | grant2
+        g_op = jnp.where(grant2, o2,
+                         jnp.where(take_adm, ai, o_acq))
+        g_row = ops[lanes, g_op]
+        gr_tm = jnp.where(take_adm, adm_t, r_tm)
+
+        # ---- assemble the new die row --------------------------------
+        new_evt = jnp.where(
+            ev_sense, s_next,
+            jnp.where(grant_any, gr_tm + g_row[:, _GDT],
+                      jnp.where(ev_rel, inf, row[:, _EVT])))
+        sets_ev = ev_sense | grant_any
+        new_evseq = jnp.where(sets_ev, seqc, row[:, _EVSEQ])
+        new_evop = jnp.where(grant_any, g_op.astype(jnp.float64),
+                             row[:, _EVOP])
+        # kind after this step: sense chains stay 0 until the final
+        # attempt converts to a release; grants start at the op's
+        # precomputed gk0 (reads 0, writes/erases 1).
+        new_evkind = jnp.where(ev_sense,
+                               jnp.where(s_more, 0.0, 1.0),
+                               jnp.where(grant_any, g_row[:, _GK0],
+                                         row[:, _EVKIND]))
+        new_held = jnp.where(grant_any, gr_tm, row[:, _HELD])
+        new_free = jnp.where(grant_any, 0.0,
+                             jnp.where(ev_rel & ~q_nonempty, 1.0,
+                                       row[:, _FREE]))
+        new_rem = jnp.where(ev_sense, s_rem,
+                            jnp.where(grant_any, g_row[:, _GREM0],
+                                      row[:, _REM]))
+        new_aact = jnp.where(grant_any, g_row[:, _A], row[:, _AACT])
+        new_tract = jnp.where(grant_any, g_row[:, _TR], row[:, _TRACT])
+        new_nr = jnp.where(grant_any, g_row[:, _GK0], row[:, _NR])
+        new_qhead = row[:, _QHEAD] + grant2.astype(jnp.float64)
+        new_qtail = row[:, _QTAIL] + queue_push.astype(jnp.float64)
+        new_tot = jnp.where(ev_rel, row[:, _TOT] + (r_tm - row[:, _HELD]),
+                            row[:, _TOT])
+        new_busy = jnp.where(ev_rel, r_tm, row[:, _BUSY])
+
+        new_row = jnp.stack(
+            [new_evt, new_evseq, new_evop, new_evkind, new_held,
+             new_free, new_rem, new_aact, new_tract, new_qhead,
+             new_qtail, new_tot, new_busy, new_nr], axis=1)
+        # Per-lane dynamic_update_slice (static lane, computed die row):
+        # measurably cheaper than both XLA:CPU's generic scatter and a
+        # one-hot blend for this shape, and still updated in place.
+        for l in range(L):
+            state = jax.lax.dynamic_update_slice(
+                state, new_row[l][None, None, :],
+                (jnp.int32(l), tgt[l], jnp.int32(0)))
+
+        # fin events: final sense (reads) or release of a non-read.
+        # Logged as one (2L,) row per step — the fin table is never
+        # read in the loop, so one dynamic_update_slice replaces L
+        # per-lane writes; the host scatters the log afterwards.
+        fin_sense = ev_sense & ~s_more
+        fin_rel = ev_rel & (row[:, _NR] == 1.0)
+        fin_idx = jnp.where(fin_sense | fin_rel,
+                            row[:, _EVOP].astype(jnp.int32), maxp)
+        fin_val = jnp.where(fin_sense, s_fin, r_tm)
+        entry = jnp.concatenate(
+            [fin_val, fin_idx.astype(jnp.float64)])[None, :]
+        log = jax.lax.dynamic_update_slice(log, entry,
+                                           (t, jnp.int32(0)))
+
+        # seq counter: one push per admission of a write (ACQ), per
+        # grant, and per sense continuation — exactly the interpreter's
+        # seqc increments.
+        pushed = is_w | grant_any | ev_sense
+        seqc = seqc + pushed.astype(jnp.float64)
+        n_ev = n_ev + take_ev.astype(jnp.float64)
+        ai = ai + take_adm.astype(jnp.int32)
+
+        return (state, fifo, acq, log, chb, ch_tot, seqc, n_ev,
+                ai, aq_head, aq_tail)
+
+    zero_l = jnp.zeros((L,), jnp.float64)
+    zero_i = jnp.zeros((L,), jnp.int32)
+    state0 = jnp.zeros((L, D + 1, 14), jnp.float64)
+    state0 = state0.at[:, :, _EVT].set(jnp.inf)
+    state0 = state0.at[:, :, _FREE].set(1.0)
+    fifo0 = jnp.zeros((L, D + 1, capq), jnp.float64)
+    acq0 = jnp.zeros((L, capw + 1, 4), jnp.float64)
+    # Unwritten log rows (t >= steps) keep op id maxp — the sink slot
+    # the host scatter discards.
+    log0 = jnp.concatenate(
+        [jnp.zeros((capsteps, L), jnp.float64),
+         jnp.full((capsteps, L), float(maxp), jnp.float64)], axis=1)
+
+    carry = (state0, fifo0, acq0, log0, zero_l, zero_l, zero_l, zero_l,
+             zero_i, zero_i, zero_i)
+    (state, fifo, acq, log, chb, ch_tot, seqc, n_ev,
+     ai, aq_head, aq_tail) = jax.lax.fori_loop(0, steps, body, carry)
+
+    log_ref[...] = log
+    diestat_ref[...] = jnp.stack(
+        [state[:, :D, _TOT], state[:, :D, _BUSY]], axis=2)
+    lane_ref[...] = jnp.stack([chb, ch_tot, n_ev, seqc], axis=1)
+
+
+def fcfs_core_fwd(ops, steps, timing, *, n_dies, capq, capw, capsteps,
+                  pipelined, interpret=True):
+    """Run the lockstep shard core.
+
+    ``ops``: (L, MAXP, 9) f64 augmented padded op table (admission
+    order per lane; see :func:`augment_ops`).  ``steps``: (1,) i32 —
+    total lockstep steps (max lane admissions + events; idle lanes
+    no-op).  ``timing``: (2,) f64 — [tdma, tecc].  ``capq``/``capw`` —
+    static FIFO/ACQ ring capacities (host-computed bounds: max ops on
+    one die / max writes on one lane); ``capsteps`` — static log
+    length, a power of two >= steps.
+    Returns ``(log, diestat, lane)``: the per-step completion log
+    (scatter it into the per-op ``fin`` table host-side), per-die
+    [tot, busy], and per-lane [ch_busy, ch_tot, n_events, seqc].
+    """
+    L, maxp, _ = ops.shape
+    kernel = functools.partial(
+        _core_kernel, n_lanes=L, n_dies=n_dies, maxp=maxp, capq=capq,
+        capw=capw, capsteps=capsteps, pipelined=pipelined)
+    return pl.pallas_call(
+        kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((capsteps, 2 * L), jnp.float64),
+            jax.ShapeDtypeStruct((L, n_dies, 2), jnp.float64),
+            jax.ShapeDtypeStruct((L, 4), jnp.float64),
+        ],
+        interpret=interpret,
+    )(ops, steps, timing)

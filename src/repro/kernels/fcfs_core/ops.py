@@ -1,0 +1,163 @@
+"""Dispatch wrapper for the lockstep FCFS shard core.
+
+``fcfs_core`` takes the padded per-lane op table as numpy, runs the
+Pallas kernel (natively on TPU, under ``interpret=True`` on CPU — which
+lowers the identical loop to XLA in f64), and returns numpy results.
+All jax work happens inside a scoped ``enable_x64`` context so the f64
+requirement never leaks into the process-global jax config (other
+kernels in this repo compile under the default f32).
+
+The kernel is jit-cached per (lane count, padded width, die count,
+pipelined flag, timing constants); the step count is a traced scalar so
+different workload sizes reuse the same executable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.kernels.fcfs_core.kernel import fcfs_core_fwd
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_dies", "capq", "capw", "capsteps", "pipelined",
+                     "interpret"))
+def _core_jit(ops, steps, timing, *, n_dies, capq, capw, capsteps,
+              pipelined, interpret):
+    return fcfs_core_fwd(ops, steps, timing, n_dies=n_dies, capq=capq,
+                         capw=capw, capsteps=capsteps,
+                         pipelined=pipelined, interpret=interpret)
+
+
+def pad_ops(lanes_ops) -> np.ndarray:
+    """Stack per-lane (P_l, 6) op tables into one padded (L, MAXP, 6).
+
+    Pad rows carry ``arrival = inf`` (the admission cursor's stop
+    sentinel); the padded width is the next power of two strictly above
+    the widest lane, so the cursor's clipped lookahead always lands on a
+    pad row.
+    """
+    L = len(lanes_ops)
+    widest = max((t.shape[0] for t in lanes_ops), default=0)
+    maxp = 1
+    while maxp <= widest:
+        maxp *= 2
+    ops = np.full((L, maxp, 6), np.inf, dtype=np.float64)
+    ops[:, :, 1] = 3.0          # kind: pad
+    ops[:, :, 2] = 0.0          # pad die: keep int casts well-defined
+    for l, t in enumerate(lanes_ops):
+        ops[l, :t.shape[0]] = t
+    return ops
+
+
+def augment_ops(ops: np.ndarray, pipelined: bool) -> np.ndarray:
+    """Append the host-precomputed grant-attribute columns.
+
+    ``gdt`` — delta from grant time to the op's first event (tR for
+    reads, dur for writes/erases); ``gk0`` — the first event's kind
+    (0 sense, 1 release), which doubles as the op's non-read flag;
+    ``grem0`` — initial remaining-attempt counter (serial mode counts
+    down from ``attempts``; pipelined counts issued copies up from 0).
+    These collapse the read/write/erase dispatch at grant time to
+    single blends inside the kernel.
+    """
+    kind = ops[:, :, 1]
+    is_read = kind == 0.0
+    gdt = np.where(is_read, ops[:, :, 5], ops[:, :, 3])
+    gk0 = np.where(is_read, 0.0, 1.0)
+    if pipelined:
+        grem0 = np.zeros_like(gdt)
+    else:
+        grem0 = np.where(is_read, ops[:, :, 4], 0.0)
+    return np.concatenate(
+        [ops, np.stack([gdt, gk0, grem0], axis=2)], axis=2)
+
+
+def count_steps(ops: np.ndarray) -> int:
+    """Lockstep step bound: max over lanes of admissions + heap pops.
+
+    Per op the interpreter pops ``attempts + 1`` events for a read
+    (senses + release), 2 for a write (transfer-landed + release), and 1
+    for an erase (release) — computable up front because the supported
+    matrix has no preemption or online injection.
+    """
+    kind = ops[:, :, 1]
+    att = ops[:, :, 4]
+    is_r = kind == 0.0
+    per_op = np.where(is_r, np.where(np.isfinite(att), att, 0.0) + 1.0,
+                      np.where(kind == 1.0, 2.0,
+                               np.where(kind == 2.0, 1.0, 0.0)))
+    n_adm = (kind != 3.0).sum(axis=1)
+    return int((n_adm + per_op.sum(axis=1)).max(initial=0.0))
+
+
+def _pow2_at_least(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def ring_caps(ops: np.ndarray, n_dies: int):
+    """Static FIFO/ACQ ring capacities for a padded op table.
+
+    ``capq`` bounds the deepest per-die FIFO (every op targeting a die
+    can be queued there at once, at most); ``capw`` bounds the in-flight
+    write transfers of a lane (each write pushes ACQ exactly once).
+    Rounded up to powers of two so jit variants stay few; tiny floors
+    keep the ``%`` ring arithmetic trivially safe for op-free lanes.
+    """
+    kind = ops[:, :, 1]
+    die = np.where(np.isfinite(ops[:, :, 2]), ops[:, :, 2], -1.0)
+    per_die = 0
+    for l in range(ops.shape[0]):
+        real = kind[l] != 3.0
+        if real.any():
+            counts = np.bincount(die[l, real].astype(np.int64),
+                                 minlength=n_dies)
+            per_die = max(per_die, int(counts.max()))
+    writes = int((kind == 1.0).sum(axis=1).max(initial=0.0))
+    return _pow2_at_least(max(per_die, 2)), _pow2_at_least(max(writes, 2))
+
+
+def fcfs_core(ops: np.ndarray, n_dies: int, pipelined: bool,
+              tdma: float, tecc: float):
+    """Run the lockstep shard core on a padded op table.
+
+    Returns numpy ``(fin, diestat, lane)`` — per-op completion
+    contributions (L, MAXP+1), per-die [busy_total, last_release]
+    (L, n_dies, 2), and per-lane [ch_busy, ch_tot, n_events, seq]
+    (L, 4).  Bit-identical to :func:`fcfs_core_ref` on CPU.
+    """
+    steps = count_steps(ops)
+    capq, capw = ring_caps(ops, n_dies)
+    capsteps = _pow2_at_least(max(steps, 1))
+    L, maxp = ops.shape[0], ops.shape[1]
+    with enable_x64():
+        log, diestat, lane = _core_jit(
+            jnp.asarray(augment_ops(ops, pipelined), jnp.float64),
+            jnp.asarray([steps], jnp.int32),
+            jnp.asarray([float(tdma), float(tecc)], jnp.float64),
+            n_dies=n_dies, capq=capq, capw=capw, capsteps=capsteps,
+            pipelined=pipelined, interpret=_use_interpret())
+        log = np.asarray(log)
+    # Scatter the per-step completion log into the per-op fin table.
+    # Each real op id appears at most once; idle rows carry the sink id
+    # maxp, zeroed afterwards.  Rows past ``steps`` were never written
+    # (all-sink) — skip them.
+    fin = np.zeros((L, maxp + 1), dtype=np.float64)
+    fin[np.arange(L)[None, :], log[:steps, L:].astype(np.int64)] = \
+        log[:steps, :L]
+    fin[:, maxp] = 0.0
+    return (fin, np.asarray(diestat), np.asarray(lane))

@@ -1,0 +1,171 @@
+"""Plain-Python reference for the lockstep FCFS shard core.
+
+Implements the same bounded-stream-merge algorithm as the Pallas kernel
+(:mod:`repro.kernels.fcfs_core.kernel`) — per-die single event slot,
+write-transfer FIFO, admission cursor, explicit seq counters — one lane
+at a time, with the identical float arithmetic (Python floats are IEEE
+f64, and every add/max is written in the interpreter's association
+order).  Used by the parity tests to pin the kernel bit-for-bit, and as
+the unbatched fallback oracle.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_INF = float("inf")
+
+
+def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
+                  tdma: float, tecc: float):
+    """Run the shard core per lane in pure Python.
+
+    ``ops``: (L, MAXP, 6) f64 — [arrival, kind, die, dur, attempts, tr],
+    admission order per lane, padded rows with ``arrival == inf``.
+    Returns ``(fin, diestat, lane)`` with the same shapes/meaning as
+    :func:`repro.kernels.fcfs_core.kernel.fcfs_core_fwd`.
+    """
+    L, maxp, _ = ops.shape
+    fin = np.zeros((L, maxp + 1), dtype=np.float64)
+    diestat = np.zeros((L, n_dies, 2), dtype=np.float64)
+    lane = np.zeros((L, 4), dtype=np.float64)
+
+    for l in range(L):
+        arr = ops[l, :, 0]
+        kind = ops[l, :, 1]
+        die = np.where(np.isfinite(ops[l, :, 2]),
+                       ops[l, :, 2], 0.0).astype(np.int64)
+        dur = ops[l, :, 3]
+        att = ops[l, :, 4]
+        tr = ops[l, :, 5]
+        n_adm = int((kind != 3.0).sum())   # pads are trailing
+
+        ev_t = [_INF] * n_dies
+        ev_seq = [0.0] * n_dies
+        ev_op = [0] * n_dies
+        ev_kind = [0] * n_dies      # 0=sense/copy, 1=release
+        held = [0.0] * n_dies
+        free = [True] * n_dies
+        rem = [0.0] * n_dies
+        a_act = [0.0] * n_dies
+        tr_act = [0.0] * n_dies
+        tot = [0.0] * n_dies
+        busy = [0.0] * n_dies
+        fifo: list = [[] for _ in range(n_dies)]
+        acq: list = []              # (done, seq, op) in push order
+        aq_head = 0
+
+        chb = 0.0
+        ch_tot = 0.0
+        seqc = 0.0
+        n_ev = 0.0
+        ai = 0
+
+        def grant(d: int, o: int, tm: float) -> None:
+            nonlocal seqc
+            held[d] = tm
+            free[d] = False
+            ev_op[d] = o
+            ev_seq[d] = seqc
+            if kind[o] == 0.0:
+                ev_t[d] = tm + tr[o]
+                ev_kind[d] = 0
+                rem[d] = 0.0 if pipelined else att[o]
+                a_act[d] = att[o]
+                tr_act[d] = tr[o]
+            else:                   # write program or erase
+                ev_t[d] = tm + dur[o]
+                ev_kind[d] = 1
+            seqc += 1.0
+
+        while True:
+            # candidate: min (time, seq) over die slots + ACQ head
+            tmin, smin, widx = _INF, _INF, -1
+            for d in range(n_dies):
+                if ev_t[d] < tmin or (ev_t[d] == tmin and ev_seq[d] < smin):
+                    tmin, smin, widx = ev_t[d], ev_seq[d], d
+            if aq_head < len(acq):
+                at, asq, _ = acq[aq_head]
+                if at < tmin or (at == tmin and asq < smin):
+                    tmin, smin, widx = at, asq, n_dies
+            adm_t = arr[ai] if ai < n_adm else _INF
+            if adm_t == _INF and tmin == _INF:
+                break
+
+            if adm_t <= tmin:       # admission wins ties
+                o = ai
+                tm = adm_t
+                ai += 1
+                k = kind[o]
+                if k == 1.0:        # write: channel transfer now
+                    done = (chb if chb > tm else tm) + tdma
+                    chb = done
+                    ch_tot += tdma
+                    acq.append((done, seqc, o))
+                    seqc += 1.0
+                else:               # read or erase: contend for the die
+                    d = die[o]
+                    if free[d] and not fifo[d]:
+                        grant(d, o, tm)
+                    else:
+                        fifo[d].append(o)
+                continue
+
+            n_ev += 1.0
+            if widx == n_dies:      # ACQ: write transfer landed
+                tm, _, o = acq[aq_head]
+                aq_head += 1
+                d = die[o]
+                if free[d] and not fifo[d]:
+                    grant(d, o, tm)
+                else:
+                    fifo[d].append(o)
+                continue
+
+            d = widx
+            tm = ev_t[d]
+            o = ev_op[d]
+            if ev_kind[d] == 0:     # sense done / pipelined copy
+                done = (chb if chb > tm else tm) + tdma
+                chb = done
+                ch_tot += tdma
+                if not pipelined:
+                    r = rem[d] - 1.0
+                    if r:
+                        rem[d] = r
+                        ev_t[d] = (done + tecc) + tr_act[d]
+                    else:
+                        fin[l, o] = done + tecc
+                        ev_t[d] = done
+                        ev_kind[d] = 1
+                else:
+                    i = rem[d]
+                    if i + 1.0 < a_act[d]:
+                        rem[d] = i + 1.0
+                        tnext = tm + tr_act[d]
+                        if done > tnext:
+                            tnext = done
+                        ev_t[d] = tnext
+                    else:
+                        fin[l, o] = done + tecc
+                        ev_t[d] = tm + tr_act[d] if a_act[d] > 1.0 else tm
+                        ev_kind[d] = 1
+                ev_seq[d] = seqc
+                seqc += 1.0
+            else:                   # release
+                tot[d] += tm - held[d]
+                busy[d] = tm
+                if kind[o] != 0.0:
+                    fin[l, o] = tm
+                if fifo[d]:
+                    o2 = fifo[d].pop(0)
+                    grant(d, o2, tm)
+                else:
+                    free[d] = True
+                    ev_t[d] = _INF
+
+        diestat[l, :, 0] = tot
+        diestat[l, :, 1] = busy
+        lane[l] = (chb, ch_tot, n_ev, seqc)
+
+    return fin, diestat, lane

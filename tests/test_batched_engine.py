@@ -1,0 +1,226 @@
+"""Batched lockstep engine: bit-equivalence matrix + explicit rejection.
+
+The contract for ``engine="batched"`` (:mod:`repro.flashsim.engine_batched`)
+has two halves, both tested here:
+
+  * on the supported matrix — fcfs scheduling, gc in {none, prepass},
+    no faults, open loop — every run is **bit-identical** to the array
+    interpreter: full :class:`SimStats` dataclass equality, synthetic
+    profiles and real MSR excerpts alike;
+  * everywhere else the engine **fails fast** with
+    :class:`BatchedUnsupported` — never a silent fallback to the
+    interpreter.
+
+The lockstep kernel itself is additionally pinned against an
+independent pure-Python oracle (:func:`repro.kernels.fcfs_core.
+fcfs_core_ref`) on randomized op tables, including the rel=0 /
+single-attempt corner where every read senses exactly once.
+"""
+
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.flashsim.config import (
+    DEFAULT_SSD,
+    FaultConfig,
+    OperatingCondition,
+    SSDConfig,
+)
+from repro.flashsim.engine_batched import BatchedUnsupported
+from repro.flashsim.sched import SCHEDULERS
+from repro.flashsim.ssd import (
+    compare_mechanisms,
+    simulate,
+    simulate_batch,
+)
+from repro.flashsim.workloads import load_msr_csv
+
+AGED = OperatingCondition(365.0, 1000.0)
+MODEST = OperatingCondition(30.0, 0.0)
+DATA = Path(__file__).parent / "data"
+
+MECHANISMS = ("baseline", "sota", "pr2", "ar2", "pr2ar2", "sota+pr2ar2")
+
+
+def _pair(workload="websearch", mechanism="pr2ar2", cond=AGED, seed=0,
+          n=800, **kw):
+    a = simulate(workload, cond, mechanism, seed=seed, n_requests=n,
+                 engine="array", **kw)
+    b = simulate(workload, cond, mechanism, seed=seed, n_requests=n,
+                 engine="batched", **kw)
+    return a, b
+
+
+class TestSupportedMatrix:
+    """Full SimStats equality wherever support is claimed."""
+
+    @pytest.mark.parametrize("mechanism", MECHANISMS)
+    def test_all_mechanisms_bit_identical(self, mechanism):
+        a, b = _pair(mechanism=mechanism)
+        assert a == b
+
+    @pytest.mark.parametrize("gc", [None, "prepass"])
+    @pytest.mark.parametrize("workload", ["websearch", "oltp", "prxy"])
+    def test_workloads_and_gc_modes(self, workload, gc):
+        a, b = _pair(workload=workload, gc=gc)
+        assert a == b
+
+    def test_modest_condition(self):
+        a, b = _pair(cond=MODEST)
+        assert a == b
+
+    def test_shard_flag_is_a_noop(self):
+        # engine="batched" IS the per-channel decomposition; shard=True
+        # selects the same lockstep run, still equal to the array core.
+        a, b = _pair(shard=True)
+        assert a == b
+        _, b2 = _pair(shard=False)
+        assert b == b2
+
+    @pytest.mark.parametrize("spec,gc", [
+        ("web_0", None), ("src1_1", None), ("src1_1", "prepass"),
+    ])
+    def test_msr_excerpts_bit_identical(self, spec, gc):
+        trace = load_msr_csv(DATA / f"{spec}.csv.gz")
+        a = simulate(spec, AGED, "pr2ar2", seed=3, trace=trace,
+                     engine="array", gc=gc)
+        b = simulate(spec, AGED, "pr2ar2", seed=3, trace=trace,
+                     engine="batched", gc=gc)
+        assert a == b
+
+    def test_fast_path_counter(self):
+        a, b = _pair()
+        assert a.fast_path_events == 0
+        assert b.fast_path_events > 0
+        # the counter is bookkeeping, not physics: excluded from
+        # equality so supported-matrix runs compare clean
+        assert a == b
+
+    def test_compare_mechanisms_batched(self):
+        a = compare_mechanisms("websearch", AGED, seed=1, n_requests=600,
+                               engine="array")
+        b = compare_mechanisms("websearch", AGED, seed=1, n_requests=600,
+                               engine="batched")
+        assert list(a) == list(b)
+        assert all(a[m] == b[m] for m in a)
+
+    def test_simulate_batch_batched(self):
+        conds = (AGED, MODEST)
+        a = simulate_batch("websearch", conds, mechanisms=("baseline",
+                           "pr2ar2"), seeds=(0, 1), n_requests=400,
+                           engine="array")
+        b = simulate_batch("websearch", conds, mechanisms=("baseline",
+                           "pr2ar2"), seeds=(0, 1), n_requests=400,
+                           engine="batched")
+        assert list(a) == list(b)
+        assert all(a[k] == b[k] for k in a)
+
+
+class TestConfigEngineField:
+    """SSDConfig.engine selects the core when engine= is left unset."""
+
+    def test_cfg_engine_routes_batched(self):
+        cfg = dataclasses.replace(DEFAULT_SSD, engine="batched")
+        b = simulate("websearch", AGED, "baseline", n_requests=400,
+                     cfg=cfg)
+        assert b.fast_path_events > 0
+        a = simulate("websearch", AGED, "baseline", n_requests=400)
+        assert a == b
+
+    def test_explicit_engine_overrides_cfg(self):
+        cfg = dataclasses.replace(DEFAULT_SSD, engine="batched")
+        a = simulate("websearch", AGED, "baseline", n_requests=400,
+                     cfg=cfg, engine="array")
+        assert a.fast_path_events == 0
+
+    def test_invalid_engine_rejected_at_construction(self):
+        with pytest.raises(ValueError, match="engine"):
+            SSDConfig(engine="vectorized")
+
+
+class TestExplicitRejection:
+    """Unsupported configurations raise BatchedUnsupported — loudly."""
+
+    def test_is_a_notimplementederror(self):
+        assert issubclass(BatchedUnsupported, NotImplementedError)
+
+    @pytest.mark.parametrize(
+        "scheduler", [s for s in SCHEDULERS if s != "fcfs"])
+    def test_non_fcfs_schedulers(self, scheduler):
+        with pytest.raises(BatchedUnsupported, match="fcfs"):
+            simulate("websearch", AGED, "baseline", n_requests=200,
+                     engine="batched", scheduler=scheduler)
+
+    def test_online_gc(self):
+        with pytest.raises(BatchedUnsupported, match="online"):
+            simulate("prxy", AGED, "baseline", n_requests=200,
+                     engine="batched", gc="online")
+
+    def test_faults(self):
+        with pytest.raises(BatchedUnsupported, match="fault"):
+            simulate("websearch", AGED, "baseline", n_requests=200,
+                     engine="batched", faults=FaultConfig())
+
+    def test_closed_loop(self):
+        with pytest.raises(BatchedUnsupported, match="open-loop"):
+            simulate("websearch", AGED, "baseline", n_requests=200,
+                     engine="batched", ncq_depth=8)
+
+    def test_validate_flag(self):
+        with pytest.raises(BatchedUnsupported, match="validate"):
+            simulate("websearch", AGED, "baseline", n_requests=200,
+                     engine="batched", validate=True)
+
+    def test_compare_mechanisms_rejects_too(self):
+        with pytest.raises(BatchedUnsupported):
+            compare_mechanisms("websearch", AGED, n_requests=200,
+                               engine="batched", scheduler="host_prio")
+
+
+class TestKernelVsReference:
+    """Lockstep kernel vs the independent pure-Python oracle, bitwise."""
+
+    @staticmethod
+    def _random_table(rng, n_ops, n_dies, attempts):
+        arr = np.sort(rng.uniform(0.0, 400.0, n_ops))
+        kind = rng.choice([0.0, 0.0, 1.0, 2.0], size=n_ops)
+        die = rng.integers(0, n_dies, n_ops).astype(np.float64)
+        dur = rng.uniform(10.0, 60.0, n_ops)
+        att = (np.full(n_ops, 1.0) if attempts == 1
+               else rng.integers(1, 6, n_ops).astype(np.float64))
+        tr = rng.uniform(5.0, 25.0, n_ops)
+        return np.stack([arr, kind, die, dur, att, tr], axis=1)
+
+    @pytest.mark.parametrize("pipelined", [False, True])
+    @pytest.mark.parametrize("attempts", [1, None],
+                             ids=["rel0-single-attempt", "multi-attempt"])
+    def test_bitwise_parity_random_tables(self, pipelined, attempts):
+        from repro.kernels.fcfs_core import fcfs_core, fcfs_core_ref
+        from repro.kernels.fcfs_core.ops import pad_ops
+
+        rng = np.random.default_rng(42 if pipelined else 7)
+        n_dies = 4
+        for _ in range(3):
+            lanes = [self._random_table(rng, int(rng.integers(3, 24)),
+                                        n_dies, attempts)
+                     for _ in range(4)]
+            ops = pad_ops(lanes)
+            got = fcfs_core(ops, n_dies, pipelined, 3.0, 5.0)
+            want = fcfs_core_ref(ops, n_dies, pipelined, 3.0, 5.0)
+            for g, w in zip(got, want):
+                assert np.array_equal(g, w)
+
+    def test_empty_and_single_lane_corners(self):
+        from repro.kernels.fcfs_core import fcfs_core, fcfs_core_ref
+        from repro.kernels.fcfs_core.ops import pad_ops
+
+        rng = np.random.default_rng(0)
+        lanes = [np.zeros((0, 6)), self._random_table(rng, 5, 2, None)]
+        ops = pad_ops(lanes)
+        got = fcfs_core(ops, 2, False, 3.0, 5.0)
+        want = fcfs_core_ref(ops, 2, False, 3.0, 5.0)
+        for g, w in zip(got, want):
+            assert np.array_equal(g, w)

@@ -1,0 +1,44 @@
+"""Property-based check: batched lockstep core == scalar interpreter.
+
+Randomized traces (profile mix, size, seed, operating corner) drawn by
+hypothesis; every supported draw must produce full ``SimStats``
+equality between ``engine="array"`` and ``engine="batched"``.  Skipped
+when the optional ``hypothesis`` dependency is absent (mirrors
+``test_properties.py``).
+"""
+
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency 'hypothesis' not installed; "
+           "property tests skipped",
+)
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.flashsim.config import OperatingCondition
+from repro.flashsim.ssd import simulate
+
+_draws = st.tuples(
+    st.sampled_from(["websearch", "oltp", "prxy", "ycsb-b"]),
+    st.sampled_from(["baseline", "pr2ar2", "sota"]),
+    st.integers(0, 31),              # seed
+    st.integers(50, 500),            # n_requests
+    st.floats(0.0, 365.0),           # retention days
+    st.floats(0.0, 1500.0),          # P/E cycles
+    st.sampled_from([None, "prepass"]),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(_draws)
+def test_batched_equals_scalar_on_random_traces(draw):
+    workload, mechanism, seed, n, ret, pec, gc = draw
+    cond = OperatingCondition(ret, pec)
+    a = simulate(workload, cond, mechanism, seed=seed, n_requests=n,
+                 engine="array", gc=gc)
+    b = simulate(workload, cond, mechanism, seed=seed, n_requests=n,
+                 engine="batched", gc=gc)
+    assert a == b
