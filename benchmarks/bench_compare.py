@@ -12,7 +12,10 @@ Usage: python -m benchmarks.bench_compare A.json B.json
 Exit status 0 when the deterministic payloads are byte-identical after
 canonicalization; 1 with a diff summary otherwise.  If either file's
 ``summary.parallel`` block is present, its ``cells_equal`` flag (the
-in-run workers=1 vs workers=N equality check) must be true as well.
+in-run workers=1 vs workers=N equality check) must be true as well —
+unless the block was *gated* on a single-core host, in which case it
+carries ``skipped`` + ``skipped_reason`` instead of measurements and
+passes (the payload diff still covers worker-count determinism).
 """
 
 from __future__ import annotations
@@ -98,7 +101,14 @@ def main(argv=None) -> int:
     ok = True
     for name, doc in ((args.file_a, doc_a), (args.file_b, doc_b)):
         par = doc.get("summary", {}).get("parallel")
-        if par is not None and not par.get("cells_equal", False):
+        if par is None:
+            continue
+        if par.get("skipped"):
+            if not par.get("skipped_reason"):
+                print(f"FAIL: {name} summary.parallel is skipped but "
+                      f"carries no skipped_reason")
+                ok = False
+        elif not par.get("cells_equal", False):
             print(f"FAIL: {name} summary.parallel.cells_equal is false "
                   f"(in-run workers=1 vs workers=N results diverged)")
             ok = False

@@ -176,6 +176,14 @@ class HostCacheConfig:
     #: Host-side service time (us) for a cache-absorbed write or a
     #: full-cache-hit read (DRAM access; no flash op, no tDMA).
     hit_us: float = 2.0
+    #: Flush-order / eviction policy.  ``"fifo"`` (default) flushes
+    #: cache lines in absorption order; ``"lru"`` flushes the least
+    #: recently *used* line first — read hits and rewrites refresh a
+    #: line's recency, so hot dirty lines stay cached longer and keep
+    #: serving hits.  Write-amplification accounting is identical under
+    #: both (every absorbed page flushes exactly once; only the order
+    #: changes).
+    eviction: str = "fifo"
 
     def __post_init__(self):
         if self.capacity_pages < 1:
@@ -187,6 +195,11 @@ class HostCacheConfig:
             )
         if self.hit_us < 0.0:
             raise ValueError("hit_us must be >= 0")
+        if self.eviction not in ("fifo", "lru"):
+            raise ValueError(
+                f"HostCacheConfig.eviction must be 'fifo' or 'lru', "
+                f"got {self.eviction!r}"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -241,17 +254,21 @@ class SSDConfig:
     #: ``engine=`` argument is left unset: ``"array"`` (the bit-pinned
     #: default interpreter), ``"batched"`` (all channel loops advance in
     #: lockstep inside one compiled kernel — bit-identical on its
-    #: supported matrix, rejects everything else), or ``"reference"``
+    #: supported matrix, rejects everything else), ``"auto"`` (resolve
+    #: per run: ``batched`` when the config is inside the batched
+    #: matrix, else ``array`` — the choice and any fallback reason are
+    #: recorded on ``SimStats.engine_selected`` /
+    #: ``engine_fallback_reason``, never hidden), or ``"reference"``
     #: (the retired seed engine).  An explicit ``engine=`` on
     #: ``simulate``/``compare_mechanisms``/``simulate_batch`` overrides
     #: this.
     engine: str = "array"
 
     def __post_init__(self):
-        if self.engine not in ("array", "batched", "reference"):
+        if self.engine not in ("array", "batched", "auto", "reference"):
             raise ValueError(
-                f"SSDConfig.engine must be 'array', 'batched', or "
-                f"'reference', got {self.engine!r}"
+                f"SSDConfig.engine must be 'array', 'batched', 'auto', "
+                f"or 'reference', got {self.engine!r}"
             )
         if self.n_channels < 1 or self.dies_per_channel < 1:
             raise ValueError(

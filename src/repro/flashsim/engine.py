@@ -1113,6 +1113,7 @@ def run_closed_loop(
                     and op_lpn is not None and op_lpn[o] >= 0
                     and cache.contains(op_lpn[o])):
                 cache.note_hit()
+                cache.touch(op_lpn[o])
                 continue
             if op_rid[o] == r:
                 req_pend[r] += 1

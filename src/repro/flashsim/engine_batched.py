@@ -1,9 +1,9 @@
 """Batched shard core: lockstep-vectorized event loops over all channels.
 
 ``run_event_core_batched`` is a drop-in replacement for
-:func:`repro.flashsim.engine.run_event_core` on the **FCFS open-loop
-fast path**: every per-channel shard loop advances in lockstep inside
-one compiled kernel (:mod:`repro.kernels.fcfs_core`) instead of running
+:func:`repro.flashsim.engine.run_event_core` on the **open-loop fast
+path**: every per-channel shard loop advances in lockstep inside one
+compiled kernel (:mod:`repro.kernels.fcfs_core`) instead of running
 sequentially in Python.  The result is bit-identical to the interpreter
 — the kernel replays the exact event order (push-order seq discipline)
 and the exact float arithmetic (the busy-until collapse's add/max
@@ -15,9 +15,12 @@ unsupported configuration raises :class:`BatchedUnsupported` rather
 than silently falling back to the interpreter:
 
   ===================  ========================================
-  scheduler            ``fcfs`` only (no priority dispatch, no
-                       preemption — the kernel's per-die FIFO is
-                       the fcfs deque)
+  scheduler            any policy with a ring lowering —
+                       ``fcfs`` (single FIFO ring),
+                       ``host_prio`` and ``host_prio_aged[:b]``
+                       (dual priority rings, traced aging
+                       bound); ``tokens`` and ``preempt`` have
+                       none and are rejected
   GC                   ``none`` or ``prepass`` (the prepass
                        schedule is just a longer admission
                        stream); ``online`` injects ops mid-loop
@@ -28,11 +31,17 @@ than silently falling back to the interpreter:
   validate             ``False`` (work-conservation asserts are
                        interpreter instrumentation)
   ===================  ========================================
+
+``engine="auto"`` resolution lives here too (:func:`resolve_engine`):
+it runs the same checks non-fatally and returns ``("batched", "")``
+when eligible, else ``("array", reason)`` — the recorded reason string
+is the matching ``BatchedUnsupported`` message, so auto documents
+rather than hides its fallback.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -52,9 +61,10 @@ def check_batched_config(cfg) -> None:
     from repro.flashsim.sched import get_scheduler
 
     pol = get_scheduler(cfg.scheduler)
-    if pol.prioritized or pol.preemptive or pol.name != "fcfs":
+    if pol.ring_lowering is None:
         raise BatchedUnsupported(
-            f"engine='batched' supports scheduler='fcfs' only, got "
+            f"engine='batched' supports ring-lowerable schedulers only "
+            f"(fcfs, host_prio, host_prio_aged[:bound]), got "
             f"{cfg.scheduler!r}; use engine='array'"
         )
     if cfg.gc.enabled and cfg.gc.mode == "online":
@@ -81,9 +91,10 @@ def check_batched_supported(
     validate: bool,
 ) -> None:
     """Raise :class:`BatchedUnsupported` unless this run is eligible."""
-    if policy.prioritized or policy.preemptive or policy.name != "fcfs":
+    if policy.ring_lowering is None:
         raise BatchedUnsupported(
-            f"engine='batched' supports scheduler='fcfs' only, got "
+            f"engine='batched' supports ring-lowerable schedulers only "
+            f"(fcfs, host_prio, host_prio_aged[:bound]), got "
             f"{policy.name!r}; run this scheduler with engine='array'"
         )
     if online is not None:
@@ -101,6 +112,24 @@ def check_batched_supported(
             "validate=True is interpreter instrumentation; use "
             "engine='array' for work-conservation checks"
         )
+
+
+def resolve_engine(cfg, validate: bool = False) -> Tuple[str, str]:
+    """Resolve ``engine="auto"`` for a config: ``(engine, reason)``.
+
+    Returns ``("batched", "")`` when the config is inside the batched
+    matrix, else ``("array", reason)`` where ``reason`` is the exact
+    :class:`BatchedUnsupported` message the explicit engine would have
+    raised — auto records, never hides, its fallback.  ``validate=True``
+    always resolves to the instrumented interpreter.
+    """
+    if validate:
+        return ("array", "validate=True is interpreter instrumentation")
+    try:
+        check_batched_config(cfg)
+    except BatchedUnsupported as e:
+        return ("array", str(e))
+    return ("batched", "")
 
 
 def run_event_core_batched(
@@ -145,7 +174,12 @@ def run_event_core_batched(
 
     kind = np.where(read, 0.0, np.where(erase, 2.0, 1.0))
     die_local = (die // n_ch).astype(np.float64)
-    table = np.stack([arrival, kind, die_local, dur, att, tr], axis=1)
+    # Scheduling class: the interpreter's host_read table is
+    # ``read and rid >= 0`` (GC copy-back reads carry rid = -1; the
+    # fault ladder's parity reads are excluded from this matrix).
+    hp = (read & (rid >= 0)).astype(np.float64)
+    table = np.stack([arrival, kind, die_local, dur, att, tr, hp],
+                     axis=1)
 
     # Per-channel admission substreams, original order preserved — the
     # same partition run_event_core's shard path builds.
@@ -154,10 +188,12 @@ def run_event_core_batched(
     from repro.kernels.fcfs_core import fcfs_core
     from repro.kernels.fcfs_core.ops import pad_ops
 
+    mode, bound = policy.ring_lowering
     ops = pad_ops([table[idx] for idx in lane_idx])
     n_dies_local = -(-n_dies // n_ch)
-    fin, diestat, lane = fcfs_core(ops, n_dies_local, pipelined,
-                                   t.tdma_us, t.tecc_us)
+    fin, diestat, lane = fcfs_core(
+        ops, n_dies_local, pipelined, t.tdma_us, t.tecc_us,
+        age_bound=bound if mode == "prio" else None)
 
     # -- reassemble an EngineResult exactly as merge_shard_results would
     req_done = np.zeros(n_requests, dtype=np.float64)

@@ -3,10 +3,18 @@
 :class:`WriteCache` models the controller DRAM write buffer a real host
 sees in front of the flash array: incoming writes that fit are *absorbed*
 (the request completes at DRAM speed), their page programs are parked in
-an admission-order FIFO, and a watermark policy later *flushes* them to
-the device, where they enter the ordinary scheduler/GC machinery as
-low-priority programs.  Reads that hit a dirty (or still-flushing) line
-are served from the cache without touching flash.
+an eviction-ordered dirty list, and a watermark policy later *flushes*
+them to the device, where they enter the ordinary scheduler/GC machinery
+as low-priority programs.  Reads that hit a dirty (or still-flushing)
+line are served from the cache without touching flash.
+
+Flush (eviction) order is a policy knob
+(:attr:`~repro.flashsim.config.HostCacheConfig.eviction`): ``"fifo"``
+pops entries in absorption order; ``"lru"`` pops the least-recently-used
+entry — read hits (:meth:`WriteCache.touch`) refresh the dirty entries
+holding the line, so hot write-then-read lines stay cached longer.  The
+policy only permutes *when* each program is issued, never how many:
+flush traffic, occupancy accounting, and WA are identical under both.
 
 The class is engine-agnostic and fully synchronous — the event loop in
 :mod:`repro.flashsim.engine` drives it and decides *when* pops/completions
@@ -17,9 +25,11 @@ happen; this module only owns the bookkeeping contract:
   capacity, so backpressure is honest.
 * **Read-after-write**: ``version(lpn)`` always returns the newest
   version in stream order (cached if any copy is resident, else the
-  durable one), and FIFO flushing preserves per-LPN program order, so the
-  durable state after a full drain equals a synchronous replay of the
-  write stream.
+  durable one).  Per-page version counters make the durable map
+  *landing-order independent* — ``page_durable()`` only advances a line
+  to a newer version — so LRU's recency-permuted flush order (which can
+  land two programs of one LPN out of stream order) still drains to the
+  same durable state as a synchronous replay of the write stream.
 * **No coalescing**: re-writing a cached LPN appends a new entry (a new
   program will be issued) rather than merging — each absorbed page-op
   occupies its own slot until it lands, which keeps flush traffic equal
@@ -29,8 +39,8 @@ happen; this module only owns the bookkeeping contract:
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any, Deque, Dict, Iterator, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Tuple
 
 from repro.flashsim.config import HostCacheConfig
 
@@ -48,20 +58,27 @@ class CacheEntry:
 
 
 class WriteCache:
-    """Page-granular write-back cache with FIFO flush order and
-    high/low watermarks (see :class:`~repro.flashsim.config.
-    HostCacheConfig`)."""
+    """Page-granular write-back cache with a configurable flush order
+    (``fifo`` / ``lru``) and high/low watermarks (see
+    :class:`~repro.flashsim.config.HostCacheConfig`)."""
 
     def __init__(self, cfg: HostCacheConfig):
         self.cfg = cfg
         self.capacity = cfg.capacity_pages
         self.high_mark = cfg.flush_high * cfg.capacity_pages
         self.low_mark = cfg.flush_low * cfg.capacity_pages
+        self.lru = cfg.eviction == "lru"
         #: absorbed-but-not-issued page programs
         self.dirty_pages = 0
         #: issued-but-not-durable page programs
         self.flushing_pages = 0
-        self._fifo: Deque[CacheEntry] = deque()
+        # Dirty entries in eviction order (head = next to flush).  With
+        # no touches this is exactly absorption order, so one structure
+        # serves both policies; touch() re-ranks under lru only.
+        self._dirty: "OrderedDict[int, CacheEntry]" = OrderedDict()
+        self._next_eid = 0
+        #: lpn -> ids of dirty entries holding a copy (touch/pop upkeep)
+        self._dirty_eids: Dict[int, List[int]] = {}
         #: lpn -> number of resident (dirty or flushing) copies
         self._resident: Dict[int, int] = {}
         #: lpn -> newest absorbed version (monotone per lpn)
@@ -105,7 +122,11 @@ class WriteCache:
             self._resident[lpn] = self._resident.get(lpn, 0) + 1
             versions.append(v)
         entry = CacheEntry(tuple(lpns), tuple(versions), payload)
-        self._fifo.append(entry)
+        eid = self._next_eid
+        self._next_eid += 1
+        self._dirty[eid] = entry            # appended at the MRU end
+        for lpn in set(lpns):
+            self._dirty_eids.setdefault(lpn, []).append(eid)
         self.dirty_pages += len(lpns)
         self.absorbed_writes += 1
         self.absorbed_pages += len(lpns)
@@ -127,6 +148,16 @@ class WriteCache:
     def note_hit(self, n_pages: int = 1) -> None:
         self.hit_pages += n_pages
 
+    def touch(self, lpn: int) -> None:
+        """Record a read hit's recency: under ``lru``, every dirty entry
+        holding ``lpn`` moves to the MRU end (kept in their relative
+        order, so per-LPN flush order is preserved); a no-op under
+        ``fifo`` and for lines that are flushing-only or absent."""
+        if not self.lru:
+            return
+        for eid in self._dirty_eids.get(lpn, ()):
+            self._dirty.move_to_end(eid)
+
     # -- flush policy ------------------------------------------------------
 
     def need_flush(self) -> bool:
@@ -138,10 +169,17 @@ class WriteCache:
         return self.dirty_pages <= self.low_mark
 
     def pop_entry(self) -> Optional[CacheEntry]:
-        """Oldest dirty entry, moved dirty -> flushing; None when clean."""
-        if not self._fifo:
+        """Next dirty entry in eviction order (absorption order under
+        ``fifo``, least-recently-used under ``lru``), moved
+        dirty -> flushing; None when clean."""
+        if not self._dirty:
             return None
-        entry = self._fifo.popleft()
+        eid, entry = self._dirty.popitem(last=False)
+        for lpn in set(entry.lpns):
+            eids = self._dirty_eids[lpn]
+            eids.remove(eid)
+            if not eids:
+                del self._dirty_eids[lpn]
         n = len(entry.lpns)
         self.dirty_pages -= n
         self.flushing_pages += n
@@ -150,7 +188,7 @@ class WriteCache:
 
     def drain(self) -> Iterator[CacheEntry]:
         """Pop every remaining dirty entry (end-of-trace drain)."""
-        while self._fifo:
+        while self._dirty:
             yield self.pop_entry()
 
     def page_durable(self, lpn: int, version: int) -> None:

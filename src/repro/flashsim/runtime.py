@@ -199,11 +199,91 @@ def prewarm_characterization(cells: Iterable[Cell]) -> int:
     return len(seen)
 
 
-def _mp_context():
+def _batched_sigs(cells: Iterable[Cell]):
+    """Distinct batched-kernel signatures the cells will (or may) run.
+
+    A cell contributes when its engine is ``"batched"`` or ``"auto"``
+    *and* its knob-overlaid config resolves inside the batched matrix —
+    the same :func:`~repro.flashsim.engine_batched.resolve_engine` call
+    run() will make (auto cells that fall back contribute nothing).
+    Signature = (lane count, local die count, pipelined, scheduler
+    lowering mode): exactly the static parts of the kernel's jit key
+    that the cell list determines up front.
+    """
+    from repro.core.retry import RetryPolicy
+    from repro.flashsim.engine_batched import resolve_engine
+    from repro.flashsim.sched import get_scheduler
+    from repro.flashsim.ssd import _with_knobs
+
+    sigs = set()
+    for cell in cells:
+        engine = cell.engine if cell.engine is not None else cell.cfg.engine
+        if engine not in ("batched", "auto"):
+            continue
+        cfg = _with_knobs(cell.cfg, cell.scheduler, cell.gc, cell.faults,
+                          cell.ncq_depth, cell.host_cache)
+        if resolve_engine(cfg)[0] != "batched":
+            continue
+        mode, _ = get_scheduler(cfg.scheduler).ring_lowering
+        n_dies_local = -(-cfg.n_dies // cfg.n_channels)
+        for mech in cell.mechanisms:
+            sigs.add((cfg.n_channels, n_dies_local,
+                      RetryPolicy(mech).pipelined, mode))
+    return sigs
+
+
+def prewarm_batched(cells: Iterable[Cell]) -> int:
+    """Compile the batched core's kernel variants before the pool starts.
+
+    For every distinct signature in :func:`_batched_sigs`, runs the
+    lockstep kernel once on a tiny synthetic op table in the parent
+    process.  The payoff is the *persistent* compilation cache
+    (:mod:`repro.kernels.fcfs_core.ops`): the parent's compile lands on
+    disk, so every (spawned) worker's first batched cell is a cache hit
+    instead of an XLA compile.  Timing constants, step counts, and
+    aging bounds are traced (not compile keys), so the tiny table warms
+    the same executable a real floor-bucket cell uses; larger shape
+    buckets still compile on first use but land in the same on-disk
+    cache for every later process.  Returns the number of kernel
+    variants warmed.
+    """
+    sigs = _batched_sigs(cells)
+    if not sigs:
+        return 0
+    import numpy as np
+
+    from repro.kernels.fcfs_core import fcfs_core
+    from repro.kernels.fcfs_core.ops import pad_ops
+
+    for n_ch, n_dies_local, pipelined, mode in sigs:
+        # One host read per lane: [arrival kind die dur attempts tr hp].
+        lane = np.array([[0.0, 0.0, 0.0, 0.0, 1.0, 40.0, 1.0]])
+        fcfs_core(pad_ops([lane] * n_ch), n_dies_local, pipelined,
+                  100.0, 10.0,
+                  age_bound=16.0 if mode == "prio" else None)
+    return len(sigs)
+
+
+def _mp_context(use_jax: bool = False):
+    """Pool start-method: fork by default, spawn for JAX-using workers.
+
+    Forked children of a JAX-initialized parent deadlock the moment
+    they call back into XLA (the runtime's thread pool does not survive
+    ``os.fork``) — array-engine sweeps never do (workers only read the
+    parent's memoized characterization tables), but batched cells run
+    the kernel *in* the worker, so any sweep whose cells may select the
+    batched engine takes a ``spawn`` pool instead.  Spawned workers pay
+    a fresh interpreter + import, and their kernel compiles are
+    persistent-cache hits thanks to :func:`prewarm_batched`.
+    ``REPRO_SWEEP_START_METHOD`` still overrides both defaults.
+    """
     method = os.environ.get("REPRO_SWEEP_START_METHOD")
     if not method:
         methods = multiprocessing.get_all_start_methods()
-        method = "fork" if "fork" in methods else None
+        if use_jax:
+            method = "spawn" if "spawn" in methods else None
+        else:
+            method = "fork" if "fork" in methods else None
     return multiprocessing.get_context(method)
 
 
@@ -391,14 +471,22 @@ def run_cells(cells: Sequence[Cell], workers: int = 1,
     workers = min(int(workers), len(pending))
     if workers <= 1 or _inline_forced():
         return _finish_inline(results, pending, jr)
+    # Cells that may run the batched engine execute JAX *in* the
+    # worker: they need a spawn pool (fork would inherit a broken XLA
+    # runtime — see _mp_context) and, with prewarm, a populated
+    # persistent compile cache so each spawned worker's kernels are
+    # disk hits rather than fresh XLA compiles.
+    use_jax = bool(_batched_sigs(pending.values()))
     if prewarm:
         prewarm_characterization(pending.values())
+        if use_jax:
+            prewarm_batched(pending.values())
     attempt = 0
     while True:
         try:
             pool = ProcessPoolExecutor(
                 max_workers=min(workers, len(pending)),
-                mp_context=_mp_context(),
+                mp_context=_mp_context(use_jax),
             )
         except (OSError, PermissionError):
             # Sandboxed semaphores / fork unavailable: no pool at all.

@@ -77,8 +77,9 @@ combining ``sched="preempt"`` with ``ncq_depth=`` raises
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 #: Registered policy names, in documentation order.  ``host_prio_aged``
 #: also accepts a bound suffix (``"host_prio_aged:8"``); ``tokens`` a
@@ -244,12 +245,24 @@ class SchedulerPolicy:
     ``prioritized`` selects the two-class queue; ``preemptive`` addition-
     ally arms the engine's suspend/resume paths.  The queue factory gets
     the engine's per-op host-read table (may grow during the run).
+
+    ``ring_lowering`` is the policy's batched-kernel lowering descriptor
+    (:mod:`repro.flashsim.engine_batched` /
+    :mod:`repro.kernels.fcfs_core`): ``("fifo", 0.0)`` for the single
+    FIFO ring, ``("prio", bound)`` for the dual host/low priority rings
+    where ``bound`` is the aging bound (``math.inf`` = plain
+    ``host_prio`` — the low class never ages to the front), or ``None``
+    when the policy has no lockstep lowering (``tokens``, ``preempt``)
+    and the batched engine must reject it.  The descriptor is metadata
+    only: the Python queue objects above remain the semantic reference
+    the kernel is bit-pinned against.
     """
 
     name: str
     prioritized: bool
     preemptive: bool
     make_queue: Callable[[Sequence[bool]], object]
+    ring_lowering: Optional[Tuple[str, float]] = None
 
     def make_queues(self, n_dies: int, host_read: Sequence[bool]) -> List:
         return [self.make_queue(host_read) for _ in range(n_dies)]
@@ -259,14 +272,20 @@ _REGISTRY: Dict[str, SchedulerPolicy] = {
     "fcfs": SchedulerPolicy(
         "fcfs", prioritized=False, preemptive=False,
         make_queue=lambda host_read: FCFSQueue(),
+        ring_lowering=("fifo", 0.0),
     ),
     "host_prio": SchedulerPolicy(
         "host_prio", prioritized=True, preemptive=False,
         make_queue=HostPrioQueue,
+        # Plain host_prio == aged with an infinite bound: the low class
+        # never jumps the reads.  One compiled dual-ring kernel serves
+        # both (the bound is a traced scalar).
+        ring_lowering=("prio", math.inf),
     ),
     "host_prio_aged": SchedulerPolicy(
         "host_prio_aged", prioritized=True, preemptive=False,
         make_queue=AgedHostPrioQueue,
+        ring_lowering=("prio", float(DEFAULT_AGE_BOUND)),
     ),
     "tokens": SchedulerPolicy(
         "tokens", prioritized=True, preemptive=False,
@@ -316,6 +335,7 @@ def get_scheduler(name: str) -> SchedulerPolicy:
         return dataclasses.replace(
             policy, name=name,
             make_queue=lambda host_read: AgedHostPrioQueue(host_read, bound),
+            ring_lowering=("prio", float(bound)),
         )
     parts = arg.split(",")
     try:

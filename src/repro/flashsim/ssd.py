@@ -235,6 +235,17 @@ class SimStats:
     #: bit-identity asserts compare the simulation outcome, not the
     #: engine that produced it.
     fast_path_events: int = dataclasses.field(default=0, compare=False)
+    #: Engine that actually ran this cell — the resolved concrete engine
+    #: for ``engine="auto"``, the engine's own name for explicit
+    #: selections.  ``engine_fallback_reason`` is non-empty exactly when
+    #: auto fell back to the interpreter: it carries the
+    #: ``BatchedUnsupported`` message the explicit batched engine would
+    #: have raised, so auto documents rather than hides its decision.
+    #: Observability only (``compare=False``): auto-vs-explicit equality
+    #: asserts compare the simulation outcome, not the selection path.
+    engine_selected: str = dataclasses.field(default="", compare=False)
+    engine_fallback_reason: str = dataclasses.field(default="",
+                                                    compare=False)
 
     def as_row(self) -> str:
         row = (
@@ -330,15 +341,18 @@ class SSDSim:
         seed: int = 0,
         engine: str = "array",
     ):
-        if engine not in ("array", "batched"):
+        if engine not in ("array", "batched", "auto"):
             raise ValueError(
-                f"SSDSim engine must be 'array' or 'batched', got "
+                f"SSDSim engine must be 'array', 'batched' or 'auto', got "
                 f"{engine!r} (engine='reference' is SSDSimRef)"
             )
         if engine == "batched":
             from repro.flashsim.engine_batched import check_batched_config
 
             check_batched_config(cfg)
+        # engine="auto" defers resolution to run(), where validate= is
+        # known; it never raises BatchedUnsupported — the decision (and
+        # any fallback reason) is recorded on the returned SimStats.
         self.cfg = cfg
         self.cond = condition
         self.policy = policy
@@ -542,8 +556,14 @@ class SSDSim:
         sched_policy = get_scheduler(cfg.scheduler)
         gc_mode = cfg.gc.mode if cfg.gc.enabled else None
         closed = cfg.ncq_depth is not None
-        batched = self.engine == "batched"
-        if batched:
+        engine_selected = self.engine
+        engine_reason = ""
+        if self.engine == "auto":
+            from repro.flashsim.engine_batched import resolve_engine
+
+            engine_selected, engine_reason = resolve_engine(cfg, validate)
+        batched = engine_selected == "batched"
+        if batched and self.engine == "batched":
             from repro.flashsim.engine_batched import check_batched_config
 
             check_batched_config(cfg)
@@ -796,6 +816,8 @@ class SSDSim:
                 float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
             ),
             fast_path_events=getattr(res, "fast_path_events", 0),
+            engine_selected=engine_selected,
+            engine_fallback_reason=engine_reason,
             **gc_kw,
             **fault_kw,
             **closed_kw,
@@ -858,14 +880,15 @@ def _shared_views(trace, cfg):
 
 
 def _make_sim(cfg, condition, mechanism, seed, engine):
-    if engine == "array":
-        return SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed)
-    if engine == "batched":
-        # SSDSim validates the config against the batched core's
-        # supported matrix (fcfs / gc off|prepass / no faults / open
-        # loop) and raises BatchedUnsupported outside it.
+    if engine in ("array", "batched", "auto"):
+        # "batched": SSDSim validates the config against the batched
+        # core's supported matrix (ring-lowerable scheduler / gc
+        # off|prepass / no faults / open loop) and raises
+        # BatchedUnsupported outside it.  "auto" never raises — it
+        # resolves per run (validate-aware) and records the decision on
+        # SimStats.engine_selected / engine_fallback_reason.
         return SSDSim(cfg, condition, RetryPolicy(mechanism), seed=seed,
-                      engine="batched")
+                      engine=engine)
     if engine == "reference":
         if cfg.faults is not None:
             raise NotImplementedError(
@@ -880,7 +903,10 @@ def _make_sim(cfg, condition, mechanism, seed, engine):
         from repro.flashsim.engine_ref import SSDSimRef
 
         return SSDSimRef(cfg, condition, RetryPolicy(mechanism), seed=seed)
-    raise ValueError(f"unknown engine {engine!r} (use 'array' or 'reference')")
+    raise ValueError(
+        f"unknown engine {engine!r} (use 'array', 'batched', 'auto' or "
+        f"'reference')"
+    )
 
 
 def simulate(
@@ -919,10 +945,15 @@ def simulate(
     :mod:`repro.flashsim.engine`); the reference engine rejects it.
     ``engine="batched"`` runs all channel loops in lockstep inside one
     compiled kernel (:mod:`repro.flashsim.engine_batched`) — bit-
-    identical to the array engine on its supported matrix (fcfs, gc
-    off/prepass, no faults, open loop) and raising
+    identical to the array engine on its supported matrix (fcfs /
+    host_prio / host_prio_aged[:bound] schedulers, gc off/prepass, no
+    faults, open loop) and raising
     :class:`~repro.flashsim.engine_batched.BatchedUnsupported`
-    elsewhere, never silently falling back.
+    elsewhere, never silently falling back.  ``engine="auto"`` picks the
+    batched core when the cell is inside that matrix and the array
+    interpreter otherwise — results identical either way, with the
+    decision (and any fallback reason) recorded on
+    ``SimStats.engine_selected`` / ``engine_fallback_reason``.
     ``faults=`` attaches a :class:`~repro.flashsim.config.FaultConfig`
     (:mod:`repro.flashsim.faults` — array engine only).  ``ncq_depth=``
     switches on the closed-loop frontend (bounded NCQ admission, explicit
@@ -989,7 +1020,7 @@ def compare_mechanisms(
     if engine is None:
         engine = cfg.engine
     cfg = _with_knobs(cfg, scheduler, gc, faults, ncq_depth, host_cache)
-    if workers > 1 and engine in ("array", "batched"):
+    if workers > 1 and engine in ("array", "batched", "auto"):
         from repro.flashsim.runtime import run_compare
 
         return run_compare(workload, condition, mechanisms, seed, cfg,
@@ -1074,7 +1105,7 @@ def simulate_batch(
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
     for s in seeds:
         trace = resolve_trace(workload, seed=s, n_requests=n_requests)
-        if engine in ("array", "batched"):
+        if engine in ("array", "batched", "auto"):
             expansion, schedule = _shared_views(trace, cfg)
         else:
             expansion = schedule = None

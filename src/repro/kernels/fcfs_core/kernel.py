@@ -1,4 +1,4 @@
-"""Lockstep Pallas kernel for the FCFS open-loop shard core.
+"""Lockstep Pallas kernel for the sched-aware open-loop shard core.
 
 One kernel invocation advances *all* channel shards of a run in lockstep:
 the lane dimension (axis 0 everywhere) is the shard/channel, and each
@@ -14,8 +14,8 @@ what makes the result bit-identical to the interpreter loop in
 exact add/max sequence of ``_run_shard`` is replayed per lane).
 
 The interpreter's heap is replaced by a bounded merge that is exact by
-construction for the supported matrix (fcfs, gc in {none, prepass},
-no faults, open loop):
+construction for the supported matrix (fcfs / host_prio /
+host_prio_aged, gc in {none, prepass}, no faults, open loop):
 
   * each die holds at most one scheduled event (next sense/copy, or its
     release) — a (time, seq) pair in the die-state row;
@@ -30,9 +30,12 @@ approximated.
 
 State layout (all f64; integers are exactly representable):
 
-  ops   (L, MAXP, 9)  — [arrival, kind, die, dur, attempts, tr, gdt,
-                        gk0, grem0] per op in admission order; kind
-                        0=read 1=write 2=erase 3=pad (arrival inf).
+  ops   (L, MAXP, 10) — [arrival, kind, die, dur, attempts, tr, hp,
+                        gdt, gk0, grem0] per op in admission order;
+                        kind 0=read 1=write 2=erase 3=pad (arrival
+                        inf); hp is the scheduling class (1.0 = host
+                        read, the ``host_read`` table of
+                        :mod:`repro.flashsim.sched`; pads 0.0).
                         The g* columns are host-precomputed grant
                         attributes (see :func:`augment_ops`): first
                         event delta (tR for reads, dur otherwise),
@@ -40,12 +43,23 @@ State layout (all f64; integers are exactly representable):
                         initial remaining-attempts — they collapse the
                         read/write/erase dispatch at grant time to
                         single blends.
-  state (L, D+1, 14)  — per-die rows [evt, evseq, evop, evkind, held,
+  state (L, D+1, NC)  — per-die rows [evt, evseq, evop, evkind, held,
                         free, rem, a_act, tr_act, qhead, qtail, tot,
-                        busy, nonread]; row D is the masked-write sink.
+                        busy, nonread] (NC=14, the fifo lowering), plus
+                        [qhead2, qtail2, byp] under the prio lowering
+                        (NC=17); row D is the masked-write sink.
   fifo  (L, D+1, CAPQ)— per-die FIFO ring of queued op ids; CAPQ is a
                         host-computed bound (max ops on one die), so
-                        the ring never overwrites a live entry.
+                        the ring never overwrites a live entry.  Under
+                        the prio lowering the last axis doubles
+                        (2*CAPQ): the *host-read* (hi) ring lives in
+                        slots [0, CAPQ) and the low class (programs, GC
+                        copy-back, erases) in [CAPQ, 2*CAPQ) of the
+                        *same* buffer — one push scatter and one pop
+                        gather per step regardless of class, instead of
+                        a second buffer costing its own L per-lane
+                        updates.  Per-class occupancy is bounded by the
+                        per-die total, so CAPQ bounds both regions.
   acq   (L, CAPW+1, 4)— ring of in-flight write transfers [done, seq,
                         op, die]; CAPW bounds the writes of one lane;
                         slot CAPW is the masked-write sink.
@@ -59,6 +73,22 @@ State layout (all f64; integers are exactly representable):
                         :func:`repro.kernels.fcfs_core.ops.fcfs_core`
                         — one log write per step instead of L per-lane
                         updates.
+
+Scheduler lowering
+------------------
+``prio=False`` traces the single-ring FCFS pop — byte-for-byte the PR 8
+kernel.  ``prio=True`` traces the dual-ring pop implementing
+``AgedHostPrioQueue.pop_next`` exactly (``sched.py``): a release that
+finds work pops the low ring when the hi ring is empty *or* when the
+per-die bypass counter has reached the aging bound (both rings
+non-empty), else pops the hi ring — incrementing the counter iff the
+low ring was bypassed; every low-ring pop resets the counter.  The
+bound rides in ``timing[2]`` as a *traced* scalar, so plain
+``host_prio`` (bound = +inf: the low class never ages to the front) and
+every ``host_prio_aged:N`` share one compiled kernel.  The counter
+changes only at ring pops — admissions and ACQ landings that grant a
+free die directly never consult the queue object in the interpreter, so
+they never touch the counter here either.
 
 Every scatter into the carry is *unconditional*: inactive lanes are
 redirected to a sink row/slot instead of blending with the gathered
@@ -79,17 +109,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 # ops columns
-(_ARR, _KIND, _DIE, _DUR, _A, _TR, _GDT, _GK0, _GREM0) = range(9)
-# die-state columns
+(_ARR, _KIND, _DIE, _DUR, _A, _TR, _HP, _GDT, _GK0, _GREM0) = range(10)
+# die-state columns (the last three exist only under the prio lowering)
 (_EVT, _EVSEQ, _EVOP, _EVKIND, _HELD, _FREE, _REM, _AACT, _TRACT,
- _QHEAD, _QTAIL, _TOT, _BUSY, _NR) = range(14)
+ _QHEAD, _QTAIL, _TOT, _BUSY, _NR, _QHEAD2, _QTAIL2, _BYP) = range(17)
 
 _BIGSEQ = 1e18
 
 
 def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
                  lane_ref, *, n_lanes, n_dies, maxp, capq, capw,
-                 capsteps, pipelined):
+                 capsteps, pipelined, prio):
     L, D = n_lanes, n_dies
     lanes = jnp.arange(L)
     inf = jnp.inf
@@ -102,6 +132,9 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
     # interpreter.  Parameters are opaque to that rewrite.
     tdma = timing_ref[0]
     tecc = timing_ref[1]
+    # Aging bound for the prio lowering (traced, +inf = plain
+    # host_prio); unread when prio=False.
+    bound = timing_ref[2]
 
     def body(t, carry):
         (state, fifo, acq, log, chb, ch_tot, seqc, n_ev,
@@ -145,7 +178,12 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
                                   jnp.where(ev_acq, acq_die, D)))
         row = state[lanes, tgt]
 
-        q_empty = row[:, _QTAIL] == row[:, _QHEAD]
+        if prio:
+            hi_empty = row[:, _QTAIL] == row[:, _QHEAD]
+            lo_empty = row[:, _QTAIL2] == row[:, _QHEAD2]
+            q_empty = hi_empty & lo_empty
+        else:
+            q_empty = row[:, _QTAIL] == row[:, _QHEAD]
         die_free = (row[:, _FREE] == 1.0) & q_empty
 
         ev_kind = row[:, _EVKIND]
@@ -199,7 +237,20 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
 
         # FIFO push before the pop gather (see module docstring)
         push_die = jnp.where(queue_push, tgt, D)
-        push_slot = row[:, _QTAIL].astype(jnp.int32) % capq
+        if prio:
+            # Class of the pushed op — the kernel's ``host_read`` table
+            # lookup.  Non-pushing lanes read a harmless row (push_die
+            # is the sink for them).  Class picks the ring *region* of
+            # the shared buffer: hi at [0, capq), lo at [capq, 2*capq)
+            # — one scatter per lane either way.
+            push_hp = ops[lanes, push_val.astype(jnp.int32), _HP] == 1.0
+            push_hi = queue_push & push_hp
+            push_lo = queue_push & ~push_hp
+            push_slot = jnp.where(
+                push_hp, row[:, _QTAIL].astype(jnp.int32) % capq,
+                capq + row[:, _QTAIL2].astype(jnp.int32) % capq)
+        else:
+            push_slot = row[:, _QTAIL].astype(jnp.int32) % capq
         for l in range(L):
             fifo = jax.lax.dynamic_update_slice(
                 fifo, push_val[l].reshape(1, 1, 1),
@@ -207,7 +258,22 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
 
         q_nonempty = ~q_empty
         grant2 = ev_rel & q_nonempty
-        qh = row[:, _QHEAD].astype(jnp.int32) % capq
+        if prio:
+            # AgedHostPrioQueue.pop_next, vectorized: pop the low ring
+            # when the hi ring is empty or the head-of-line low op has
+            # aged past the bound; else pop hi, counting the bypass iff
+            # low work was waiting.  Any low pop resets the counter.
+            # Selecting the ring = selecting the slot region, so one
+            # gather serves both classes.
+            byp = row[:, _BYP]
+            lo_ne = ~lo_empty
+            aged = ~hi_empty & lo_ne & (byp >= bound)
+            pop_lo = aged | hi_empty
+            qh = jnp.where(
+                pop_lo, capq + row[:, _QHEAD2].astype(jnp.int32) % capq,
+                row[:, _QHEAD].astype(jnp.int32) % capq)
+        else:
+            qh = row[:, _QHEAD].astype(jnp.int32) % capq
         o2 = fifo[lanes, tgt, qh].astype(jnp.int32)
 
         # one gather serves every grant source: popped op, admitted op,
@@ -244,16 +310,30 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
         new_aact = jnp.where(grant_any, g_row[:, _A], row[:, _AACT])
         new_tract = jnp.where(grant_any, g_row[:, _TR], row[:, _TRACT])
         new_nr = jnp.where(grant_any, g_row[:, _GK0], row[:, _NR])
-        new_qhead = row[:, _QHEAD] + grant2.astype(jnp.float64)
-        new_qtail = row[:, _QTAIL] + queue_push.astype(jnp.float64)
+        if prio:
+            new_qhead = row[:, _QHEAD] + \
+                (grant2 & ~pop_lo).astype(jnp.float64)
+            new_qhead2 = row[:, _QHEAD2] + \
+                (grant2 & pop_lo).astype(jnp.float64)
+            new_qtail = row[:, _QTAIL] + push_hi.astype(jnp.float64)
+            new_qtail2 = row[:, _QTAIL2] + push_lo.astype(jnp.float64)
+            new_byp = jnp.where(
+                grant2,
+                jnp.where(pop_lo, 0.0, byp + lo_ne.astype(jnp.float64)),
+                byp)
+        else:
+            new_qhead = row[:, _QHEAD] + grant2.astype(jnp.float64)
+            new_qtail = row[:, _QTAIL] + queue_push.astype(jnp.float64)
         new_tot = jnp.where(ev_rel, row[:, _TOT] + (r_tm - row[:, _HELD]),
                             row[:, _TOT])
         new_busy = jnp.where(ev_rel, r_tm, row[:, _BUSY])
 
-        new_row = jnp.stack(
-            [new_evt, new_evseq, new_evop, new_evkind, new_held,
-             new_free, new_rem, new_aact, new_tract, new_qhead,
-             new_qtail, new_tot, new_busy, new_nr], axis=1)
+        cols = [new_evt, new_evseq, new_evop, new_evkind, new_held,
+                new_free, new_rem, new_aact, new_tract, new_qhead,
+                new_qtail, new_tot, new_busy, new_nr]
+        if prio:
+            cols += [new_qhead2, new_qtail2, new_byp]
+        new_row = jnp.stack(cols, axis=1)
         # Per-lane dynamic_update_slice (static lane, computed die row):
         # measurably cheaper than both XLA:CPU's generic scatter and a
         # one-hot blend for this shape, and still updated in place.
@@ -289,10 +369,14 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
 
     zero_l = jnp.zeros((L,), jnp.float64)
     zero_i = jnp.zeros((L,), jnp.int32)
-    state0 = jnp.zeros((L, D + 1, 14), jnp.float64)
+    ncols = 17 if prio else 14
+    state0 = jnp.zeros((L, D + 1, ncols), jnp.float64)
     state0 = state0.at[:, :, _EVT].set(jnp.inf)
     state0 = state0.at[:, :, _FREE].set(1.0)
-    fifo0 = jnp.zeros((L, D + 1, capq), jnp.float64)
+    # Under the prio lowering the slot axis doubles: hi ring at
+    # [0, capq), low ring at [capq, 2*capq) of the same buffer.
+    fifo0 = jnp.zeros((L, D + 1, capq * (2 if prio else 1)),
+                      jnp.float64)
     acq0 = jnp.zeros((L, capw + 1, 4), jnp.float64)
     # Unwritten log rows (t >= steps) keep op id maxp — the sink slot
     # the host scatter discards.
@@ -300,8 +384,8 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
         [jnp.zeros((capsteps, L), jnp.float64),
          jnp.full((capsteps, L), float(maxp), jnp.float64)], axis=1)
 
-    carry = (state0, fifo0, acq0, log0, zero_l, zero_l, zero_l, zero_l,
-             zero_i, zero_i, zero_i)
+    carry = (state0, fifo0, acq0, log0, zero_l, zero_l, zero_l,
+             zero_l, zero_i, zero_i, zero_i)
     (state, fifo, acq, log, chb, ch_tot, seqc, n_ev,
      ai, aq_head, aq_tail) = jax.lax.fori_loop(0, steps, body, carry)
 
@@ -312,16 +396,19 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
 
 
 def fcfs_core_fwd(ops, steps, timing, *, n_dies, capq, capw, capsteps,
-                  pipelined, interpret=True):
+                  pipelined, prio=False, interpret=True):
     """Run the lockstep shard core.
 
-    ``ops``: (L, MAXP, 9) f64 augmented padded op table (admission
+    ``ops``: (L, MAXP, 10) f64 augmented padded op table (admission
     order per lane; see :func:`augment_ops`).  ``steps``: (1,) i32 —
     total lockstep steps (max lane admissions + events; idle lanes
-    no-op).  ``timing``: (2,) f64 — [tdma, tecc].  ``capq``/``capw`` —
-    static FIFO/ACQ ring capacities (host-computed bounds: max ops on
-    one die / max writes on one lane); ``capsteps`` — static log
-    length, a power of two >= steps.
+    no-op).  ``timing``: (3,) f64 — [tdma, tecc, age_bound]; the bound
+    is traced (+inf = plain host_prio) and unread when ``prio`` is
+    False.  ``capq``/``capw`` — static FIFO/ACQ ring capacities
+    (host-computed bounds: max ops on one die / max writes on one
+    lane); ``capsteps`` — static log length, a power of two >= steps.
+    ``prio`` selects the dual-ring scheduler lowering (static: fcfs and
+    prio compile to distinct kernels).
     Returns ``(log, diestat, lane)``: the per-step completion log
     (scatter it into the per-op ``fin`` table host-side), per-die
     [tot, busy], and per-lane [ch_busy, ch_tot, n_events, seqc].
@@ -329,7 +416,7 @@ def fcfs_core_fwd(ops, steps, timing, *, n_dies, capq, capw, capsteps,
     L, maxp, _ = ops.shape
     kernel = functools.partial(
         _core_kernel, n_lanes=L, n_dies=n_dies, maxp=maxp, capq=capq,
-        capw=capw, capsteps=capsteps, pipelined=pipelined)
+        capw=capw, capsteps=capsteps, pipelined=pipelined, prio=prio)
     return pl.pallas_call(
         kernel,
         out_shape=[

@@ -1,4 +1,4 @@
-"""Dispatch wrapper for the lockstep FCFS shard core.
+"""Dispatch wrapper for the lockstep sched-aware shard core.
 
 ``fcfs_core`` takes the padded per-lane op table as numpy, runs the
 Pallas kernel (natively on TPU, under ``interpret=True`` on CPU — which
@@ -7,14 +7,29 @@ All jax work happens inside a scoped ``enable_x64`` context so the f64
 requirement never leaks into the process-global jax config (other
 kernels in this repo compile under the default f32).
 
+Compiled-variant reuse (the dispatch-overhead contract)
+-------------------------------------------------------
 The kernel is jit-cached per (lane count, padded width, die count,
-pipelined flag, timing constants); the step count is a traced scalar so
-different workload sizes reuse the same executable.
+ring capacities, pipelined flag, scheduler lowering); the step count,
+timing constants, and aging bound are *traced* scalars, so different
+workload sizes, timing models, and ``host_prio_aged`` bounds all reuse
+one executable.  Every static shape is bucketed to a power of two with
+a small floor (``pad_ops``, ``ring_caps``, ``capsteps``), so a sweep
+grid's cells collapse onto a handful of compiled variants.  On top of
+the in-process jit cache, the first call points JAX's *persistent*
+compilation cache at the repo's standard on-disk cache directory
+(``~/.cache/repro_flashsim`` — same ``REPRO_CHAR_CACHE`` /
+``REPRO_CHAR_CACHE_DIR`` conventions as the characterization cache in
+:mod:`repro.core.characterize`), so fresh processes — spawned sweep
+workers, CI lanes, repeated benchmark runs — skip XLA compilation
+entirely after the first run on a machine.
 """
 
 from __future__ import annotations
 
 import functools
+import os
+from typing import Optional
 
 import numpy as np
 
@@ -29,33 +44,67 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+_COMP_CACHE_READY = False
+
+
+def _enable_persistent_cache() -> None:
+    """Point JAX's compilation cache at ``~/.cache/repro_flashsim``.
+
+    Best-effort and idempotent: respects ``REPRO_CHAR_CACHE=0`` (fully
+    disabled) and ``REPRO_CHAR_CACHE_DIR`` (relocated), and never fails
+    the computation — an unwritable cache dir just means cold compiles.
+    The thresholds are zeroed because the kernels here are small but
+    re-traced in every fresh worker process; default thresholds would
+    skip exactly the entries we want persisted.
+    """
+    global _COMP_CACHE_READY
+    if _COMP_CACHE_READY:
+        return
+    _COMP_CACHE_READY = True
+    if os.environ.get("REPRO_CHAR_CACHE", "1") == "0":
+        return
+    d = os.environ.get("REPRO_CHAR_CACHE_DIR") or os.path.join(
+        os.path.expanduser("~"), ".cache", "repro_flashsim"
+    )
+    try:
+        os.makedirs(d, exist_ok=True)
+        jax.config.update("jax_compilation_cache_dir", d)
+        jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+    except Exception:
+        pass  # cache is best-effort; never fail the computation
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("n_dies", "capq", "capw", "capsteps", "pipelined",
-                     "interpret"))
+                     "prio", "interpret"))
 def _core_jit(ops, steps, timing, *, n_dies, capq, capw, capsteps,
-              pipelined, interpret):
+              pipelined, prio, interpret):
     return fcfs_core_fwd(ops, steps, timing, n_dies=n_dies, capq=capq,
                          capw=capw, capsteps=capsteps,
-                         pipelined=pipelined, interpret=interpret)
+                         pipelined=pipelined, prio=prio,
+                         interpret=interpret)
 
 
 def pad_ops(lanes_ops) -> np.ndarray:
-    """Stack per-lane (P_l, 6) op tables into one padded (L, MAXP, 6).
+    """Stack per-lane (P_l, 7) op tables into one padded (L, MAXP, 7).
 
     Pad rows carry ``arrival = inf`` (the admission cursor's stop
-    sentinel); the padded width is the next power of two strictly above
-    the widest lane, so the cursor's clipped lookahead always lands on a
-    pad row.
+    sentinel) and ``hp = 0.0``; the padded width is the next power of
+    two strictly above the widest lane (floor 16), so the cursor's
+    clipped lookahead always lands on a pad row and nearby cell sizes
+    share one compiled variant.
     """
     L = len(lanes_ops)
     widest = max((t.shape[0] for t in lanes_ops), default=0)
-    maxp = 1
+    maxp = 16
     while maxp <= widest:
         maxp *= 2
-    ops = np.full((L, maxp, 6), np.inf, dtype=np.float64)
+    ops = np.full((L, maxp, 7), np.inf, dtype=np.float64)
     ops[:, :, 1] = 3.0          # kind: pad
     ops[:, :, 2] = 0.0          # pad die: keep int casts well-defined
+    ops[:, :, 6] = 0.0          # pad hp: low class, never enqueued
     for l, t in enumerate(lanes_ops):
         ops[l, :t.shape[0]] = t
     return ops
@@ -90,7 +139,9 @@ def count_steps(ops: np.ndarray) -> int:
     Per op the interpreter pops ``attempts + 1`` events for a read
     (senses + release), 2 for a write (transfer-landed + release), and 1
     for an erase (release) — computable up front because the supported
-    matrix has no preemption or online injection.
+    matrix has no preemption or online injection.  Priority policies
+    reorder events but never change their count, so the bound is
+    lowering-independent.
     """
     kind = ops[:, :, 1]
     att = ops[:, :, 4]
@@ -113,10 +164,13 @@ def ring_caps(ops: np.ndarray, n_dies: int):
     """Static FIFO/ACQ ring capacities for a padded op table.
 
     ``capq`` bounds the deepest per-die FIFO (every op targeting a die
-    can be queued there at once, at most); ``capw`` bounds the in-flight
+    can be queued there at once, at most — and per-class occupancy of
+    the dual priority rings is bounded by the same per-die total, so
+    one capacity serves both lowerings); ``capw`` bounds the in-flight
     write transfers of a lane (each write pushes ACQ exactly once).
-    Rounded up to powers of two so jit variants stay few; tiny floors
-    keep the ``%`` ring arithmetic trivially safe for op-free lanes.
+    Rounded up to powers of two with a floor of 4 so jit variants stay
+    few and the ``%`` ring arithmetic is trivially safe for op-free
+    lanes.
     """
     kind = ops[:, :, 1]
     die = np.where(np.isfinite(ops[:, :, 2]), ops[:, :, 2], -1.0)
@@ -128,29 +182,37 @@ def ring_caps(ops: np.ndarray, n_dies: int):
                                  minlength=n_dies)
             per_die = max(per_die, int(counts.max()))
     writes = int((kind == 1.0).sum(axis=1).max(initial=0.0))
-    return _pow2_at_least(max(per_die, 2)), _pow2_at_least(max(writes, 2))
+    return _pow2_at_least(max(per_die, 4)), _pow2_at_least(max(writes, 4))
 
 
 def fcfs_core(ops: np.ndarray, n_dies: int, pipelined: bool,
-              tdma: float, tecc: float):
+              tdma: float, tecc: float,
+              age_bound: Optional[float] = None):
     """Run the lockstep shard core on a padded op table.
 
-    Returns numpy ``(fin, diestat, lane)`` — per-op completion
-    contributions (L, MAXP+1), per-die [busy_total, last_release]
-    (L, n_dies, 2), and per-lane [ch_busy, ch_tot, n_events, seq]
-    (L, 4).  Bit-identical to :func:`fcfs_core_ref` on CPU.
+    ``age_bound`` selects the scheduler lowering: ``None`` = single
+    FIFO ring (fcfs); a float (``inf`` = plain host_prio) = dual
+    priority rings with that aging bound, classified by the op table's
+    ``hp`` column.  Returns numpy ``(fin, diestat, lane)`` — per-op
+    completion contributions (L, MAXP+1), per-die
+    [busy_total, last_release] (L, n_dies, 2), and per-lane
+    [ch_busy, ch_tot, n_events, seq] (L, 4).  Bit-identical to
+    :func:`fcfs_core_ref` on CPU.
     """
+    _enable_persistent_cache()
     steps = count_steps(ops)
     capq, capw = ring_caps(ops, n_dies)
-    capsteps = _pow2_at_least(max(steps, 1))
+    capsteps = _pow2_at_least(max(steps, 16))
     L, maxp = ops.shape[0], ops.shape[1]
+    prio = age_bound is not None
+    bound = float(age_bound) if prio else 0.0
     with enable_x64():
         log, diestat, lane = _core_jit(
             jnp.asarray(augment_ops(ops, pipelined), jnp.float64),
             jnp.asarray([steps], jnp.int32),
-            jnp.asarray([float(tdma), float(tecc)], jnp.float64),
+            jnp.asarray([float(tdma), float(tecc), bound], jnp.float64),
             n_dies=n_dies, capq=capq, capw=capw, capsteps=capsteps,
-            pipelined=pipelined, interpret=_use_interpret())
+            pipelined=pipelined, prio=prio, interpret=_use_interpret())
         log = np.asarray(log)
     # Scatter the per-step completion log into the per-op fin table.
     # Each real op id appears at most once; idle rows carry the sink id

@@ -1,4 +1,4 @@
-"""Plain-Python reference for the lockstep FCFS shard core.
+"""Plain-Python reference for the lockstep sched-aware shard core.
 
 Implements the same bounded-stream-merge algorithm as the Pallas kernel
 (:mod:`repro.kernels.fcfs_core.kernel`) — per-die single event slot,
@@ -7,9 +7,18 @@ at a time, with the identical float arithmetic (Python floats are IEEE
 f64, and every add/max is written in the interpreter's association
 order).  Used by the parity tests to pin the kernel bit-for-bit, and as
 the unbatched fallback oracle.
+
+``age_bound`` selects the scheduler: ``None`` is the single FIFO ring;
+a float bound (``inf`` = plain host_prio) runs the dual priority rings
+with the *verbatim* ``AgedHostPrioQueue.pop_next`` logic from
+:mod:`repro.flashsim.sched` — this oracle deliberately restates that
+policy in queue-object terms so kernel parity is checked against an
+independent restatement, not against itself.
 """
 
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
@@ -17,15 +26,22 @@ _INF = float("inf")
 
 
 def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
-                  tdma: float, tecc: float):
+                  tdma: float, tecc: float,
+                  age_bound: Optional[float] = None):
     """Run the shard core per lane in pure Python.
 
-    ``ops``: (L, MAXP, 6) f64 — [arrival, kind, die, dur, attempts, tr],
-    admission order per lane, padded rows with ``arrival == inf``.
+    ``ops``: (L, MAXP, 6 or 7) f64 — [arrival, kind, die, dur,
+    attempts, tr, (hp)], admission order per lane, padded rows with
+    ``arrival == inf``.  Column 6 (``hp``: 1.0 = host read) is the
+    scheduling class; required when ``age_bound`` is not ``None``.
     Returns ``(fin, diestat, lane)`` with the same shapes/meaning as
     :func:`repro.kernels.fcfs_core.kernel.fcfs_core_fwd`.
     """
-    L, maxp, _ = ops.shape
+    L, maxp, ncol = ops.shape
+    prio = age_bound is not None
+    if prio and ncol < 7:
+        raise ValueError("priority lowering needs the hp column (7-col "
+                         f"op table), got {ncol} columns")
     fin = np.zeros((L, maxp + 1), dtype=np.float64)
     diestat = np.zeros((L, n_dies, 2), dtype=np.float64)
     lane = np.zeros((L, 4), dtype=np.float64)
@@ -38,6 +54,7 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
         dur = ops[l, :, 3]
         att = ops[l, :, 4]
         tr = ops[l, :, 5]
+        hp = ops[l, :, 6] if ncol > 6 else np.zeros(maxp)
         n_adm = int((kind != 3.0).sum())   # pads are trailing
 
         ev_t = [_INF] * n_dies
@@ -51,7 +68,9 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
         tr_act = [0.0] * n_dies
         tot = [0.0] * n_dies
         busy = [0.0] * n_dies
-        fifo: list = [[] for _ in range(n_dies)]
+        fifo: list = [[] for _ in range(n_dies)]       # hi ring (prio)
+        fifo_lo: list = [[] for _ in range(n_dies)]
+        byp = [0.0] * n_dies        # bypass counters (prio only)
         acq: list = []              # (done, seq, op) in push order
         aq_head = 0
 
@@ -60,6 +79,31 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
         seqc = 0.0
         n_ev = 0.0
         ai = 0
+
+        def q_has(d: int) -> bool:
+            return bool(fifo[d]) or bool(fifo_lo[d])
+
+        def q_push(d: int, o: int) -> None:
+            if prio and hp[o] != 1.0:
+                fifo_lo[d].append(o)
+            else:
+                fifo[d].append(o)
+
+        def q_pop(d: int) -> int:
+            # AgedHostPrioQueue.pop_next (sched.py), restated: aged low
+            # op jumps; else hi first (count the bypass iff low work
+            # waits); any low pop resets the counter.
+            if not prio:
+                return fifo[d].pop(0)
+            if fifo[d] and fifo_lo[d] and byp[d] >= age_bound:
+                byp[d] = 0.0
+                return fifo_lo[d].pop(0)
+            if fifo[d]:
+                if fifo_lo[d]:
+                    byp[d] += 1.0
+                return fifo[d].pop(0)
+            byp[d] = 0.0
+            return fifo_lo[d].pop(0)
 
         def grant(d: int, o: int, tm: float) -> None:
             nonlocal seqc
@@ -105,10 +149,10 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
                     seqc += 1.0
                 else:               # read or erase: contend for the die
                     d = die[o]
-                    if free[d] and not fifo[d]:
+                    if free[d] and not q_has(d):
                         grant(d, o, tm)
                     else:
-                        fifo[d].append(o)
+                        q_push(d, o)
                 continue
 
             n_ev += 1.0
@@ -116,10 +160,10 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
                 tm, _, o = acq[aq_head]
                 aq_head += 1
                 d = die[o]
-                if free[d] and not fifo[d]:
+                if free[d] and not q_has(d):
                     grant(d, o, tm)
                 else:
-                    fifo[d].append(o)
+                    q_push(d, o)
                 continue
 
             d = widx
@@ -157,8 +201,8 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
                 busy[d] = tm
                 if kind[o] != 0.0:
                     fin[l, o] = tm
-                if fifo[d]:
-                    o2 = fifo[d].pop(0)
+                if q_has(d):
+                    o2 = q_pop(d)
                     grant(d, o2, tm)
                 else:
                     free[d] = True

@@ -3,8 +3,9 @@
 The contract for ``engine="batched"`` (:mod:`repro.flashsim.engine_batched`)
 has two halves, both tested here:
 
-  * on the supported matrix — fcfs scheduling, gc in {none, prepass},
-    no faults, open loop — every run is **bit-identical** to the array
+  * on the supported matrix — ring-lowerable scheduling (fcfs,
+    host_prio, host_prio_aged[:bound]), gc in {none, prepass}, no
+    faults, open loop — every run is **bit-identical** to the array
     interpreter: full :class:`SimStats` dataclass equality, synthetic
     profiles and real MSR excerpts alike;
   * everywhere else the engine **fails fast** with
@@ -14,7 +15,9 @@ has two halves, both tested here:
 The lockstep kernel itself is additionally pinned against an
 independent pure-Python oracle (:func:`repro.kernels.fcfs_core.
 fcfs_core_ref`) on randomized op tables, including the rel=0 /
-single-attempt corner where every read senses exactly once.
+single-attempt corner where every read senses exactly once and the
+aging-boundary corners of the dual priority rings (bound 0 = always
+bypass when low work waits, huge bound = plain host_prio).
 """
 
 import dataclasses
@@ -67,6 +70,26 @@ class TestSupportedMatrix:
     def test_workloads_and_gc_modes(self, workload, gc):
         a, b = _pair(workload=workload, gc=gc)
         assert a == b
+
+    @pytest.mark.parametrize("scheduler", [
+        "host_prio", "host_prio_aged", "host_prio_aged:3",
+    ])
+    @pytest.mark.parametrize("gc", [None, "prepass"])
+    def test_priority_schedulers_bit_identical(self, scheduler, gc):
+        a, b = _pair(gc=gc, scheduler=scheduler)
+        assert a == b
+        assert b.fast_path_events > 0
+
+    def test_priority_reordering_is_exercised(self):
+        # Parity must not be vacuous: on a write-heavy profile the
+        # priority rings genuinely reorder grants, so host-read
+        # latency differs from fcfs — and batched still matches the
+        # interpreter bit for bit on both.
+        a_f, b_f = _pair(workload="prn", n=600, gc="prepass")
+        a_p, b_p = _pair(workload="prn", n=600, gc="prepass",
+                         scheduler="host_prio")
+        assert a_f == b_f and a_p == b_p
+        assert a_p.read_p99_us != a_f.read_p99_us
 
     def test_modest_condition(self):
         a, b = _pair(cond=MODEST)
@@ -148,9 +171,10 @@ class TestExplicitRejection:
         assert issubclass(BatchedUnsupported, NotImplementedError)
 
     @pytest.mark.parametrize(
-        "scheduler", [s for s in SCHEDULERS if s != "fcfs"])
-    def test_non_fcfs_schedulers(self, scheduler):
-        with pytest.raises(BatchedUnsupported, match="fcfs"):
+        "scheduler",
+        [s for s in SCHEDULERS if s in ("tokens", "preempt")])
+    def test_unlowerable_schedulers(self, scheduler):
+        with pytest.raises(BatchedUnsupported, match="ring-lowerable"):
             simulate("websearch", AGED, "baseline", n_requests=200,
                      engine="batched", scheduler=scheduler)
 
@@ -177,7 +201,7 @@ class TestExplicitRejection:
     def test_compare_mechanisms_rejects_too(self):
         with pytest.raises(BatchedUnsupported):
             compare_mechanisms("websearch", AGED, n_requests=200,
-                               engine="batched", scheduler="host_prio")
+                               engine="batched", scheduler="tokens")
 
 
 class TestKernelVsReference:
@@ -192,7 +216,11 @@ class TestKernelVsReference:
         att = (np.full(n_ops, 1.0) if attempts == 1
                else rng.integers(1, 6, n_ops).astype(np.float64))
         tr = rng.uniform(5.0, 25.0, n_ops)
-        return np.stack([arr, kind, die, dur, att, tr], axis=1)
+        # hp: host-read class for ~half the reads (GC copy-back reads
+        # are low class, so reads with hp=0 are legal and exercised).
+        hp = np.where((kind == 0.0) & (rng.random(n_ops) < 0.5),
+                      1.0, 0.0)
+        return np.stack([arr, kind, die, dur, att, tr, hp], axis=1)
 
     @pytest.mark.parametrize("pipelined", [False, True])
     @pytest.mark.parametrize("attempts", [1, None],
@@ -213,14 +241,43 @@ class TestKernelVsReference:
             for g, w in zip(got, want):
                 assert np.array_equal(g, w)
 
+    @pytest.mark.parametrize("age_bound", [0.0, 1.0, 4.0, 1e18],
+                             ids=["bound0", "bound1", "bound4",
+                                  "unbounded"])
+    @pytest.mark.parametrize("pipelined", [False, True])
+    def test_priority_rings_parity_random_tables(self, pipelined,
+                                                 age_bound):
+        # Aging-boundary corners: bound 0 bypasses whenever low work
+        # waits behind a host read, bound 1e18 never does (plain
+        # host_prio); 1 and 4 sit on the counter-reset boundary.
+        from repro.kernels.fcfs_core import fcfs_core, fcfs_core_ref
+        from repro.kernels.fcfs_core.ops import pad_ops
+
+        rng = np.random.default_rng(int(age_bound) % 97 +
+                                    (13 if pipelined else 0))
+        n_dies = 3
+        for _ in range(3):
+            lanes = [self._random_table(rng, int(rng.integers(4, 28)),
+                                        n_dies, None)
+                     for _ in range(4)]
+            ops = pad_ops(lanes)
+            got = fcfs_core(ops, n_dies, pipelined, 3.0, 5.0,
+                            age_bound=age_bound)
+            want = fcfs_core_ref(ops, n_dies, pipelined, 3.0, 5.0,
+                                 age_bound=age_bound)
+            for g, w in zip(got, want):
+                assert np.array_equal(g, w)
+
     def test_empty_and_single_lane_corners(self):
         from repro.kernels.fcfs_core import fcfs_core, fcfs_core_ref
         from repro.kernels.fcfs_core.ops import pad_ops
 
         rng = np.random.default_rng(0)
-        lanes = [np.zeros((0, 6)), self._random_table(rng, 5, 2, None)]
+        lanes = [np.zeros((0, 7)), self._random_table(rng, 5, 2, None)]
         ops = pad_ops(lanes)
-        got = fcfs_core(ops, 2, False, 3.0, 5.0)
-        want = fcfs_core_ref(ops, 2, False, 3.0, 5.0)
-        for g, w in zip(got, want):
-            assert np.array_equal(g, w)
+        for bound in (None, 2.0):
+            got = fcfs_core(ops, 2, False, 3.0, 5.0, age_bound=bound)
+            want = fcfs_core_ref(ops, 2, False, 3.0, 5.0,
+                                 age_bound=bound)
+            for g, w in zip(got, want):
+                assert np.array_equal(g, w)

@@ -301,6 +301,48 @@ class TestWriteCacheUnit:
         with pytest.raises(RuntimeError):
             c.absorb([7, 8])
 
+    def test_lru_touch_reorders_flush(self):
+        c = WriteCache(HostCacheConfig(capacity_pages=8,
+                                       eviction="lru"))
+        e1, e2, e3 = c.absorb([1]), c.absorb([2]), c.absorb([3])
+        c.touch(1)                # read hit refreshes lpn 1's entry
+        assert c.pop_entry() is e2
+        assert c.pop_entry() is e3
+        assert c.pop_entry() is e1
+        assert c.pop_entry() is None
+
+    def test_fifo_ignores_touch(self):
+        c = WriteCache(HostCacheConfig(capacity_pages=8))
+        e1, e2 = c.absorb([1]), c.absorb([2])
+        c.touch(1)
+        assert c.pop_entry() is e1 and c.pop_entry() is e2
+
+    def test_lru_preserves_per_lpn_order_and_versions(self):
+        # Two absorbed versions of one LPN: touch moves both entries to
+        # the MRU end keeping their relative order, and even if their
+        # programs land out of order the newer version stays durable.
+        c = WriteCache(HostCacheConfig(capacity_pages=8,
+                                       eviction="lru"))
+        a, b = c.absorb([7]), c.absorb([7])
+        c.touch(7)
+        assert c.pop_entry() is a and c.pop_entry() is b
+        c.page_durable(7, b.versions[0])
+        c.page_durable(7, a.versions[0])
+        assert c.durable[7] == b.versions[0]
+        assert not c.contains(7) and c.pending_pages == 0
+
+    def test_lru_flushing_lines_are_not_touchable(self):
+        c = WriteCache(HostCacheConfig(capacity_pages=8,
+                                       eviction="lru"))
+        e1, e2 = c.absorb([1]), c.absorb([2])
+        assert c.pop_entry() is e1          # lpn 1 now flushing-only
+        c.touch(1)                          # must not corrupt the ring
+        assert c.pop_entry() is e2
+
+    def test_invalid_eviction_policy_rejected(self):
+        with pytest.raises(ValueError, match="eviction"):
+            HostCacheConfig(eviction="random")
+
 
 class TestWriteCacheIntegration:
     HC = HostCacheConfig(capacity_pages=256)
@@ -333,15 +375,30 @@ class TestWriteCacheIntegration:
         # engine asserts the cache fully drains).
         assert stats.cache_flush_pages >= stats.cache_absorbed_writes
 
-    def test_flush_traffic_preserves_wa_accounting(self):
+    @pytest.mark.parametrize("eviction", ["fifo", "lru"])
+    def test_flush_traffic_preserves_wa_accounting(self, eviction):
         """Flushed programs run through the same FTL schedule: write
-        amplification is identical with and without the cache."""
+        amplification is identical with and without the cache — under
+        either eviction policy (LRU permutes issue order, not volume)."""
+        hc = HostCacheConfig(capacity_pages=256, eviction=eviction)
         with_ = simulate("prn", AGED, "pr2ar2", seed=0, n_requests=400,
-                         gc="prepass", ncq_depth=8, host_cache=self.HC)
+                         gc="prepass", ncq_depth=8, host_cache=hc)
         without = simulate("prn", AGED, "pr2ar2", seed=0, n_requests=400,
                            gc="prepass", ncq_depth=8)
         assert with_.wa == without.wa
         assert with_.blocks_erased == without.blocks_erased
+
+    def test_lru_end_to_end_drains_clean(self):
+        """A full LRU-cache run with backpressure and validation on:
+        the engine's drain asserts hold and flush volume still covers
+        every absorbed page."""
+        hc = HostCacheConfig(capacity_pages=32, flush_high=0.5,
+                             flush_low=0.25, eviction="lru")
+        stats = simulate("prn", AGED, "pr2ar2", seed=0, n_requests=400,
+                         gc="prepass", ncq_depth=8, host_cache=hc,
+                         validate=True)
+        assert stats.cache_absorbed_writes > 0
+        assert stats.cache_flush_pages >= stats.cache_absorbed_writes
 
 
 class TestFaultsClosedLoop:

@@ -1,0 +1,139 @@
+"""``engine="auto"``: batched-when-eligible, array otherwise — recorded.
+
+The auto engine's contract (:func:`repro.flashsim.engine_batched.
+resolve_engine`) has three clauses, each pinned here:
+
+  * **never changes results** — an auto run equals both the explicit
+    array run and (when eligible) the explicit batched run, full
+    SimStats equality, across the run APIs;
+  * **records its decision** — ``SimStats.engine_selected`` carries the
+    concrete engine that ran, and ``engine_fallback_reason`` carries
+    the exact :class:`BatchedUnsupported` message the explicit batched
+    engine would have raised (empty when batched ran) — auto documents,
+    never hides, its fallback;
+  * **observability fields stay out of equality** — selection metadata
+    is ``compare=False``, so auto-vs-explicit equality compares the
+    simulation outcome, not the selection path.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.flashsim.config import (
+    DEFAULT_SSD,
+    FaultConfig,
+    OperatingCondition,
+)
+from repro.flashsim.engine_batched import resolve_engine
+from repro.flashsim.ssd import (
+    SimStats,
+    compare_mechanisms,
+    simulate,
+    simulate_batch,
+)
+
+AGED = OperatingCondition(365.0, 1000.0)
+
+
+def _trio(n=400, **kw):
+    a = simulate("websearch", AGED, "pr2ar2", seed=0, n_requests=n,
+                 engine="array", **kw)
+    b = simulate("websearch", AGED, "pr2ar2", seed=0, n_requests=n,
+                 engine="batched", **kw)
+    c = simulate("websearch", AGED, "pr2ar2", seed=0, n_requests=n,
+                 engine="auto", **kw)
+    return a, b, c
+
+
+class TestAutoSelection:
+    @pytest.mark.parametrize("scheduler,gc", [
+        ("fcfs", None), ("host_prio", "prepass"),
+        ("host_prio_aged:3", "prepass"),
+    ])
+    def test_eligible_cells_pick_batched(self, scheduler, gc):
+        a, b, c = _trio(scheduler=scheduler, gc=gc)
+        assert a == b == c
+        assert c.engine_selected == "batched"
+        assert c.engine_fallback_reason == ""
+        assert c.fast_path_events > 0
+
+    def test_explicit_engines_record_themselves(self):
+        a, b, _ = _trio()
+        assert a.engine_selected == "array"
+        assert b.engine_selected == "batched"
+        assert a.engine_fallback_reason == b.engine_fallback_reason == ""
+
+    def test_selection_metadata_excluded_from_equality(self):
+        fields = {f.name: f for f in dataclasses.fields(SimStats)}
+        assert not fields["engine_selected"].compare
+        assert not fields["engine_fallback_reason"].compare
+
+
+class TestAutoFallback:
+    """Every explicit-rejection axis falls back — with the reason."""
+
+    @pytest.mark.parametrize("kw,needle", [
+        (dict(scheduler="tokens"), "ring-lowerable"),
+        (dict(scheduler="preempt"), "ring-lowerable"),
+        (dict(gc="online"), "online GC"),
+        (dict(faults=FaultConfig()), "fault"),
+        (dict(ncq_depth=8), "open-loop"),
+        (dict(validate=True), "validate"),
+    ])
+    def test_fallback_records_reason(self, kw, needle):
+        c = simulate("websearch", AGED, "pr2ar2", seed=0, n_requests=200,
+                     engine="auto", **kw)
+        assert c.engine_selected == "array"
+        assert needle in c.engine_fallback_reason
+        assert c.fast_path_events == 0
+
+    def test_fallback_equals_explicit_array(self):
+        a = simulate("websearch", AGED, "pr2ar2", seed=0, n_requests=300,
+                     engine="array", scheduler="tokens")
+        c = simulate("websearch", AGED, "pr2ar2", seed=0, n_requests=300,
+                     engine="auto", scheduler="tokens")
+        assert a == c
+
+    def test_resolve_engine_reason_is_the_raised_message(self):
+        from repro.flashsim.engine_batched import (
+            BatchedUnsupported,
+            check_batched_config,
+        )
+
+        cfg = dataclasses.replace(DEFAULT_SSD, scheduler="tokens")
+        eng, reason = resolve_engine(cfg)
+        assert eng == "array"
+        with pytest.raises(BatchedUnsupported) as ei:
+            check_batched_config(cfg)
+        assert reason == str(ei.value)
+
+
+class TestAutoAcrossRunAPIs:
+    def test_cfg_engine_auto(self):
+        cfg = dataclasses.replace(DEFAULT_SSD, engine="auto")
+        c = simulate("websearch", AGED, "baseline", n_requests=300,
+                     cfg=cfg)
+        a = simulate("websearch", AGED, "baseline", n_requests=300)
+        assert a == c
+        assert c.engine_selected == "batched"
+
+    def test_compare_mechanisms_auto(self):
+        a = compare_mechanisms("websearch", AGED, seed=1, n_requests=400,
+                               engine="array", scheduler="host_prio")
+        c = compare_mechanisms("websearch", AGED, seed=1, n_requests=400,
+                               engine="auto", scheduler="host_prio")
+        assert list(a) == list(c)
+        assert all(a[m] == c[m] for m in a)
+        assert all(s.engine_selected == "batched" for s in c.values())
+
+    def test_simulate_batch_auto(self):
+        conds = (AGED, OperatingCondition(30.0, 0.0))
+        a = simulate_batch("websearch", conds,
+                           mechanisms=("baseline", "pr2ar2"),
+                           seeds=(0, 1), n_requests=300, engine="array")
+        c = simulate_batch("websearch", conds,
+                           mechanisms=("baseline", "pr2ar2"),
+                           seeds=(0, 1), n_requests=300, engine="auto")
+        assert list(a) == list(c)
+        assert all(a[k] == c[k] for k in a)
