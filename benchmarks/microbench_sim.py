@@ -31,7 +31,7 @@ numbers are machine-dependent, every file also records (PR 5):
     should use ``rel_throughput`` and ``host_factor``-normalized
     numbers, never raw wall times.
 
-Six sweeps ride along:
+Seven sweeps ride along:
 
   * **claim cells** (PR 3): the paper's headline reductions (PR²+AR² vs
     baseline @ aged; SOTA+PR²+AR² vs SOTA @ modest) re-measured as
@@ -71,7 +71,18 @@ Six sweeps ride along:
     under host_prio) and ``small_cell_sweep`` (an n=500 grid through
     ``run_cells`` at ``engine="array"`` vs ``engine="auto"``: auto must
     select batched everywhere and the batched sweep wall must not lose
-    — the dispatch-overhead gate).
+    — the dispatch-overhead gate);
+  * **fused sweep cells** (PR 10): the cross-cell fused dispatch path
+    vs the sequential batched engine vs the array interpreter on two
+    (mechanism x condition x seed) grids through ``run_cells`` — the
+    n=500 small-cell grid where fixed dispatch cost dominates (the
+    acceptance: fused >= 1.5x the sequential batched sweep wall with
+    full per-cell bit parity against both other variants) and an
+    n=8000 claim grid where the lockstep loop dominates (recorded, not
+    gated).  Walls are interleaved rounds with the collector parked
+    (mean ± 95% CI + best); kernel-launch accounting
+    (``fused_dispatches`` vs ``sequential_dispatches``) pins that the
+    speedup is amortized dispatch overhead, not changed math.
 
 The claim/GC/scheduler/trace sweeps all execute through the parallel
 sweep runtime (:mod:`repro.flashsim.runtime`); ``--workers N`` fans
@@ -105,6 +116,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import gc
 import json
 import math
 import time
@@ -940,6 +952,144 @@ def bench_small_cell_sweep(seeds, n_requests=500):
     }
 
 
+# -- fused sweep cells: cross-cell vectorized dispatch (ISSUE 10) ---------
+
+
+def _fused_grid_row(grid_w, mechs, scheds, seeds, n_requests, rounds):
+    """One fused-sweep measurement grid: fused vs sequential-batched vs
+    array through ``run_cells``, interleaved timing rounds (drift
+    cancels), per-cell bit-parity flags, and the fused dispatch count.
+    """
+    from repro.kernels.fcfs_core import ops as kops
+
+    def mk(engine, fuse):
+        return [Cell("simulate", w, (AGED,), (m,), s,
+                     n_requests=n_requests, engine=engine, scheduler=sc,
+                     fuse=fuse)
+                for w in grid_w for m in mechs for sc in scheds
+                for s in seeds]
+
+    variants = {"fused": ("batched", True),
+                "sequential": ("batched", False),
+                "array": ("array", None)}
+    results = {}
+    for name, (eng, fz) in variants.items():   # warm: char + jit buckets
+        results[name] = run_cells(mk(eng, fz))
+    before = kops.KERNEL_DISPATCHES
+    run_cells(mk("batched", True))
+    fused_dispatches = kops.KERNEL_DISPATCHES - before
+    before = kops.KERNEL_DISPATCHES
+    run_cells(mk("batched", False))
+    sequential_dispatches = kops.KERNEL_DISPATCHES - before
+
+    # Interleaved rounds with the collector parked: adjacent
+    # measurements see the same host state, and GC pauses (pure jitter
+    # at these sub-second walls) hit no variant.
+    walls = {name: [] for name in variants}
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(rounds):
+            for name, (eng, fz) in variants.items():
+                cells = mk(eng, fz)
+                t0 = time.perf_counter()
+                results[name] = run_cells(cells)
+                walls[name].append(time.perf_counter() - t0)
+    finally:
+        gc.enable()
+
+    parity_vs_sequential = [bool(a == b) for a, b in
+                            zip(results["fused"], results["sequential"])]
+    parity_vs_array = [bool(a == b) for a, b in
+                       zip(results["fused"], results["array"])]
+    n_cells = len(results["fused"])
+    row = {
+        "n_requests": n_requests,
+        "cells": n_cells,
+        "seeds": len(seeds),
+        "rounds": rounds,
+        "workloads": [w.name for w in grid_w],
+        "mechanisms": list(mechs),
+        "schedulers": ["fcfs" if s is None else s for s in scheds],
+        "fused_dispatches": fused_dispatches,
+        "sequential_dispatches": sequential_dispatches,
+        "fused_cells_per_dispatch": sorted(
+            {r.fused_cells for r in results["fused"]}),
+        "parity_vs_sequential": parity_vs_sequential,
+        "parity_vs_array": parity_vs_array,
+        "parity_all": bool(all(parity_vs_sequential)
+                           and all(parity_vs_array)),
+    }
+    # Machine-free normalization: cell throughput (requests/s) relative
+    # to the same run's array sweep.
+    thr = {}
+    for name in variants:
+        wm, wh = mean_ci95(walls[name])
+        best = min(walls[name])
+        thr[name] = n_cells * n_requests / best
+        row[name] = {
+            "wall_mean_s": round(wm, 4),
+            "wall_ci95_s": round(wh, 4),
+            "wall_best_s": round(best, 4),
+        }
+    for name in variants:
+        row[name]["rel_throughput"] = round(thr[name] / thr["array"], 3)
+    row["speedup_vs_sequential"] = round(
+        row["sequential"]["wall_best_s"] / row["fused"]["wall_best_s"], 3)
+    row["speedup_vs_array"] = round(
+        row["array"]["wall_best_s"] / row["fused"]["wall_best_s"], 3)
+    return row
+
+
+def bench_fused_sweep_cells(seeds, n_claim, quick=False):
+    """Fused sweep core vs the sequential batched engine vs the array
+    interpreter (ISSUE 10).
+
+    Two grids, both pushed through ``run_cells`` three ways —
+    ``engine="batched"`` with fusion on (cross-cell stacked dispatches),
+    fusion off (one dispatch per cell), and ``engine="array"``:
+
+      * the **small-cell grid** — the n=500 dispatch-overhead grid of
+        :func:`bench_small_cell_sweep` (2 workloads x {baseline, pr2ar2}
+        x {fcfs, host_prio} x seeds), where fixed per-dispatch cost
+        dominates and fusion pays most; the acceptance rides here:
+        ``speedup_vs_sequential >= 1.5`` with every parity flag true;
+      * the **claim grid** — the paper-claim mechanism pair over the
+        claim profiles at the acceptance size (n=8000), where the
+        lockstep event loop dominates and fusion's win shrinks to the
+        amortized dispatch overhead (recorded, not gated).
+
+    Walls are interleaved rounds (mean ± 95% CI + best); per-cell
+    bit-parity flags compare full SimStats equality fused-vs-sequential
+    and fused-vs-array; ``fused_dispatches`` vs
+    ``sequential_dispatches`` records the kernel-launch accounting
+    (``KERNEL_DISPATCHES``).  ``rel_throughput`` normalizes each
+    variant's request throughput to the same run's array sweep, so
+    cross-machine comparisons stay machine-free.
+    """
+    grid_w = [p for p in PROFILES if p.name in ("websearch", "oltp")]
+    mechs = ("baseline", "pr2ar2")
+    # Claim grid first: its long runs leave the process (allocator
+    # pools, jit caches, branch predictors) fully hot before the gated
+    # small-grid measurement — the first grid measured in a fresh
+    # process reads consistently slow for every variant.
+    claim_w = PROFILES[:2] if quick else PROFILES
+    claim = _fused_grid_row(claim_w, mechs, (None,), seeds, n_claim,
+                            2 if quick else 3)
+    small = _fused_grid_row(grid_w, mechs, (None, "host_prio"), seeds,
+                            500, 3 if quick else 8)
+    return {
+        "small_cell_grid": small,
+        "claim_grid": claim,
+        "speedup_small_grid": small["speedup_vs_sequential"],
+        "speedup_claim_grid": claim["speedup_vs_sequential"],
+        "parity_all": bool(small["parity_all"] and claim["parity_all"]),
+        "acceptance_fused_sweep_ok": bool(
+            small["speedup_vs_sequential"] >= 1.5
+            and small["parity_all"] and claim["parity_all"]),
+    }
+
+
 def bench_shard_scaling(n_requests, seeds):
     """Single-cell engine scaling: wall vs channel count, the array
     interpreter vs the lockstep batched core
@@ -1217,6 +1367,24 @@ def main():
         f"ok={small['acceptance_small_cell_ok']})"
     )
 
+    t0 = time.perf_counter()
+    fused_sweep = bench_fused_sweep_cells(seeds, n, quick=args.quick)
+    fs_small = fused_sweep["small_cell_grid"]
+    fs_claim = fused_sweep["claim_grid"]
+    print(
+        f"# fused sweep ({time.perf_counter() - t0:.1f}s): small grid "
+        f"(n={fs_small['n_requests']}, {fs_small['cells']} cells) "
+        f"seq {fs_small['sequential']['wall_best_s']:.2f}s -> fused "
+        f"{fs_small['fused']['wall_best_s']:.2f}s "
+        f"({fs_small['speedup_vs_sequential']:.2f}x, "
+        f"{fs_small['fused_dispatches']}/"
+        f"{fs_small['sequential_dispatches']} dispatches) | claim grid "
+        f"(n={fs_claim['n_requests']}) "
+        f"{fs_claim['speedup_vs_sequential']:.2f}x "
+        f"parity={fused_sweep['parity_all']} "
+        f"ok={fused_sweep['acceptance_fused_sweep_ok']}"
+    )
+
     total_array = sum(r["wall_array_s"] for r in rows)
     # Reference-cell normalization: cells_detail[0] is the pinned cell
     # (first e2e cell, websearch @ aged x all mechanisms); dividing each
@@ -1265,6 +1433,13 @@ def main():
             shard_scaling["acceptance_8ch_host_prio_ok"],
         "small_cell_sweep_speedup": small["sweep_speedup"],
         "acceptance_small_cell_ok": small["acceptance_small_cell_ok"],
+    }
+    summary["fused_sweep"] = {
+        "speedup_small_grid": fused_sweep["speedup_small_grid"],
+        "speedup_claim_grid": fused_sweep["speedup_claim_grid"],
+        "parity_all": fused_sweep["parity_all"],
+        "acceptance_fused_sweep_ok":
+            fused_sweep["acceptance_fused_sweep_ok"],
     }
     if parallel_row is not None:
         summary["parallel"] = parallel_row
@@ -1330,7 +1505,8 @@ def main():
            "gc_cells": gc_rows, "sched_cells": sched_rows,
            "trace_cells": trace_rows, "fault_cells": fault_rows,
            "closed_loop_cells": closed_rows,
-           "shard_scaling_cells": shard_scaling}
+           "shard_scaling_cells": shard_scaling,
+           "fused_sweep_cells": fused_sweep}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)
         f.write("\n")

@@ -263,6 +263,16 @@ class SSDConfig:
     #: ``simulate``/``compare_mechanisms``/``simulate_batch`` overrides
     #: this.
     engine: str = "array"
+    #: Fused sweep dispatch policy for the batched engine: when a sweep
+    #: (``simulate_batch``/``compare_mechanisms``/``runtime.run_cells``)
+    #: resolves a grid of cells inside the batched matrix, stack their
+    #: op tables along the kernel's lane axis and launch each
+    #: static-shape group once instead of dispatching per cell.  Cell
+    #: results are bit-identical either way (the cell-axis law; see
+    #: :mod:`repro.flashsim.engine_batched`); ``False`` forces one
+    #: dispatch per cell.  A ``fuse=`` argument on the sweep APIs
+    #: overrides this.
+    fuse: bool = True
 
     def __post_init__(self):
         if self.engine not in ("array", "batched", "auto", "reference"):

@@ -150,6 +150,10 @@ class EngineResult:
     #: Events retired by the batched lockstep kernel (0 for interpreter
     #: runs) — the "Pallas fast path actually ran" observability counter.
     fast_path_events: int = 0
+    #: Number of sweep cells sharing the kernel dispatch that produced
+    #: this result (0 = not a fused dispatch) — the "fused sweep
+    #: actually ran" observability counter.
+    fused_cells: int = 0
 
 
 def make_buffers(arrival, rid, die, ch, read, erase, dur, a, tr) -> OpBuffers:

@@ -171,6 +171,25 @@ class FTLSchedule:
             self.dur_us.tolist(),
         )
 
+    @functools.cached_property
+    def admission_arrays(self):
+        """The same per-op buffers as dtype-pinned numpy columns.
+
+        Mirrors ``TraceExpansion.admission_arrays``: batched-resolved
+        runs hand the lockstep core whole columns and skip the
+        list round-trip; the interpreter keeps
+        :attr:`admission_lists`.  Values are identical either way.
+        """
+        return (
+            np.asarray(self.arrival_us, np.float64),
+            np.asarray(self.rid, np.int64),
+            np.asarray(self.die, np.int64),
+            np.asarray(self.chan, np.int64),
+            np.asarray(self.kind <= _READ_LIKE_MAX, bool),
+            np.asarray(self.kind == OP_ERASE, bool),
+            np.asarray(self.dur_us, np.float64),
+        )
+
 
 class PageMapFTL:
     """Per-die page-mapping FTL with greedy GC (deterministic, no RNG).

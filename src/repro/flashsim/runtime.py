@@ -124,6 +124,13 @@ class Cell:
     faults: Optional[FaultConfig] = None
     ncq_depth: Optional[int] = None
     host_cache: object = None
+    #: Fused-sweep dispatch policy (``None`` defers to ``cfg.fuse``).
+    #: ``"batch"``/``"compare"`` cells fuse their inner grid inside
+    #: ``simulate_batch``/``compare_mechanisms``; eligible
+    #: ``"simulate"`` cells sharing a trace and config are additionally
+    #: fused *across cells* by :func:`run_cells` (same results either
+    #: way — the fused path is bit-identical).
+    fuse: Optional[bool] = None
 
     def __post_init__(self):
         if self.kind not in ("simulate", "compare", "batch"):
@@ -166,6 +173,7 @@ def _run_cell(cell: Cell):
             engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
             shard=cell.shard, faults=cell.faults,
             ncq_depth=cell.ncq_depth, host_cache=cell.host_cache,
+            fuse=cell.fuse,
         )
     return simulate_batch(
         cell.workload, cell.conditions, mechanisms=cell.mechanisms,
@@ -173,7 +181,109 @@ def _run_cell(cell: Cell):
         engine=cell.engine, scheduler=cell.scheduler, gc=cell.gc,
         shard=cell.shard, faults=cell.faults,
         ncq_depth=cell.ncq_depth, host_cache=cell.host_cache,
+        fuse=cell.fuse,
     )
+
+
+def _fusable_cfg(cell: Cell):
+    """Knob-overlaid config when a ``"simulate"`` cell is eligible for
+    cross-cell fusion, else ``None``.
+
+    Eligibility mirrors the inline sweeps: the cell's engine must be
+    ``"batched"``/``"auto"``, fusion enabled (``cell.fuse``, defaulting
+    to ``cfg.fuse``), and the overlaid config must resolve inside the
+    batched matrix (ring-lowerable scheduler, gc off/prepass, no
+    faults, open loop).  Ineligible cells run :func:`_run_cell` alone —
+    ``"auto"`` fallbacks record their reason on ``SimStats`` exactly as
+    without fusion, and explicit-``"batched"`` misconfigurations raise
+    the same :class:`BatchedUnsupported` they always did.
+    """
+    if cell.kind != "simulate":
+        return None
+    engine = cell.engine if cell.engine is not None else cell.cfg.engine
+    from repro.flashsim.ssd import _fuse_resolved, _with_knobs
+
+    cfg = _with_knobs(cell.cfg, cell.scheduler, cell.gc, cell.faults,
+                      cell.ncq_depth, cell.host_cache)
+    return cfg if _fuse_resolved(cfg, engine, cell.fuse) else None
+
+
+def _fusion_groups(items: Sequence[Tuple[int, Cell]]):
+    """Partition (index, cell) pairs into host-prep groups and leftovers.
+
+    A group is a maximal set of eligible ``"simulate"`` cells sharing
+    the *resolved trace object* (cached and frozen, so equal
+    (workload, seed, n_requests) cells resolve to one identity) and the
+    knob-overlaid config (compared by ``repr`` — configs carry an
+    unhashable timing dict); the shared trace/expansion/schedule are
+    then computed once per group.  The
+    grouping only decides host-side sharing — the kernel dispatch fuses
+    *across* groups (:func:`_run_items_fused` hands every prepared cell
+    to one engine call, which chunks by static kernel shape and step
+    homogeneity), so a lone cell of one trace still stacks with cells
+    of another.  Returns ``(groups, singles)`` where each group is
+    ``(trace, cfg, [(index, cell), ...])``.
+    """
+    from repro.flashsim.ssd import resolve_trace
+
+    buckets: Dict[Tuple[str, str], list] = {}
+    singles: List[Tuple[int, Cell]] = []
+    for i, cell in items:
+        cfg = _fusable_cfg(cell)
+        if cfg is None:
+            singles.append((i, cell))
+            continue
+        trace = resolve_trace(cell.workload, seed=cell.seed,
+                              n_requests=cell.n_requests)
+        # Trace identity, not content hash: resolved traces are cached
+        # frozen objects, so equal (workload, seed, n) cells share one.
+        # Grouping only decides host-prep sharing — results are
+        # grouping-invariant (the cell-axis law), so a cache miss can
+        # only cost sharing, never correctness.
+        key = (id(trace), repr(cfg))
+        buckets.setdefault(key, []).append((i, cell, cfg, trace))
+    groups = []
+    for members in buckets.values():
+        _, _, cfg, trace = members[0]
+        groups.append((trace, cfg, [(i, c) for i, c, _, _ in members]))
+    return groups, singles
+
+
+def _run_items_fused(items: Sequence[Tuple[int, Cell]]) -> Dict[int, object]:
+    """Results for the fused-eligible subset of ``items`` (cross-cell
+    fusion); cells not covered by the returned dict run per-cell.
+
+    Host prep is shared per trace/config group, then every prepared
+    cell goes through ONE fused engine call — cells of different
+    workloads and seeds stack along the kernel's cell axis whenever
+    their static shapes and step bounds line up.  A lone eligible cell
+    runs per-cell (nothing to amortize).  A batch that turns out
+    unsupported at dispatch time (a guard the pre-filter should make
+    unreachable) falls back to per-cell runs by simply not contributing
+    results — never a silent wrong answer.
+    """
+    from repro.flashsim.engine_batched import BatchedUnsupported
+    from repro.flashsim.ssd import (_make_sim, _run_prepared_fused,
+                                    _shared_views)
+
+    groups, _ = _fusion_groups(items)
+    if sum(len(members) for _, _, members in groups) < 2:
+        return {}
+    prepped: List[Tuple[int, object, object]] = []
+    for trace, cfg, members in groups:
+        expansion, schedule = _shared_views(trace, cfg)
+        for i, cell in members:
+            engine = (cell.engine if cell.engine is not None
+                      else cell.cfg.engine)
+            sim = _make_sim(cfg, cell.conditions[0], cell.mechanisms[0],
+                            cell.seed + 7, engine)
+            prepped.append((i, sim, sim._prepare(
+                trace, expansion=expansion, schedule=schedule)))
+    try:
+        stats = _run_prepared_fused([(s, p) for _, s, p in prepped])
+    except BatchedUnsupported:
+        return {}
+    return {i: st for (i, _, _), st in zip(prepped, stats)}
 
 
 def prewarm_characterization(cells: Iterable[Cell]) -> int:
@@ -205,17 +315,29 @@ def _batched_sigs(cells: Iterable[Cell]):
     A cell contributes when its engine is ``"batched"`` or ``"auto"``
     *and* its knob-overlaid config resolves inside the batched matrix —
     the same :func:`~repro.flashsim.engine_batched.resolve_engine` call
-    run() will make (auto cells that fall back contribute nothing).
-    Signature = (lane count, local die count, pipelined, scheduler
-    lowering mode): exactly the static parts of the kernel's jit key
-    that the cell list determines up front.
+    run() will make (auto cells that fall back contribute nothing;
+    that per-cell gate is what keeps prewarm from compiling variants an
+    ``"auto"`` sweep would never launch).  Signature = (lane count,
+    local die count, pipelined, scheduler lowering mode): exactly the
+    static parts of the kernel's jit key that the cell list determines
+    up front.  Fusion-enabled cells additionally contribute their
+    *fused* lane counts — a batch/compare cell's inner grid dispatches
+    at ``min(C, cap) * n_channels`` lanes per pipelined class (``cap``
+    = the engine's fused cell cap), and fusable simulate cells sharing
+    a (workload, n_requests, config) proxy key are counted as one
+    cross-cell chunk — so the widened kernel variants are warmed too,
+    not just the per-cell ones.  (Step-heterogeneous grids may chunk
+    smaller at dispatch time; those narrower variants compile on first
+    use and land in the same persistent cache.)
     """
     from repro.core.retry import RetryPolicy
-    from repro.flashsim.engine_batched import resolve_engine
+    from repro.flashsim.engine_batched import (_fuse_cell_cap,
+                                               resolve_engine)
     from repro.flashsim.sched import get_scheduler
     from repro.flashsim.ssd import _with_knobs
 
     sigs = set()
+    cross: Dict[Tuple, Tuple[int, int, int]] = {}
     for cell in cells:
         engine = cell.engine if cell.engine is not None else cell.cfg.engine
         if engine not in ("batched", "auto"):
@@ -225,10 +347,38 @@ def _batched_sigs(cells: Iterable[Cell]):
         if resolve_engine(cfg)[0] != "batched":
             continue
         mode, _ = get_scheduler(cfg.scheduler).ring_lowering
-        n_dies_local = -(-cfg.n_dies // cfg.n_channels)
+        n_ch = cfg.n_channels
+        n_dies_local = -(-cfg.n_dies // n_ch)
         for mech in cell.mechanisms:
-            sigs.add((cfg.n_channels, n_dies_local,
-                      RetryPolicy(mech).pipelined, mode))
+            sigs.add((n_ch, n_dies_local, RetryPolicy(mech).pipelined, mode))
+        if not (cfg.fuse if cell.fuse is None else cell.fuse):
+            continue
+        if cell.kind in ("batch", "compare"):
+            # Inner-grid fusion: one dispatch per pipelined class, cell
+            # axis = conditions x same-class mechanisms, pow2-bucketed.
+            for pipe in (False, True):
+                n_mech = sum(1 for m in cell.mechanisms
+                             if RetryPolicy(m).pipelined == pipe)
+                grid = len(cell.conditions) * n_mech
+                if grid > 1:
+                    grid = min(grid, _fuse_cell_cap(n_ch))
+                    sigs.add((grid * n_ch, n_dies_local, pipe, mode))
+        else:
+            # Cross-cell fusion stacks simulate cells whenever their
+            # static kernel shapes and step bounds line up; the
+            # (workload, n_requests, config) proxy (seed-blind — same
+            # workload at different seeds has near-identical step
+            # bounds, so those cells land in one chunk) avoids
+            # resolving traces here.
+            pipe = RetryPolicy(cell.mechanisms[0]).pipelined
+            key = (repr(cell.workload), cell.n_requests,
+                   repr(cfg), pipe, mode)
+            count, _, _ = cross.get(key, (0, 0, 0))
+            cross[key] = (count + 1, n_ch, n_dies_local)
+    for (_, _, _, pipe, mode), (count, n_ch, n_dl) in cross.items():
+        if count > 1:
+            count = min(count, _fuse_cell_cap(n_ch))
+            sigs.add((count * n_ch, n_dl, pipe, mode))
     return sigs
 
 
@@ -244,7 +394,11 @@ def prewarm_batched(cells: Iterable[Cell]) -> int:
     aging bounds are traced (not compile keys), so the tiny table warms
     the same executable a real floor-bucket cell uses; larger shape
     buckets still compile on first use but land in the same on-disk
-    cache for every later process.  Returns the number of kernel
+    cache for every later process.  Fused signatures warm through the
+    same :func:`~repro.kernels.fcfs_core.ops._dispatch` path, so a
+    ``C * n_channels``-lane warm run hits the exact jit key a fused
+    chunk with equal statics will ask for (including the ``wide``
+    scatter lowering above 8 lanes).  Returns the number of kernel
     variants warmed.
     """
     sigs = _batched_sigs(cells)
@@ -255,10 +409,10 @@ def prewarm_batched(cells: Iterable[Cell]) -> int:
     from repro.kernels.fcfs_core import fcfs_core
     from repro.kernels.fcfs_core.ops import pad_ops
 
-    for n_ch, n_dies_local, pipelined, mode in sigs:
+    for n_lanes, n_dies_local, pipelined, mode in sigs:
         # One host read per lane: [arrival kind die dur attempts tr hp].
         lane = np.array([[0.0, 0.0, 0.0, 0.0, 1.0, 40.0, 1.0]])
-        fcfs_core(pad_ops([lane] * n_ch), n_dies_local, pipelined,
+        fcfs_core(pad_ops([lane] * n_lanes), n_dies_local, pipelined,
                   100.0, 10.0,
                   age_bound=16.0 if mode == "prio" else None)
     return len(sigs)
@@ -409,15 +563,29 @@ def _chunk_pending(pending: Dict[int, Cell],
 
 
 def _run_cell_chunk(items: List[Tuple[int, Cell]]):
-    """Worker entry: run a chunk of (index, cell) pairs in order."""
-    return [(i, _run_cell(c)) for i, c in items]
+    """Worker entry: run a chunk of (index, cell) pairs in order.
+
+    Fusable ``"simulate"`` cells that landed in the same chunk run as
+    fused kernel dispatches (:func:`_run_items_fused`); the rest — and
+    any fused group that falls back — run per-cell.  Bit-identical
+    either way, so chunking policy never changes results.
+    """
+    fused = _run_items_fused(items)
+    return [(i, fused[i] if i in fused else _run_cell(c))
+            for i, c in items]
 
 
 def _finish_inline(results: List, pending: Dict[int, Cell],
                    jr: Optional[_Journal]) -> List:
-    """Run the leftover cells inline (in index order), journaling each."""
+    """Run the leftover cells inline (in index order), journaling each.
+
+    Like the chunked worker path, fusable ``"simulate"`` cells run as
+    fused dispatches first; journal records are still written in index
+    order, so resume semantics are unchanged.
+    """
+    fused = _run_items_fused(sorted(pending.items()))
     for i in sorted(pending):
-        r = _run_cell(pending[i])
+        r = fused[i] if i in fused else _run_cell(pending[i])
         results[i] = r
         if jr is not None:
             jr.record(i, r)
@@ -553,6 +721,7 @@ def run_sweep(
     journal=None,
     ncq_depth: Optional[int] = None,
     host_cache=None,
+    fuse: Optional[bool] = None,
 ) -> Dict[Tuple[str, OperatingCondition, int], "object"]:
     """``simulate_batch`` semantics with seed groups fanned over workers.
 
@@ -564,6 +733,9 @@ def run_sweep(
     ``journal=`` names a checkpoint file: completed seed groups are
     recorded as they finish and a killed sweep re-run with the same
     arguments resumes from it byte-identically (:func:`run_cells`).
+    ``fuse=`` overrides ``cfg.fuse`` per cell: each seed group's
+    eligible (condition x mechanism) grid runs as fused kernel
+    dispatches inside its worker, bit-identical either way.
     """
     conditions = tuple(conditions)
     mechanisms = tuple(mechanisms)
@@ -571,7 +743,7 @@ def run_sweep(
     cells = [
         Cell("batch", workload, conditions, mechanisms, s, cfg, n_requests,
              engine, scheduler, gc, shard, faults=faults,
-             ncq_depth=ncq_depth, host_cache=host_cache)
+             ncq_depth=ncq_depth, host_cache=host_cache, fuse=fuse)
         for s in seeds
     ]
     groups = run_cells(cells, workers=workers, journal=journal)
@@ -621,6 +793,7 @@ def run_compare(
     shard: bool,
     workers: int,
     engine: str = "array",
+    fuse: Optional[bool] = None,
 ) -> Dict[str, "object"]:
     """Parallel ``compare_mechanisms``: one worker per mechanism.
 
@@ -629,19 +802,24 @@ def run_compare(
     run API.  Results match ``compare_mechanisms(..., workers=1)``
     exactly, in the caller's mechanism order.  Supports the ``array``
     and ``batched`` engines (both consume the shared expansion/schedule
-    views).
+    views).  A fusable batched compare (``fuse=``, default
+    ``cfg.fuse``) skips the pool entirely — one fused dispatch in-process
+    beats per-mechanism fork workers, and the results are bit-identical.
     """
     global _COMPARE_PAYLOAD
     from repro.flashsim import ssd
 
     mechanisms = tuple(mechanisms)
     ctx = _mp_context()
-    if (workers <= 1 or len(mechanisms) <= 1 or _inline_forced()
+    fused = ssd._fuse_resolved(
+        ssd._with_knobs(cfg, scheduler, gc), engine, fuse
+    ) and len(mechanisms) > 1
+    if (fused or workers <= 1 or len(mechanisms) <= 1 or _inline_forced()
             or ctx.get_start_method() != "fork"):
         return ssd.compare_mechanisms(
             workload, condition, mechanisms=mechanisms, seed=seed, cfg=cfg,
             n_requests=n_requests, engine=engine, scheduler=scheduler,
-            gc=gc, shard=shard,
+            gc=gc, shard=shard, fuse=fuse,
         )
     cfg = ssd._with_knobs(cfg, scheduler, gc)
     trace = ssd.resolve_trace(workload, seed=seed, n_requests=n_requests)
@@ -693,16 +871,32 @@ def sweep_cell_key(mechanism: str, condition: OperatingCondition,
             f"|pec{condition.pec!r}|seed{seed}")
 
 
+def _stats_payload(stats) -> Dict[str, object]:
+    """SimStats -> JSON dict of *compared* fields only.
+
+    ``compare=False`` fields (engine_selected, fast_path_events,
+    fused_cells, ...) describe how a result was computed, not what it
+    is — including them would make the serialization depend on engine
+    and fusion decisions that are defined to be outcome-neutral.
+    """
+    d = dataclasses.asdict(stats)
+    return {f.name: d[f.name] for f in dataclasses.fields(stats)
+            if f.compare}
+
+
 def sweep_to_json(results: Dict) -> str:
     """Canonical, byte-stable serialization of a sweep result dict.
 
     Keys sort lexicographically and floats serialize via ``repr`` (exact
     round-trip), so two sweeps are byte-identical iff every cell's
     SimStats match exactly — the contract the worker-count determinism
-    tests and the CI bench-smoke lane assert.
+    tests and the CI bench-smoke lane assert.  Observability fields
+    (``compare=False`` on :class:`~repro.flashsim.ssd.SimStats`) are
+    excluded, so the bytes are invariant across engine selection,
+    worker count, and fusion decisions.
     """
     payload = {
-        sweep_cell_key(m, cond, s): dataclasses.asdict(stats)
+        sweep_cell_key(m, cond, s): _stats_payload(stats)
         for (m, cond, s), stats in results.items()
     }
     return json.dumps(payload, sort_keys=True, indent=1) + "\n"

@@ -126,6 +126,30 @@ PAGE_TYPE_ORDER = ("lsb", "csb", "msb")
 WorkloadLike = Union[Workload, str, TraceSource]
 
 
+def _pctl(a: np.ndarray, qs) -> np.ndarray:
+    """``np.percentile(a, qs)`` for 1-D float64 without the per-call
+    dispatch machinery (argument normalization costs more than the
+    partition on sweep-cell-sized arrays).  Bit-identical to numpy's
+    default linear method: same ``q/100 * (n-1)`` virtual indexes, the
+    same shared partition across quantiles, and numpy's own two-sided
+    lerp (the ``t >= 0.5`` branch computes ``b - (b-a)*(1-t)``).
+    """
+    n = a.size
+    virt = np.true_divide(np.asarray(qs, np.float64), 100) * (n - 1)
+    prev = np.floor(virt)
+    nxt = np.minimum(prev + 1, n - 1)
+    pi = prev.astype(np.intp)
+    ni = nxt.astype(np.intp)
+    part = np.partition(a, np.concatenate([pi, ni]))
+    va, vb = part[pi], part[ni]
+    t = virt - prev
+    diff = vb - va
+    out = va + diff * t
+    hi = t >= 0.5
+    out[hi] = vb[hi] - diff[hi] * (1 - t[hi])
+    return out
+
+
 def resolve_trace(
     workload: WorkloadLike, seed: int = 0, n_requests: Optional[int] = None
 ) -> RequestTrace:
@@ -246,6 +270,11 @@ class SimStats:
     engine_selected: str = dataclasses.field(default="", compare=False)
     engine_fallback_reason: str = dataclasses.field(default="",
                                                     compare=False)
+    #: Number of sweep cells that shared this cell's kernel dispatch
+    #: (0 = the cell ran alone).  Observability only (``compare=False``):
+    #: fused-vs-sequential bit-identity asserts compare the simulation
+    #: outcome, not the dispatch grouping.
+    fused_cells: int = dataclasses.field(default=0, compare=False)
 
     def as_row(self) -> str:
         row = (
@@ -293,6 +322,24 @@ class TraceExpansion:
             self.die.tolist(),
             self.chan.tolist(),
             self.is_read.tolist(),
+        )
+
+    @functools.cached_property
+    def admission_arrays(self):
+        """The same per-op buffers as dtype-pinned numpy columns.
+
+        The batched engine consumes whole columns (``_lane_tables``
+        re-``asarray``s every buffer), so batched-resolved runs take the
+        expansion's own arrays and skip the list round-trip entirely;
+        the interpreter keeps :attr:`admission_lists` (scalar list
+        indexing is faster there).  Values are identical either way.
+        """
+        return (
+            np.asarray(self.arrival_us, np.float64),
+            np.asarray(self.rid, np.int64),
+            np.asarray(self.die, np.int64),
+            np.asarray(self.chan, np.int64),
+            np.asarray(self.is_read, bool),
         )
 
 
@@ -516,39 +563,21 @@ class SSDSim:
                     scale[worn & (wear == wv)] = self._scale_for(float(wv))
         return scale
 
-    def run(
+    def _prepare(
         self,
         trace: RequestTrace,
         expansion: Optional[TraceExpansion] = None,
         schedule=None,
         validate: bool = False,
-        shard: bool = False,
-        trace_phases: bool = False,
-    ) -> SimStats:
-        """Simulate one trace.
+    ) -> "_PreparedRun":
+        """Everything :meth:`run` does before the engine dispatch.
 
-        ``expansion`` (in-place and online-GC runs) or ``schedule`` (an
-        :class:`repro.flashsim.ftl.FTLSchedule`, prepass-GC runs) may be
-        shared across the mechanisms of a sweep.  When ``cfg.gc.enabled``
-        and no schedule is supplied, the configured GC mode decides:
-        ``prepass`` builds the FTL schedule here; ``online`` attaches a
-        :class:`repro.flashsim.gc_online.OnlineGC` driver to the event
-        core.  ``shard=True`` runs the event core as one loop per channel
-        with a deterministic merge — bit-identical to the monolithic
-        default (see :mod:`repro.flashsim.engine`).  ``validate=True``
-        turns on the engine's work-conservation checks (test
-        instrumentation).
-
-        With ``cfg.ncq_depth`` set the run goes through the closed-loop
-        frontend (:func:`repro.flashsim.engine.run_closed_loop`): NCQ-
-        gated admission, optional write-back cache, explicit channel DMA
-        phase.  Closed-loop supports prepass GC and faults but not the
-        preempt scheduler or online GC; ``shard=`` is ignored (the NCQ
-        couples channels through the shared slot pool — the monolithic
-        closed loop is the defined semantics for any ``shard``/
-        ``workers`` setting).  ``trace_phases=True`` (closed loop only)
-        records per-op sense/transfer/program intervals into
-        ``self.last_phases`` for the interval-invariant property tests.
+        Resolves the engine, samples the attempt schedule (consuming
+        ``self.rng`` in admission order, exactly as the sequential path
+        does), and builds the admission buffers.  Split out so the fused
+        sweep driver can prepare many cells, run them in one kernel
+        dispatch, and :meth:`_finalize` each — any fusion decision sees
+        byte-identical inputs and produces byte-identical stats.
         """
         cfg, t = self.cfg, self.cfg.timing
         tprog = t.tprog_us
@@ -611,12 +640,24 @@ class SSDSim:
             total_attempts = int(attempts_np[host_read_np].sum())
             tr_np = (self._tr_base[schedule.ptype]
                      * self._tr_scales_for_schedule(schedule, read_like_np))
-            (adm_t, op_rid, op_die, op_ch, op_read,
-             op_erase, op_dur) = schedule.admission_lists
+            if not (fm is None and batched):
+                (adm_t, op_rid, op_die, op_ch, op_read,
+                 op_erase, op_dur) = schedule.admission_lists
             n_requests = schedule.n_requests
+            # Only the closed-loop frontend and the fault planner read
+            # the per-op lpn list; batched runs are neither.
             op_lpn = (schedule.lpn.tolist()
-                      if schedule.lpn is not None else None)
-            if fm is None:
+                      if schedule.lpn is not None and not batched
+                      else None)
+            if fm is None and batched:
+                # Batched runs read whole columns; hand them the
+                # schedule's numpy views and the per-cell sample arrays
+                # directly — same values, no list round-trip.
+                (adm_a, rid_a, die_a, ch_a, read_a,
+                 erase_a, dur_a) = schedule.admission_arrays
+                bufs = make_buffers(adm_a, rid_a, die_a, ch_a, read_a,
+                                    erase_a, dur_a, attempts_np, tr_np)
+            elif fm is None:
                 bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
                                     op_erase, op_dur, attempts_np.tolist(),
                                     tr_np.tolist())
@@ -666,15 +707,27 @@ class SSDSim:
             total_read_pages = int(read_mask.sum())
             total_attempts = int(attempts_np[read_mask].sum())
             tr_np = (self._tr_base * self.tr_scale)[ex.ptype]
-            adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
             n_requests = ex.n_requests
-            op_lpn = ex.page_id.tolist()
-            if fm is None:
+            # Only the closed-loop frontend and the fault planner read
+            # the per-op lpn list; batched runs are neither.
+            op_lpn = None if batched else ex.page_id.tolist()
+            if fm is None and batched:
+                # Batched runs read whole columns; hand them the
+                # expansion's numpy views and the per-cell sample arrays
+                # directly — same values, no list round-trip.
+                adm_a, rid_a, die_a, ch_a, read_a = ex.admission_arrays
+                bufs = make_buffers(adm_a, rid_a, die_a, ch_a, read_a,
+                                    np.zeros(P, bool),
+                                    np.full(P, tprog, np.float64),
+                                    attempts_np, tr_np)
+            elif fm is None:
+                adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
                 bufs = make_buffers(adm_t, op_rid, op_die, op_ch, op_read,
                                     [False] * P,    # no erases without FTL
                                     [tprog] * P,    # write-like ops: tPROG
                                     attempts_np.tolist(), tr_np.tolist())
             else:
+                adm_t, op_rid, op_die, op_ch, op_read = ex.admission_lists
                 from repro.flashsim.faults import plan_faults
 
                 plan = plan_faults(
@@ -689,8 +742,55 @@ class SSDSim:
                 bufs.xa, bufs.xtr = plan.xa, plan.xtr
                 op_lpn = plan.lpn
 
-        closed_kw = {}
-        if closed:
+        return _PreparedRun(
+            trace=trace, validate=validate, pipelined=pipelined,
+            sched_policy=sched_policy, closed=closed, batched=batched,
+            engine_selected=engine_selected, engine_reason=engine_reason,
+            schedule=schedule, online=online, fm=fm, bufs=bufs,
+            n_requests=n_requests, op_lpn=op_lpn,
+            total_read_pages=total_read_pages,
+            total_attempts=total_attempts,
+        )
+
+    def run(
+        self,
+        trace: RequestTrace,
+        expansion: Optional[TraceExpansion] = None,
+        schedule=None,
+        validate: bool = False,
+        shard: bool = False,
+        trace_phases: bool = False,
+    ) -> SimStats:
+        """Simulate one trace.
+
+        ``expansion`` (in-place and online-GC runs) or ``schedule`` (an
+        :class:`repro.flashsim.ftl.FTLSchedule`, prepass-GC runs) may be
+        shared across the mechanisms of a sweep.  When ``cfg.gc.enabled``
+        and no schedule is supplied, the configured GC mode decides:
+        ``prepass`` builds the FTL schedule here; ``online`` attaches a
+        :class:`repro.flashsim.gc_online.OnlineGC` driver to the event
+        core.  ``shard=True`` runs the event core as one loop per channel
+        with a deterministic merge — bit-identical to the monolithic
+        default (see :mod:`repro.flashsim.engine`).  ``validate=True``
+        turns on the engine's work-conservation checks (test
+        instrumentation).
+
+        With ``cfg.ncq_depth`` set the run goes through the closed-loop
+        frontend (:func:`repro.flashsim.engine.run_closed_loop`): NCQ-
+        gated admission, optional write-back cache, explicit channel DMA
+        phase.  Closed-loop supports prepass GC and faults but not the
+        preempt scheduler or online GC; ``shard=`` is ignored (the NCQ
+        couples channels through the shared slot pool — the monolithic
+        closed loop is the defined semantics for any ``shard``/
+        ``workers`` setting).  ``trace_phases=True`` (closed loop only)
+        records per-op sense/transfer/program intervals into
+        ``self.last_phases`` for the interval-invariant property tests.
+        """
+        cfg = self.cfg
+        prep = self._prepare(trace, expansion=expansion,
+                             schedule=schedule, validate=validate)
+        bufs, n_requests = prep.bufs, prep.n_requests
+        if prep.closed:
             from repro.flashsim.engine import run_closed_loop
 
             cache = None
@@ -699,27 +799,44 @@ class SSDSim:
 
                 cache = WriteCache(cfg.host_cache)
             res = run_closed_loop(
-                cfg, pipelined, sched_policy, bufs, n_requests,
+                cfg, prep.pipelined, prep.sched_policy, bufs, n_requests,
                 trace.arrival_us.tolist(), trace.is_read.tolist(),
-                cfg.ncq_depth, op_lpn=op_lpn, cache=cache,
+                cfg.ncq_depth, op_lpn=prep.op_lpn, cache=cache,
                 validate=validate, trace_phases=trace_phases,
             )
+        elif prep.batched:
+            from repro.flashsim.engine_batched import run_event_core_batched
+
+            res = run_event_core_batched(cfg, prep.pipelined,
+                                         prep.sched_policy, bufs,
+                                         n_requests, online=prep.online,
+                                         validate=validate)
+        else:
+            res = run_event_core(cfg, prep.pipelined, prep.sched_policy,
+                                 bufs, n_requests, online=prep.online,
+                                 validate=validate, shard=shard)
+        return self._finalize(prep, res)
+
+    def _finalize(self, prep: "_PreparedRun", res) -> SimStats:
+        """Assemble :class:`SimStats` from one engine result — the back
+        half of :meth:`run` (pure code motion from it; any change here
+        is a bit-parity change for every engine and fusion decision)."""
+        cfg = self.cfg
+        trace = prep.trace
+        schedule, online, fm = prep.schedule, prep.online, prep.fm
+        closed = prep.closed
+        n_requests = prep.n_requests
+        engine_selected = prep.engine_selected
+        engine_reason = prep.engine_reason
+        total_attempts = prep.total_attempts
+        total_read_pages = prep.total_read_pages
+        closed_kw = {}
+        if closed:
             gc_suspensions = 0
             total_attempts = res.attempts_issued
             total_read_pages = res.read_pages_issued
             self.last_phases = res.phases
-        elif batched:
-            from repro.flashsim.engine_batched import run_event_core_batched
-
-            res = run_event_core_batched(cfg, pipelined, sched_policy,
-                                         bufs, n_requests, online=online,
-                                         validate=validate)
-            gc_suspensions = res.gc_suspensions
-            self.last_phases = None
         else:
-            res = run_event_core(cfg, pipelined, sched_policy, bufs,
-                                 n_requests, online=online,
-                                 validate=validate, shard=shard)
             gc_suspensions = res.gc_suspensions
             self.last_phases = None
             if online is not None:
@@ -800,11 +917,15 @@ class SSDSim:
                 unrecoverable=oc.unrecoverable,
                 recovery_p99_us=rec_p99,
             )
+        # One percentile call shares the partition pass across the three
+        # quantiles; per-q interpolation is unchanged, so the values are
+        # bit-identical to three separate calls.
+        p50, p95, p99 = _pctl(response, (50.0, 95.0, 99.0))
         return SimStats(
             mean_us=float(response.mean()),
-            p50_us=float(np.percentile(response, 50)),
-            p95_us=float(np.percentile(response, 95)),
-            p99_us=float(np.percentile(response, 99)),
+            p50_us=float(p50),
+            p95_us=float(p95),
+            p99_us=float(p99),
             read_mean_us=float(read_resp.mean()) if read_resp.size else 0.0,
             n_requests=n_requests,
             mean_read_attempts=(
@@ -813,15 +934,66 @@ class SSDSim:
             die_util=sum(res.die_tot) / (span * cfg.n_dies),
             channel_util=sum(res.ch_tot) / (span * cfg.n_channels),
             read_p99_us=(
-                float(np.percentile(read_resp, 99)) if read_resp.size else 0.0
+                float(_pctl(read_resp, (99.0,))[0]) if read_resp.size
+                else 0.0
             ),
             fast_path_events=getattr(res, "fast_path_events", 0),
             engine_selected=engine_selected,
             engine_fallback_reason=engine_reason,
+            fused_cells=getattr(res, "fused_cells", 0),
             **gc_kw,
             **fault_kw,
             **closed_kw,
         )
+
+
+@dataclasses.dataclass
+class _PreparedRun:
+    """Inputs of one engine dispatch, held between :meth:`SSDSim._prepare`
+    and :meth:`SSDSim._finalize` so the fused sweep driver can batch many
+    cells into one kernel launch."""
+
+    trace: RequestTrace
+    validate: bool
+    pipelined: bool
+    sched_policy: object
+    closed: bool
+    batched: bool
+    engine_selected: str
+    engine_reason: str
+    schedule: object
+    online: object
+    fm: object
+    bufs: object
+    n_requests: int
+    op_lpn: object
+    total_read_pages: int
+    total_attempts: int
+
+
+def _run_prepared_fused(items):
+    """Run many prepared batched-eligible cells in fused kernel dispatches.
+
+    ``items``: sequence of ``(sim, prep)`` pairs (from
+    :meth:`SSDSim._prepare`, every cell resolved to the batched engine).
+    Dispatches them through
+    :func:`repro.flashsim.engine_batched.run_event_cores_fused` — cells
+    grouped by static kernel parameters, each group one kernel launch —
+    and finalizes each cell on its own sim.  Bit-identical to calling
+    ``sim.run(...)`` per cell (the cell-axis law); raises
+    :class:`~repro.flashsim.engine_batched.BatchedUnsupported` before
+    any dispatch if a cell is ineligible (callers pre-filter, so this is
+    a fail-fast guard, never a silent fallback).  Returns one
+    :class:`SimStats` per item, in order.
+    """
+    from repro.flashsim.engine_batched import (FusedRun,
+                                               run_event_cores_fused)
+
+    runs = [FusedRun(sim.cfg, prep.pipelined, prep.sched_policy,
+                     prep.bufs, prep.n_requests) for sim, prep in items]
+    res_list = run_event_cores_fused(runs)
+    return [sim._finalize(prep, res)
+            for (sim, prep), res in zip(items, res_list)]
 
 
 # -- run API ---------------------------------------------------------------
@@ -877,6 +1049,26 @@ def _shared_views(trace, cfg):
     from repro.flashsim.ftl import build_ftl_schedule
 
     return expansion, build_ftl_schedule(trace, cfg, expansion=expansion)
+
+
+def _fuse_resolved(cfg, engine: str, fuse: Optional[bool]) -> bool:
+    """Whether a sweep over ``cfg`` takes the fused batched path.
+
+    True iff fusion is enabled (the ``fuse=`` knob, defaulting to
+    ``cfg.fuse``) *and* the config resolves inside the batched matrix
+    for the requested engine.  ``engine="batched"`` with an ineligible
+    config returns False so the sequential loop raises the exact
+    :class:`BatchedUnsupported` the non-fused path would — fusion never
+    changes error behavior, and ``engine="auto"`` fallbacks record
+    their reason per cell as before.
+    """
+    if engine not in ("batched", "auto"):
+        return False
+    if not (cfg.fuse if fuse is None else fuse):
+        return False
+    from repro.flashsim.engine_batched import resolve_engine
+
+    return resolve_engine(cfg)[0] == "batched"
 
 
 def _make_sim(cfg, condition, mechanism, seed, engine):
@@ -996,6 +1188,7 @@ def compare_mechanisms(
     faults: Optional[FaultConfig] = None,
     ncq_depth: Optional[int] = None,
     host_cache=None,
+    fuse: Optional[bool] = None,
 ) -> Dict[str, SimStats]:
     """All mechanisms over ONE shared trace (resolved once, expanded once).
 
@@ -1015,7 +1208,12 @@ def compare_mechanisms(
     ``batched`` engines — ``engine="reference"`` runs its mechanisms
     sequentially as before).
     ``ncq_depth=`` / ``host_cache=`` select the closed-loop frontend for
-    every mechanism (see :func:`simulate`).
+    every mechanism (see :func:`simulate`).  ``fuse=`` controls the
+    fused sweep path (default ``cfg.fuse``): when the config resolves
+    inside the batched matrix, the mechanisms' op tables are stacked
+    along the kernel's lane axis and dispatched together (one launch
+    per static-shape group) — results bit-identical to the sequential
+    batched runs either way.
     """
     if engine is None:
         engine = cfg.engine
@@ -1025,7 +1223,7 @@ def compare_mechanisms(
 
         return run_compare(workload, condition, mechanisms, seed, cfg,
                            n_requests, None, None, shard, workers,
-                           engine=engine)
+                           engine=engine, fuse=fuse)
     trace = resolve_trace(workload, seed=seed, n_requests=n_requests)
     if engine == "reference":
         return {
@@ -1034,6 +1232,13 @@ def compare_mechanisms(
             for m in mechanisms
         }
     expansion, schedule = _shared_views(trace, cfg)
+    if _fuse_resolved(cfg, engine, fuse) and len(tuple(mechanisms)) > 1:
+        items = []
+        for m in mechanisms:
+            sim = _make_sim(cfg, condition, m, seed + 7, engine)
+            items.append((sim, sim._prepare(trace, expansion=expansion,
+                                            schedule=schedule)))
+        return dict(zip(mechanisms, _run_prepared_fused(items)))
     out = {}
     for m in mechanisms:
         sim = _make_sim(cfg, condition, m, seed + 7, engine)
@@ -1060,6 +1265,7 @@ def simulate_batch(
     journal=None,
     ncq_depth: Optional[int] = None,
     host_cache=None,
+    fuse: Optional[bool] = None,
 ) -> Dict[Tuple[str, OperatingCondition, int], SimStats]:
     """Sweep (mechanism x condition x seed) cells for one workload.
 
@@ -1082,7 +1288,12 @@ def simulate_batch(
     as they finish and a re-run resumes from them byte-identically
     (:func:`repro.flashsim.runtime.run_cells`).
     ``ncq_depth=`` / ``host_cache=`` select the closed-loop frontend for
-    every cell (see :func:`simulate`).
+    every cell (see :func:`simulate`).  ``fuse=`` controls the fused
+    sweep path (default ``cfg.fuse``): when the config resolves inside
+    the batched matrix, each seed's (condition × mechanism) cells are
+    stacked along the kernel's lane axis and dispatched together (one
+    launch per static-shape group) — cell values bit-identical to the
+    sequential batched runs for any fusion decision.
     Returns ``{(mechanism, condition, seed): SimStats}``.
     """
     if engine is None:
@@ -1100,8 +1311,31 @@ def simulate_batch(
         # workers=1 inside each worker, reference engine included.
         return run_sweep(workload, conditions, mechanisms, seeds, cfg,
                          n_requests, engine, None, None, shard, workers,
-                         journal=journal)
+                         journal=journal, fuse=fuse)
     conditions = tuple(conditions)
+    seeds = tuple(seeds)
+    fused = (_fuse_resolved(cfg, engine, fuse)
+             and len(conditions) * len(mechanisms) * len(seeds) > 1)
+    if fused:
+        # Cross-seed fusion: every (seed, condition, mechanism) cell of
+        # the grid is prepared (each seed's trace resolved and expanded
+        # once, shared by its cells) and dispatched through ONE fused
+        # engine call — the engine chunks the whole grid by static
+        # kernel shape and step homogeneity, so same-condition cells of
+        # different seeds share a dispatch.  Output order (seed-major)
+        # is unchanged.
+        keys, items = [], []
+        for s in seeds:
+            trace = resolve_trace(workload, seed=s,
+                                  n_requests=n_requests)
+            expansion, schedule = _shared_views(trace, cfg)
+            for cond in conditions:
+                for m in mechanisms:
+                    sim = _make_sim(cfg, cond, m, s + 7, engine)
+                    keys.append((m, cond, s))
+                    items.append((sim, sim._prepare(
+                        trace, expansion=expansion, schedule=schedule)))
+        return dict(zip(keys, _run_prepared_fused(items)))
     out: Dict[Tuple[str, OperatingCondition, int], SimStats] = {}
     for s in seeds:
         trace = resolve_trace(workload, seed=s, n_requests=n_requests)

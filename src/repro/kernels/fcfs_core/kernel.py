@@ -119,22 +119,25 @@ _BIGSEQ = 1e18
 
 def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
                  lane_ref, *, n_lanes, n_dies, maxp, capq, capw,
-                 capsteps, pipelined, prio):
+                 capsteps, pipelined, prio, wide):
     L, D = n_lanes, n_dies
     lanes = jnp.arange(L)
     inf = jnp.inf
     ops = ops_ref[...]
     steps = steps_ref[0]
-    # tDMA/tECC enter as traced scalars, NOT Python literals: XLA's
-    # algebraic simplifier folds add(add(x, c1), c2) -> add(x, c1+c2)
-    # for literal constants, which reassociates the sense chain
-    # (max(chb, t) + tdma) + tecc and breaks bit-identity with the
-    # interpreter.  Parameters are opaque to that rewrite.
-    tdma = timing_ref[0]
-    tecc = timing_ref[1]
+    # tDMA/tECC enter as traced *per-lane vectors*, NOT Python
+    # literals: XLA's algebraic simplifier folds
+    # add(add(x, c1), c2) -> add(x, c1+c2) for literal constants,
+    # which reassociates the sense chain (max(chb, t) + tdma) + tecc
+    # and breaks bit-identity with the interpreter.  Parameters are
+    # opaque to that rewrite.  A lane vector (one row per lane) lets
+    # the fused sweep carry per-cell timing while the broadcast of a
+    # single run stays elementwise-identical to the scalar form.
+    tdma = timing_ref[:, 0]
+    tecc = timing_ref[:, 1]
     # Aging bound for the prio lowering (traced, +inf = plain
     # host_prio); unread when prio=False.
-    bound = timing_ref[2]
+    bound = timing_ref[:, 2]
 
     def body(t, carry):
         (state, fifo, acq, log, chb, ch_tot, seqc, n_ev,
@@ -206,10 +209,14 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
         aq_slot = jnp.where(is_w, aq_tail % capw, capw)
         aq_new = jnp.stack([c_done, seqc, ai.astype(jnp.float64),
                             adm_row[:, _DIE]], axis=1)
-        for l in range(L):
-            acq = jax.lax.dynamic_update_slice(
-                acq, aq_new[l][None, None, :],
-                (jnp.int32(l), aq_slot[l], jnp.int32(0)))
+        if wide:
+            acq = acq.at[lanes, aq_slot].set(
+                aq_new, unique_indices=True, indices_are_sorted=True)
+        else:
+            for l in range(L):
+                acq = jax.lax.dynamic_update_slice(
+                    acq, aq_new[l][None, None, :],
+                    (jnp.int32(l), aq_slot[l], jnp.int32(0)))
         aq_tail = aq_tail + is_w.astype(jnp.int32)
 
         # -- sense / copy handler --
@@ -251,10 +258,14 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
                 capq + row[:, _QTAIL2].astype(jnp.int32) % capq)
         else:
             push_slot = row[:, _QTAIL].astype(jnp.int32) % capq
-        for l in range(L):
-            fifo = jax.lax.dynamic_update_slice(
-                fifo, push_val[l].reshape(1, 1, 1),
-                (jnp.int32(l), push_die[l], push_slot[l]))
+        if wide:
+            fifo = fifo.at[lanes, push_die, push_slot].set(
+                push_val, unique_indices=True, indices_are_sorted=True)
+        else:
+            for l in range(L):
+                fifo = jax.lax.dynamic_update_slice(
+                    fifo, push_val[l].reshape(1, 1, 1),
+                    (jnp.int32(l), push_die[l], push_slot[l]))
 
         q_nonempty = ~q_empty
         grant2 = ev_rel & q_nonempty
@@ -336,11 +347,20 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
         new_row = jnp.stack(cols, axis=1)
         # Per-lane dynamic_update_slice (static lane, computed die row):
         # measurably cheaper than both XLA:CPU's generic scatter and a
-        # one-hot blend for this shape, and still updated in place.
-        for l in range(L):
-            state = jax.lax.dynamic_update_slice(
-                state, new_row[l][None, None, :],
-                (jnp.int32(l), tgt[l], jnp.int32(0)))
+        # one-hot blend at shard-core lane counts, and still updated in
+        # place.  Under the ``wide`` lowering (fused sweeps stack cells
+        # into dozens of lanes) the unroll would bloat the loop body,
+        # so the same update is emitted as one batched scatter — lane
+        # indices are unique and sorted, so the written values and the
+        # in-place carry update are identical either way.
+        if wide:
+            state = state.at[lanes, tgt].set(
+                new_row, unique_indices=True, indices_are_sorted=True)
+        else:
+            for l in range(L):
+                state = jax.lax.dynamic_update_slice(
+                    state, new_row[l][None, None, :],
+                    (jnp.int32(l), tgt[l], jnp.int32(0)))
 
         # fin events: final sense (reads) or release of a non-read.
         # Logged as one (2L,) row per step — the fin table is never
@@ -396,19 +416,22 @@ def _core_kernel(ops_ref, steps_ref, timing_ref, log_ref, diestat_ref,
 
 
 def fcfs_core_fwd(ops, steps, timing, *, n_dies, capq, capw, capsteps,
-                  pipelined, prio=False, interpret=True):
+                  pipelined, prio=False, wide=False, interpret=True):
     """Run the lockstep shard core.
 
     ``ops``: (L, MAXP, 10) f64 augmented padded op table (admission
     order per lane; see :func:`augment_ops`).  ``steps``: (1,) i32 —
     total lockstep steps (max lane admissions + events; idle lanes
-    no-op).  ``timing``: (3,) f64 — [tdma, tecc, age_bound]; the bound
-    is traced (+inf = plain host_prio) and unread when ``prio`` is
-    False.  ``capq``/``capw`` — static FIFO/ACQ ring capacities
-    (host-computed bounds: max ops on one die / max writes on one
-    lane); ``capsteps`` — static log length, a power of two >= steps.
-    ``prio`` selects the dual-ring scheduler lowering (static: fcfs and
-    prio compile to distinct kernels).
+    no-op).  ``timing``: (L, 3) f64 — per-lane [tdma, tecc, age_bound]
+    rows; a single run broadcasts one row to all lanes, a fused sweep
+    carries each cell's scalars on that cell's lanes.  The bound is
+    traced (+inf = plain host_prio) and unread when ``prio`` is False.
+    ``capq``/``capw`` — static FIFO/ACQ ring capacities (host-computed
+    bounds: max ops on one die / max writes on one lane); ``capsteps``
+    — static log length, a power of two >= steps.  ``prio`` selects
+    the dual-ring scheduler lowering and ``wide`` the batched-scatter
+    carry updates for large fused lane counts (both static: distinct
+    compiled kernels, identical results).
     Returns ``(log, diestat, lane)``: the per-step completion log
     (scatter it into the per-op ``fin`` table host-side), per-die
     [tot, busy], and per-lane [ch_busy, ch_tot, n_events, seqc].
@@ -416,7 +439,8 @@ def fcfs_core_fwd(ops, steps, timing, *, n_dies, capq, capw, capsteps,
     L, maxp, _ = ops.shape
     kernel = functools.partial(
         _core_kernel, n_lanes=L, n_dies=n_dies, maxp=maxp, capq=capq,
-        capw=capw, capsteps=capsteps, pipelined=pipelined, prio=prio)
+        capw=capw, capsteps=capsteps, pipelined=pipelined, prio=prio,
+        wide=wide)
     return pl.pallas_call(
         kernel,
         out_shape=[

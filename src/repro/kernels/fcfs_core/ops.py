@@ -78,29 +78,55 @@ def _enable_persistent_cache() -> None:
 @functools.partial(
     jax.jit,
     static_argnames=("n_dies", "capq", "capw", "capsteps", "pipelined",
-                     "prio", "interpret"))
+                     "prio", "wide", "interpret"))
 def _core_jit(ops, steps, timing, *, n_dies, capq, capw, capsteps,
-              pipelined, prio, interpret):
+              pipelined, prio, wide, interpret):
     return fcfs_core_fwd(ops, steps, timing, n_dies=n_dies, capq=capq,
                          capw=capw, capsteps=capsteps,
-                         pipelined=pipelined, prio=prio,
+                         pipelined=pipelined, prio=prio, wide=wide,
                          interpret=interpret)
 
 
-def pad_ops(lanes_ops) -> np.ndarray:
+#: Number of kernel dispatches issued by this process (both the
+#: per-run and the fused entry points).  Read by tests/CI to assert the
+#: single-dispatch accounting of the fused sweep path.
+KERNEL_DISPATCHES = 0
+
+#: Lane counts above this use the batched-scatter (``wide``) carry
+#: updates.  The unrolled per-lane dynamic_update_slice is measurably
+#: faster everywhere the fused sweep operates (its cell cap keeps
+#: stacked dispatches at or under 64 lanes), so ``wide`` only takes
+#: over beyond that — oversized single-cell topologies where the
+#: unroll would bloat the traced loop body.
+_WIDE_LANES = 64
+
+
+def pad_width(widest: int) -> int:
+    """Padded-table width bucket: next power of two strictly above
+    ``widest`` (floor 16), the :func:`pad_ops` policy."""
+    maxp = 16
+    while maxp <= widest:
+        maxp *= 2
+    return maxp
+
+
+def pad_ops(lanes_ops, maxp: Optional[int] = None) -> np.ndarray:
     """Stack per-lane (P_l, 7) op tables into one padded (L, MAXP, 7).
 
     Pad rows carry ``arrival = inf`` (the admission cursor's stop
     sentinel) and ``hp = 0.0``; the padded width is the next power of
     two strictly above the widest lane (floor 16), so the cursor's
     clipped lookahead always lands on a pad row and nearby cell sizes
-    share one compiled variant.
+    share one compiled variant.  ``maxp`` forces a wider bucket (the
+    fused sweep pads every cell of a group to the group-wide bucket);
+    it must still exceed the widest lane.
     """
     L = len(lanes_ops)
     widest = max((t.shape[0] for t in lanes_ops), default=0)
-    maxp = 16
-    while maxp <= widest:
-        maxp *= 2
+    if maxp is None:
+        maxp = pad_width(widest)
+    elif maxp <= widest:
+        raise ValueError(f"maxp {maxp} <= widest lane {widest}")
     ops = np.full((L, maxp, 7), np.inf, dtype=np.float64)
     ops[:, :, 1] = 3.0          # kind: pad
     ops[:, :, 2] = 0.0          # pad die: keep int casts well-defined
@@ -173,16 +199,64 @@ def ring_caps(ops: np.ndarray, n_dies: int):
     lanes.
     """
     kind = ops[:, :, 1]
-    die = np.where(np.isfinite(ops[:, :, 2]), ops[:, :, 2], -1.0)
+    real = kind != 3.0
     per_die = 0
-    for l in range(ops.shape[0]):
-        real = kind[l] != 3.0
-        if real.any():
-            counts = np.bincount(die[l, real].astype(np.int64),
-                                 minlength=n_dies)
-            per_die = max(per_die, int(counts.max()))
+    if real.any():
+        # One flat bincount over (lane, die) pairs — same counts as a
+        # per-lane loop, without L Python iterations.
+        lane_of = np.broadcast_to(
+            np.arange(ops.shape[0])[:, None], kind.shape)
+        flat = lane_of[real] * n_dies + ops[:, :, 2][real].astype(np.int64)
+        per_die = int(np.bincount(flat).max())
     writes = int((kind == 1.0).sum(axis=1).max(initial=0.0))
     return _pow2_at_least(max(per_die, 4)), _pow2_at_least(max(writes, 4))
+
+
+def _dispatch(ops: np.ndarray, n_dies: int, pipelined: bool,
+              timing: np.ndarray, prio: bool,
+              caps=None, steps=None):
+    """One kernel dispatch on a padded table with per-lane timing rows.
+
+    ``timing`` is (L, 3) f64 — per-lane [tdma, tecc, age_bound].
+    ``caps`` optionally forces static ``(capq, capw, capsteps)`` (the
+    fused sweep buckets them group-wide; capacity is semantics-neutral
+    because the rings pair via monotone counters).  ``steps`` skips the
+    :func:`count_steps` recount when the caller already knows the bound
+    (the fused router counts per cell before stacking; the max over a
+    chunk's cells equals the stacked count).  Returns numpy
+    ``(fin, diestat, lane)``.
+    """
+    global KERNEL_DISPATCHES
+    _enable_persistent_cache()
+    if steps is None:
+        steps = count_steps(ops)
+    if caps is None:
+        capq, capw = ring_caps(ops, n_dies)
+        capsteps = _pow2_at_least(max(steps, 16))
+    else:
+        capq, capw, capsteps = caps
+        if steps > capsteps:
+            raise ValueError(f"steps {steps} > capsteps {capsteps}")
+    L, maxp = ops.shape[0], ops.shape[1]
+    with enable_x64():
+        log, diestat, lane = _core_jit(
+            jnp.asarray(augment_ops(ops, pipelined), jnp.float64),
+            jnp.asarray([steps], jnp.int32),
+            jnp.asarray(timing, jnp.float64),
+            n_dies=n_dies, capq=capq, capw=capw, capsteps=capsteps,
+            pipelined=pipelined, prio=prio, wide=L > _WIDE_LANES,
+            interpret=_use_interpret())
+        log = np.asarray(log)
+    KERNEL_DISPATCHES += 1
+    # Scatter the per-step completion log into the per-op fin table.
+    # Each real op id appears at most once; idle rows carry the sink id
+    # maxp, zeroed afterwards.  Rows past ``steps`` were never written
+    # (all-sink) — skip them.
+    fin = np.zeros((L, maxp + 1), dtype=np.float64)
+    fin[np.arange(L)[None, :], log[:steps, L:].astype(np.int64)] = \
+        log[:steps, :L]
+    fin[:, maxp] = 0.0
+    return (fin, np.asarray(diestat), np.asarray(lane))
 
 
 def fcfs_core(ops: np.ndarray, n_dies: int, pipelined: bool,
@@ -199,27 +273,32 @@ def fcfs_core(ops: np.ndarray, n_dies: int, pipelined: bool,
     [ch_busy, ch_tot, n_events, seq] (L, 4).  Bit-identical to
     :func:`fcfs_core_ref` on CPU.
     """
-    _enable_persistent_cache()
-    steps = count_steps(ops)
-    capq, capw = ring_caps(ops, n_dies)
-    capsteps = _pow2_at_least(max(steps, 16))
-    L, maxp = ops.shape[0], ops.shape[1]
     prio = age_bound is not None
     bound = float(age_bound) if prio else 0.0
-    with enable_x64():
-        log, diestat, lane = _core_jit(
-            jnp.asarray(augment_ops(ops, pipelined), jnp.float64),
-            jnp.asarray([steps], jnp.int32),
-            jnp.asarray([float(tdma), float(tecc), bound], jnp.float64),
-            n_dies=n_dies, capq=capq, capw=capw, capsteps=capsteps,
-            pipelined=pipelined, prio=prio, interpret=_use_interpret())
-        log = np.asarray(log)
-    # Scatter the per-step completion log into the per-op fin table.
-    # Each real op id appears at most once; idle rows carry the sink id
-    # maxp, zeroed afterwards.  Rows past ``steps`` were never written
-    # (all-sink) — skip them.
-    fin = np.zeros((L, maxp + 1), dtype=np.float64)
-    fin[np.arange(L)[None, :], log[:steps, L:].astype(np.int64)] = \
-        log[:steps, :L]
-    fin[:, maxp] = 0.0
-    return (fin, np.asarray(diestat), np.asarray(lane))
+    timing = np.tile(
+        np.asarray([[float(tdma), float(tecc), bound]], np.float64),
+        (ops.shape[0], 1))
+    return _dispatch(ops, n_dies, pipelined, timing, prio)
+
+
+def fused_core(ops: np.ndarray, n_dies: int, pipelined: bool,
+               timing: np.ndarray, prio: bool, caps=None, steps=None):
+    """Run one dispatch over the lanes of many stacked cells.
+
+    ``ops`` is the (C*L, MAXP, 7) cell-stacked padded table (cell c's
+    lanes occupy rows [c*L, (c+1)*L)), ``timing`` the matching (C*L, 3)
+    per-lane [tdma, tecc, age_bound] rows — each cell's scalars
+    repeated on its lanes, which is what lets cells with different
+    timing models or aging bounds share the dispatch.  ``pipelined``
+    and ``prio`` are static and must be uniform across the stacked
+    cells (the fused router groups by them).  Returns the same
+    ``(fin, diestat, lane)`` triple as :func:`fcfs_core`; slice rows
+    [c*L, (c+1)*L) for cell c.  Bit-identical per cell to a separate
+    :func:`fcfs_core` dispatch — the cell-axis law restated (and
+    property-pinned) by :func:`repro.kernels.fcfs_core.ref.fused_core_ref`.
+    """
+    if timing.shape != (ops.shape[0], 3):
+        raise ValueError(
+            f"timing shape {timing.shape} != ({ops.shape[0]}, 3)")
+    return _dispatch(ops, n_dies, pipelined, np.asarray(timing, np.float64),
+                     prio, caps=caps, steps=steps)

@@ -213,3 +213,32 @@ def fcfs_core_ref(ops: np.ndarray, n_dies: int, pipelined: bool,
         lane[l] = (chb, ch_tot, n_ev, seqc)
 
     return fin, diestat, lane
+
+
+def fused_core_ref(cells, n_dies: int, pipelined: bool):
+    """Cell-axis oracle for the fused sweep lowering.
+
+    Restates the *cell-axis law*: lanes never communicate, so running C
+    independent cells stacked along the lane axis in one dispatch must
+    equal running each cell alone with its own timing scalars.  This
+    oracle therefore never sees a stacked table — it runs
+    :func:`fcfs_core_ref` once per cell and concatenates, which is the
+    independent restatement the fused-kernel parity tests pin
+    :func:`repro.kernels.fcfs_core.ops.fused_core` against.
+
+    ``cells``: sequence of ``(ops, tdma, tecc, age_bound)`` tuples, one
+    per cell, every ``ops`` of shape (L, MAXP, 6 or 7) with a common
+    (L, MAXP).  Returns ``(fin, diestat, lane)`` with the cell-stacked
+    shapes of :func:`fused_core` — cell c occupies rows
+    [c*L, (c+1)*L).
+    """
+    fins, diestats, lanes = [], [], []
+    for ops, tdma, tecc, age_bound in cells:
+        fin, diestat, lane = fcfs_core_ref(
+            ops, n_dies, pipelined, tdma, tecc, age_bound=age_bound)
+        fins.append(fin)
+        diestats.append(diestat)
+        lanes.append(lane)
+    return (np.concatenate(fins, axis=0),
+            np.concatenate(diestats, axis=0),
+            np.concatenate(lanes, axis=0))
